@@ -1,0 +1,55 @@
+"""Dequant-matmul micro-benchmarks.
+
+Wall-clock on CPU measures the XLA (fused-dequant) path; Pallas kernels are
+validated in interpret mode (not timed — interpret wall-clock is
+meaningless).  The 'derived' column projects the TPU-v5e roofline time from
+the packed HBM bytes + flops of each (format, shape) — the number the §Perf
+iterations drive down.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize
+from repro.core.formats import FORMATS
+from repro.kernels import ops
+from repro.roofline import hw
+
+SHAPES = [(8, 4096, 4096), (128, 4096, 14336)]
+
+
+def _time(fn, *args, iters=5):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+    print("\n# dequant-matmul microbench (CPU wall = XLA path; derived = "
+          "projected TPU-v5e us from roofline)")
+    print(f"{'fmt':6s} {'m,k,n':>18s} {'cpu_us':>10s} {'tpu_proj_us':>12s}")
+    for fmt in FORMATS:
+        for (m, k, n) in SHAPES:
+            x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)
+                            ).astype(jnp.bfloat16)
+            w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+            qt = quantize(w, fmt)
+            f = jax.jit(lambda x, qt=qt: ops.qmatmul(x, qt, impl="xla"))
+            us = _time(f, x)
+            flops = 2 * m * k * n
+            bytes_hbm = qt.packed_bytes() + x.size * 2 + m * n * 2
+            tpu_us = max(flops / hw.PEAK_FLOPS_BF16,
+                         bytes_hbm / hw.HBM_BW) * 1e6
+            print(f"{fmt:6s} {f'{m},{k},{n}':>18s} {us:10.1f} {tpu_us:12.2f}")
+            rows.append((f"kernel/{fmt}/{m}x{k}x{n}", us, f"{tpu_us:.2f}"))
+    return rows

@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table (+ kernels).
+
+Prints a ``name,us_per_call,derived`` CSV after the human-readable tables.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,kernels]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+SUITES = ("table1", "table2", "superweight", "kernels")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma-separated subset of {SUITES}")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    rows: list[tuple[str, float, str]] = []
+    if "table1" in only:
+        from . import table1_memory
+        rows += table1_memory.run()
+    if "table2" in only:
+        from . import table2_quality
+        rows += table2_quality.run()
+    if "superweight" in only:
+        from . import superweight_ablation
+        rows += superweight_ablation.run()
+    if "kernels" in only:
+        from . import kernel_bench
+        rows += kernel_bench.run()
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

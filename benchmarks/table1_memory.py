@@ -1,0 +1,47 @@
+"""Table 1 & 6 reproduction: size / avg-bits / memory-use per policy on
+DeepSeek-R1(671B), compared against the paper's published numbers."""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.core.policy import get_policy
+from repro.core.size import model_size, serving_memory
+
+PAPER_TABLE1 = {
+    # policy: (size GiB, avg bits, MU total GB, MU per GPU GB)
+    "Q4_K_M": (377, 4.82, 568, 71),
+    "Q3_K_M": (298, 3.81, 487, 61),
+    "DQ3_K_M": (281, 3.59, 469, 59),
+    "Q2_K_L": (228, 2.91, 415, 52),
+    "UD_Q2_K_XL": (212, 2.70, 398, 50),
+}
+
+
+def run() -> list[tuple[str, float, str]]:
+    cfg = get_config("deepseek-v3-671b")
+    rows = []
+    print("\n# Table 1 reproduction (DeepSeek-R1 671B)")
+    print(f"{'policy':12s} {'GiB':>7s} {'paper':>6s} {'bits':>6s} {'paper':>6s}"
+          f" {'MU/dev':>7s} {'paper':>6s}")
+    for pol, (p_gib, p_bits, p_mu, p_mud) in PAPER_TABLE1.items():
+        t0 = time.perf_counter()
+        rep = model_size(cfg, get_policy(pol))
+        mu = serving_memory(cfg, get_policy(pol), context=32768, n_devices=8)
+        ours = serving_memory(cfg, get_policy(pol), context=32768,
+                              n_devices=8, mla_compressed=True)
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{pol:12s} {rep.gib:7.1f} {p_gib:6d} {rep.avg_bits:6.3f} "
+              f"{p_bits:6.2f} {mu['per_device_gb']:7.1f} {p_mud:6d}"
+              f"   (ours, MLA-compressed cache: "
+              f"{ours['per_device_gb']:.1f} GB/dev)")
+        rows.append((f"table1/{pol}/size_gib", us, f"{rep.gib:.2f}"))
+        rows.append((f"table1/{pol}/avg_bits", us, f"{rep.avg_bits:.3f}"))
+        rows.append((f"table1/{pol}/mu_per_dev_gb", us,
+                     f"{mu['per_device_gb']:.2f}"))
+        rows.append((f"table1/{pol}/ours_mla_per_dev_gb", us,
+                     f"{ours['per_device_gb']:.2f}"))
+        err = abs(rep.gib - p_gib)
+        assert err < 2.0, (pol, rep.gib, p_gib)
+    return rows

@@ -1,0 +1,87 @@
+"""Tables 2-5 quality proxy: per-policy degradation on small real models.
+
+The paper measures benchmark accuracy of quantized 671B models against FP8.
+The CPU-feasible proxy (DESIGN.md §1) evaluates, per policy, on reduced
+real-architecture models:
+  * Eq.1 calibration error ||f_fp - f_q|| / ||f_fp||,
+  * logit KL(fp || q),
+  * greedy top-1 agreement,
+and — after briefly training the model on the synthetic task mix — the
+task accuracy drop of each quantization, mirroring the paper's
+"Accuracy drop" row.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import CONFIGS
+from repro.core import get_policy, quantize_params
+from repro.core.calibration import model_quality
+from repro.data.pipeline import SyntheticLM, calibration_batches
+from repro.models.model import Model
+from repro.models.spec import init_params
+from repro.training import make_train_step, optimizer as opt
+
+POLICIES = ("Q8_0", "Q4_K_M", "DQ3_K_M", "Q3_K_M", "Q2_K_L", "UD_Q2_K_XL")
+ARCHS = ("qwen2-1.5b", "deepseek-v3-671b")  # dense + the paper's MLA-MoE
+
+
+def _train(cfg, params, model, steps=60):
+    step = jax.jit(make_train_step(
+        model, opt.AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=steps)),
+        donate_argnums=(0, 1))
+    state = opt.init_state(params)
+    ds = SyntheticLM(cfg.vocab_size, 64, 8, seed=0)
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+        params, state, m = step(params, state, batch)
+    return params
+
+
+def _task_accuracy(model, params, cfg, n=6):
+    """Next-token accuracy on held-out synthetic batches."""
+    ds = SyntheticLM(cfg.vocab_size, 64, 4, seed=99)
+    accs = []
+    for i in range(n):
+        b = ds.batch_at(1000 + i)
+        logits, _ = model.forward(
+            params, {"tokens": jnp.asarray(b["tokens"])})
+        pred = jnp.argmax(logits, -1)
+        accs.append(float(jnp.mean(
+            (pred == jnp.asarray(b["labels"])).astype(jnp.float32))))
+    return float(np.mean(accs))
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for arch in ARCHS:
+        cfg = CONFIGS[arch].reduced()
+        model = Model(cfg, dtype=jnp.float32)
+        params = init_params(cfg, seed=0, dtype=jnp.float32)
+        params = _train(cfg, params, model)
+        batches = calibration_batches(cfg.vocab_size, 48, 2, 2)
+        fp_acc = _task_accuracy(model, params, cfg)
+        print(f"\n# Tables 2-5 proxy — {arch} (reduced, trained), "
+              f"fp task acc {fp_acc:.3f}")
+        print(f"{'policy':12s} {'bits':>6s} {'eq1_err':>8s} {'logitKL':>8s} "
+              f"{'top1':>6s} {'taskacc':>8s} {'drop%':>6s}")
+        for pol in POLICIES:
+            t0 = time.perf_counter()
+            q = model_quality(cfg, params, get_policy(pol), batches, model)
+            qp = quantize_params(cfg, params, get_policy(pol))
+            acc = _task_accuracy(model, qp, cfg)
+            us = (time.perf_counter() - t0) * 1e6
+            drop = 100 * (fp_acc - acc) / max(fp_acc, 1e-9)
+            print(f"{pol:12s} {q.avg_bits:6.2f} {q.eq1_error:8.4f} "
+                  f"{q.logit_kl:8.4f} {q.top1_agree:6.3f} {acc:8.3f} "
+                  f"{drop:6.2f}")
+            rows.append((f"table2/{arch}/{pol}/eq1_err", us,
+                         f"{q.eq1_error:.5f}"))
+            rows.append((f"table2/{arch}/{pol}/task_drop_pct", us,
+                         f"{drop:.3f}"))
+    return rows

@@ -1,0 +1,59 @@
+"""The paper's deployment scenario: DeepSeek-V3/R1 671B on ONE 8-device
+machine, via dry-run (ShapeDtypeStructs — no weights are allocated).
+
+Builds the 8-way TP mesh, lowers the quantized decode step for each policy
+and prints per-device memory — reproducing Table 1/6's conclusion that
+DQ3_K_M fits 8x64GB (Ascend 910B class) while Q4_K_M needs 8x80GB.
+
+  PYTHONPATH=src python examples/deploy_single_machine.py [--policy DQ3_K_M]
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import get_policy  # noqa: E402
+from repro.core.size import serving_memory  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="DQ3_K_M")
+    ap.add_argument("--compile", action="store_true",
+                    help="actually lower+compile the decode step (slow)")
+    args = ap.parse_args()
+
+    cfg = get_config("deepseek-v3-671b")
+    print(f"{cfg.name} on a single 8-device machine, 32k context\n")
+    print(f"{'policy':12s} {'weights':>9s} {'kv':>7s} {'total':>8s} "
+          f"{'per-dev':>8s}  fits")
+    for pol in ("Q4_K_M", "Q3_K_M", "DQ3_K_M", "Q2_K_L", "UD_Q2_K_XL"):
+        mu = serving_memory(cfg, get_policy(pol), batch=1, context=32768,
+                            n_devices=8)
+        fits64 = "910B(64G) + H100(80G)" if mu["per_device_gb"] < 64 else (
+            "H100(80G) only" if mu["per_device_gb"] < 80 else "NEITHER")
+        print(f"{pol:12s} {mu['weights_gb']:8.1f}G {mu['kv_gb']:6.1f}G "
+              f"{mu['total_gb']:7.1f}G {mu['per_device_gb']:7.1f}G  "
+              f"{fits64}")
+    ours = serving_memory(cfg, get_policy("DQ3_K_M"), batch=1, context=32768,
+                          n_devices=8, mla_compressed=True)
+    print(f"\nours (DQ3_K_M + compressed MLA cache): "
+          f"{ours['per_device_gb']:.1f} GB/device — fits 8x40GB class")
+
+    if args.compile:
+        from repro.launch import dryrun
+        print("\nlowering + compiling the quantized decode step on the "
+              "8-device mesh ...")
+        res = dryrun.run_cell("deepseek-v3-671b", "decode_32k",
+                              "single_machine", args.policy)
+        print(res.get("memory"))
+
+
+if __name__ == "__main__":
+    main()

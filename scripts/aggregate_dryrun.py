@@ -1,0 +1,105 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md tables."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "recurrentgemma-2b", "gemma2-9b", "qwen2-1.5b", "qwen2-72b",
+    "phi3-mini-3.8b", "arctic-480b", "llama4-scout-17b-a16e", "xlstm-1.3b",
+    "internvl2-26b", "seamless-m4t-large-v2", "deepseek-v3-671b",
+    "deepseek-r1-distill-qwen-32b",
+]
+
+
+def load():
+    cells = {}
+    for path in glob.glob(os.path.join(DIR, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        cells[r["cell"]] = r
+    return cells
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.1f}"
+
+
+def roofline_table(cells, mesh="single"):
+    lines = [
+        "| arch | shape | mem/dev GiB | compute ms | memory ms | coll ms "
+        "| dominant | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            cell = f"{arch}__{shape}__{mesh}"
+            r = cells.get(cell)
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | "
+                             f"skipped† | — | — |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR | | | | | | |")
+                continue
+            rl = r["roofline"]
+            mem = r["memory"].get("total_gib", 0)
+            lines.append(
+                f"| {arch} | {shape} | {mem:.2f} | {fmt_ms(rl['compute_s'])} "
+                f"| {fmt_ms(rl['memory_s'])} | {fmt_ms(rl['collective_s'])} "
+                f"| {rl['dominant']} | {rl['useful_ratio']:.2f} "
+                f"| {rl['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def multi_pod_table(cells):
+    lines = [
+        "| arch | shape | status | mem/dev GiB | DCI bytes/step | coll ms |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = cells.get(f"{arch}__{shape}__multi")
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | skipped† | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR | | | |")
+                continue
+            rl = r["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | ok | "
+                f"{r['memory'].get('total_gib', 0):.2f} "
+                f"| {rl['coll_bytes_dci']/1e9:.2f} GB "
+                f"| {fmt_ms(rl['collective_s'])} |")
+    return "\n".join(lines)
+
+
+def summary(cells):
+    ok = sum(1 for r in cells.values() if r["status"] == "ok")
+    sk = sum(1 for r in cells.values() if r["status"] == "skipped")
+    err = [r["cell"] for r in cells.values() if r["status"] == "error"]
+    return ok, sk, err
+
+
+if __name__ == "__main__":
+    cells = load()
+    ok, sk, err = summary(cells)
+    print(f"cells: {ok} ok, {sk} skipped, {len(err)} errors")
+    for e in err:
+        print("  ERROR:", e)
+    if "--tables" in sys.argv:
+        print("\n## single-pod roofline\n")
+        print(roofline_table(cells, "single"))
+        print("\n## multi-pod\n")
+        print(multi_pod_table(cells))

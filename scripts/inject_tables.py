@@ -1,0 +1,47 @@
+"""Inject the aggregated dry-run tables into EXPERIMENTS.md."""
+
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+from aggregate_dryrun import load, multi_pod_table, roofline_table, summary
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def main():
+    cells = load()
+    ok, sk, err = summary(cells)
+    single = roofline_table(cells, "single")
+    multi = multi_pod_table(cells)
+    block = f"""### Single-pod (16x16 = 256 chips) — every (arch x shape) cell, DQ3_K_M serving / bf16 training
+
+{single}
+
+† long_500k is run only for the sub-quadratic archs (DESIGN.md §5).
+
+### Multi-pod (2x16x16 = 512 chips) — proves the pod axis shards
+
+{multi}
+
+Cells: {ok} compiled ok, {sk} documented skips, {len(err)} errors.
+Raw JSON (incl. per-op collective bytes and segment costs):
+`experiments/dryrun/`.
+"""
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    marker = "<!-- DRYRUN_TABLES -->"
+    assert marker in text
+    pre = text.split(marker)[0]
+    post = text.split(marker, 1)[1]
+    # idempotent: drop anything previously injected between marker and §Roofline
+    post = post[post.index("## §Roofline"):]
+    with open(path, "w") as f:
+        f.write(pre + marker + "\n\n" + block + "\n" + post)
+    print(f"injected: {ok} ok / {sk} skipped / {len(err)} errors")
+
+
+if __name__ == "__main__":
+    main()

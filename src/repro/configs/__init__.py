@@ -1,0 +1,62 @@
+"""Architecture registry: ``get_config(arch_id)`` for every assigned arch.
+
+Assigned (10): recurrentgemma-2b, gemma2-9b, qwen2-1.5b, qwen2-72b,
+phi3-mini-3.8b, arctic-480b, llama4-scout-17b-a16e, xlstm-1.3b,
+internvl2-26b, seamless-m4t-large-v2.
+Paper's own (2): deepseek-v3-671b, deepseek-r1-distill-qwen-32b.
+"""
+
+from .base import ModelConfig, InputShape, SHAPES, shape_applicable
+
+from . import (
+    recurrentgemma_2b,
+    gemma2_9b,
+    qwen2_1_5b,
+    qwen2_72b,
+    phi3_mini_3_8b,
+    arctic_480b,
+    llama4_scout_17b_a16e,
+    xlstm_1_3b,
+    internvl2_26b,
+    seamless_m4t_large_v2,
+    deepseek_v3_671b,
+    deepseek_r1_distill_qwen_32b,
+)
+
+_MODULES = (
+    recurrentgemma_2b,
+    gemma2_9b,
+    qwen2_1_5b,
+    qwen2_72b,
+    phi3_mini_3_8b,
+    arctic_480b,
+    llama4_scout_17b_a16e,
+    xlstm_1_3b,
+    internvl2_26b,
+    seamless_m4t_large_v2,
+    deepseek_v3_671b,
+    deepseek_r1_distill_qwen_32b,
+)
+
+CONFIGS: dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+ASSIGNED_ARCHS = (
+    "recurrentgemma-2b", "gemma2-9b", "qwen2-1.5b", "qwen2-72b",
+    "phi3-mini-3.8b", "arctic-480b", "llama4-scout-17b-a16e", "xlstm-1.3b",
+    "internvl2-26b", "seamless-m4t-large-v2",
+)
+PAPER_ARCHS = ("deepseek-v3-671b", "deepseek-r1-distill-qwen-32b")
+ALL_ARCHS = ASSIGNED_ARCHS + PAPER_ARCHS
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(CONFIGS)}") from None
+
+
+__all__ = [
+    "ModelConfig", "InputShape", "SHAPES", "shape_applicable",
+    "CONFIGS", "ASSIGNED_ARCHS", "PAPER_ARCHS", "ALL_ARCHS", "get_config",
+]

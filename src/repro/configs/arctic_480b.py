@@ -1,0 +1,25 @@
+"""arctic-480b — dense-MoE hybrid: 128 experts top-2 + parallel dense residual.
+
+[hf Snowflake/snowflake-arctic-base]  35L d_model=7168 56H (GQA kv=8)
+d_ff=4864 per expert, vocab=32000.  Every layer: attention + dense FFN
+residual in parallel with the routed MoE.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,                    # dense residual branch
+    vocab_size=32000,
+    n_experts=128,
+    top_k=2,
+    d_expert=4864,
+    dense_residual=True,
+    rope_theta=1e6,
+)

@@ -1,0 +1,177 @@
+"""ModelConfig: one dataclass describing every supported architecture.
+
+The config is deliberately rich enough to express all ten assigned
+architectures plus the paper's own two (DeepSeek-V3-671B with MLA + MoE and
+the distilled Qwen-32B): GQA/MHA/MLA attention, sliding-window + softcap
+variants, MoE with shared experts / dense residual / leading dense layers,
+RG-LRU and xLSTM recurrent blocks, encoder-decoder stacks, and stubbed
+modality frontends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | vlm | audio | mla_moe
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    vocab_size: int
+    d_ff: int = 0
+    head_dim: Optional[int] = None   # default: d_model // n_heads
+
+    # --- block pattern ------------------------------------------------------
+    # Tiled across layers.  Kinds: "attn", "local_attn", "rglru", "mlstm",
+    # "slstm".  ("attn",) means every layer is global attention.
+    block_pattern: tuple[str, ...] = ("attn",)
+    window: int = 0                  # sliding-window size for local_attn
+    logit_softcap: float = 0.0
+    attn_softcap: float = 0.0
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    embed_scale: bool = False        # gemma-style sqrt(d_model) embed scaling
+
+    # --- MoE ------------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    d_expert: int = 0
+    n_shared_experts: int = 0
+    d_shared_expert: int = 0
+    first_dense_layers: int = 0      # leading layers with dense FFN (deepseek)
+    dense_residual: bool = False     # arctic: parallel dense FFN beside MoE
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.001
+
+    # --- MLA (deepseek) -------------------------------------------------------
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- recurrent ------------------------------------------------------------
+    lru_width: int = 0               # RG-LRU state width (recurrentgemma)
+    conv_width: int = 4              # temporal conv for recurrent blocks
+    mlstm_proj_factor: float = 2.0   # xLSTM up-projection
+    slstm_proj_factor: float = 1.334
+
+    # --- encoder-decoder --------------------------------------------------------
+    encoder_layers: int = 0          # >0 -> enc-dec model (seamless)
+
+    # --- modality frontend (stubbed; see DESIGN.md) -----------------------------
+    frontend: Optional[str] = None   # "vit" | "audio"
+    frontend_tokens: int = 0         # patches / frames per sample
+    frontend_dim: int = 0            # stub embedding dim (pre-projection)
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # --- derived ---------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to 256 so embedding/output shard cleanly."""
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when decode state is O(1)/bounded -> eligible for long_500k."""
+        kinds = set(self.block_pattern)
+        return bool(kinds & {"rglru", "mlstm", "slstm"}) and "attn" not in kinds
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs have a decode path (see DESIGN.md §5)
+
+    def block_kind(self, layer: int) -> str:
+        return self.block_pattern[layer % len(self.block_pattern)]
+
+    def moe_layer(self, layer: int) -> bool:
+        return self.is_moe and layer >= self.first_dense_layers
+
+    @property
+    def moe_layers(self) -> int:
+        return max(0, self.n_layers - self.first_dense_layers) if self.is_moe else 0
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        n_pat = len(self.block_pattern)
+        n_layers = max(2, n_pat)
+        if self.is_moe and self.first_dense_layers:
+            n_layers = max(n_layers, self.first_dense_layers + 2)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=n_layers,
+            d_model=256,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            head_dim=64,
+            d_ff=512 if self.d_ff else 0,
+            vocab_size=512,
+            window=min(self.window, 64) if self.window else 0,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            d_expert=128 if self.d_expert else 0,
+            d_shared_expert=128 if self.d_shared_expert else 0,
+            first_dense_layers=min(self.first_dense_layers, 1),
+            q_lora_rank=64 if self.q_lora_rank else 0,
+            kv_lora_rank=32 if self.kv_lora_rank else 0,
+            qk_nope_head_dim=32 if self.qk_nope_head_dim else 0,
+            qk_rope_head_dim=16 if self.qk_rope_head_dim else 0,
+            v_head_dim=32 if self.v_head_dim else 0,
+            lru_width=256 if self.lru_width else 0,
+            encoder_layers=2 if self.encoder_layers else 0,
+            frontend_tokens=8 if self.frontend_tokens else 0,
+            frontend_dim=64 if self.frontend_dim else 0,
+            capacity_factor=8.0,   # ample: tests need drop-free routing
+        )
+
+
+# ---------------------------------------------------------------------------
+# input shapes (assigned shape set for the LM family)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether a (config, shape) cell runs; reason when skipped."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("long_500k requires sub-quadratic sequence handling; "
+                       f"{cfg.name} is full-attention (DESIGN.md §5)")
+    return True, ""

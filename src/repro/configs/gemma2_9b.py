@@ -1,0 +1,27 @@
+"""gemma2-9b — local+global alternating attention with logit softcaps.
+
+[arXiv:2408.00118; hf google/gemma-2-9b]  42L d_model=3584 16H (GQA kv=8)
+d_ff=14336 vocab=256000, head_dim 256, window 4096, attn softcap 50,
+final logit softcap 30.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    family="dense",
+    n_layers=42,
+    d_model=3584,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,
+    d_ff=14336,
+    vocab_size=256000,
+    block_pattern=("local_attn", "attn"),
+    window=4096,
+    attn_softcap=50.0,
+    logit_softcap=30.0,
+    tie_embeddings=True,
+    embed_scale=True,
+    rope_theta=1e4,
+)

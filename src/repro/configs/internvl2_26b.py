@@ -1,0 +1,25 @@
+"""internvl2-26b — InternViT frontend (stub) + InternLM2-20B backbone.
+
+[arXiv:2404.16821; hf OpenGVLab/InternVL2-26B]  48L d_model=6144 48H
+(GQA kv=8) d_ff=16384 vocab=92553.  The ViT frontend is a stub: the input
+spec provides precomputed patch embeddings (256 patches x 3200) that a
+projector maps into the LM embedding space (DESIGN.md §5).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92553,
+    rope_theta=1e6,
+    frontend="vit",
+    frontend_tokens=256,
+    frontend_dim=3200,
+)

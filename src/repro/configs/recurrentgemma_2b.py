@@ -1,0 +1,26 @@
+"""recurrentgemma-2b — RG-LRU + local attention, 2:1 pattern.
+
+[arXiv:2402.19427; hf google/recurrentgemma-2b]  26L d_model=2560 10H
+(MQA kv=1) d_ff=7680 vocab=256000, window 2048, lru_width 2560.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    block_pattern=("rglru", "rglru", "local_attn"),
+    window=2048,
+    lru_width=2560,
+    conv_width=4,
+    tie_embeddings=True,
+    embed_scale=True,
+    rope_theta=1e4,
+)

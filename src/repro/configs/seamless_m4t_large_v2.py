@@ -1,0 +1,26 @@
+"""seamless-m4t-large-v2 — encoder-decoder multimodal backbone (audio stub).
+
+[arXiv:2308.11596; hf facebook/seamless-m4t-v2-large]  24L encoder + 24L
+decoder, d_model=1024 16H (MHA kv=16) d_ff=8192 vocab=256206.  The speech
+frontend (conformer feature extractor) is a stub: input specs provide
+precomputed frame embeddings (DESIGN.md §5).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,                 # decoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256206,
+    encoder_layers=24,
+    frontend="audio",
+    frontend_tokens=512,         # precomputed speech frames per sample
+    frontend_dim=1024,
+    rope_theta=1e4,
+)

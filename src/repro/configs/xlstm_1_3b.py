@@ -1,0 +1,23 @@
+"""xlstm-1.3b — sLSTM + mLSTM recurrent blocks (no FFN; d_ff=0).
+
+[arXiv:2405.04517; unverified]  48L d_model=2048 4H vocab=50304,
+mLSTM:sLSTM at 7:1, projection factors 2.0 (mLSTM) / 4:3 (sLSTM).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    conv_width=4,
+    mlstm_proj_factor=2.0,
+    slstm_proj_factor=1.334,
+)

@@ -1,0 +1,8 @@
+"""Core: the paper's contribution — K-quant formats, dynamic policies
+(DQ3_K_M), PTQ application, size analytics, calibration."""
+
+from .formats import FORMATS, bits_per_weight
+from .policy import POLICIES, Policy, get_policy
+from .qtensor import QTensor, dequantize, quantize, quantization_error
+from .apply import quantize_params, quantized_param_specs, format_map
+from .size import model_size, serving_memory

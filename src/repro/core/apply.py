@@ -1,0 +1,59 @@
+"""Apply a quantization policy to a model's parameter tree (PTQ step).
+
+``quantize_params`` maps each quantizable weight to a packed QTensor using
+the policy's per-role / per-layer format; float-role weights (norms, biases,
+routers, stubs) pass through in the policy's float format.  This is the
+paper's post-training-quantization pipeline: checkpoint in -> GGUF-style
+packed checkpoint out.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import spec as mspec
+from .formats import FLOAT_BITS
+from .policy import Policy
+from .qtensor import QTensor, quantize, qtensor_specs
+
+_FLOAT_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "f16": jnp.float16,
+                 "f8": jnp.bfloat16}
+
+
+def format_map(cfg: ModelConfig, policy: Policy) -> dict[str, str]:
+    """path -> format name for every weight."""
+    specs = mspec.model_specs(cfg)
+    tables = mspec.role_layer_tables(specs)
+    return {path: mspec.resolve_format(s, policy, tables)
+            for path, s in specs.items()}
+
+
+def quantize_params(cfg: ModelConfig, params: dict[str, jax.Array],
+                    policy: Policy) -> dict[str, Any]:
+    fmap = format_map(cfg, policy)
+    out: dict[str, Any] = {}
+    for path, w in params.items():
+        fmt = fmap[path]
+        if fmt in FLOAT_BITS:
+            out[path] = w.astype(_FLOAT_DTYPES[fmt])
+        else:
+            out[path] = quantize(w, fmt)
+    return out
+
+
+def quantized_param_specs(cfg: ModelConfig, policy: Policy) -> dict[str, Any]:
+    """ShapeDtypeStruct / QTensor-skeleton tree — dry-run serving input."""
+    specs = mspec.model_specs(cfg)
+    fmap = format_map(cfg, policy)
+    out: dict[str, Any] = {}
+    for path, s in specs.items():
+        fmt = fmap[path]
+        if fmt in FLOAT_BITS:
+            out[path] = jax.ShapeDtypeStruct(s.shape, _FLOAT_DTYPES[fmt])
+        else:
+            out[path] = qtensor_specs(s.shape, fmt)
+    return out

@@ -1,0 +1,127 @@
+"""Calibration & quality-proxy measurement for PTQ (paper Eq. 1).
+
+The paper's quality metric is benchmark accuracy of the quantized 671B
+models; on CPU we measure the PTQ objective itself plus stronger proxies:
+
+  * per-module weight error (RMSE / SQNR) under each format,
+  * end-to-end calibration error  E_x || f_FP(x) - f_quant(x) ||  on
+    held-out batches (Eq. 1),
+  * logit KL divergence between fp and quantized models,
+  * top-1 agreement (greedy-decode match rate),
+  * super-weight detection (Yu et al. 2024): outlier weights concentrated
+    in down-projections, the motivation for DQ3_K_M's q6_k rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import spec as mspec
+from ..models.model import Model
+from .apply import quantize_params
+from .policy import Policy
+from .qtensor import quantization_error
+
+
+# ---------------------------------------------------------------------------
+# weight-space metrics
+# ---------------------------------------------------------------------------
+
+def per_module_error(cfg: ModelConfig, params: dict, policy: Policy) -> dict:
+    """role -> mean relative quantization error under the policy."""
+    from .apply import format_map
+    from .formats import FLOAT_BITS
+    fmap = format_map(cfg, policy)
+    specs = mspec.model_specs(cfg)
+    by_role: dict[str, list[float]] = {}
+    for path, w in params.items():
+        fmt = fmap[path]
+        if fmt in FLOAT_BITS:
+            continue
+        err = quantization_error(w.astype(jnp.float32), fmt)
+        by_role.setdefault(specs[path].role, []).append(
+            float(err["rel_err"]))
+    return {r: float(np.mean(v)) for r, v in by_role.items()}
+
+
+# ---------------------------------------------------------------------------
+# model-space metrics (Eq. 1 and friends)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QualityReport:
+    policy: str
+    eq1_error: float        # E_x || f_FP(x) - f_q(x) ||_2 / || f_FP(x) ||_2
+    logit_kl: float         # mean KL(fp || quant) over positions
+    top1_agree: float       # greedy-token agreement rate
+    avg_bits: float
+
+
+def model_quality(cfg: ModelConfig, params: dict, policy: Policy,
+                  batches: list[dict], model: Model | None = None
+                  ) -> QualityReport:
+    from .size import model_size
+    model = model or Model(cfg)
+    qparams = quantize_params(cfg, params, policy)
+
+    errs, kls, agrees = [], [], []
+    for batch in batches:
+        b = {k: jnp.asarray(v) for k, v in batch.items()
+             if k in ("tokens", "patches", "frames")}
+        fp_logits, _ = model.forward(params, b)
+        q_logits, _ = model.forward(qparams, b)
+        fp = fp_logits.astype(jnp.float32)
+        q = q_logits.astype(jnp.float32)
+        errs.append(float(jnp.linalg.norm(q - fp)
+                          / (jnp.linalg.norm(fp) + 1e-9)))
+        lp = jax.nn.log_softmax(fp, axis=-1)
+        lq = jax.nn.log_softmax(q, axis=-1)
+        kls.append(float(jnp.mean(jnp.sum(jnp.exp(lp) * (lp - lq), axis=-1))))
+        agrees.append(float(jnp.mean(
+            (jnp.argmax(fp, -1) == jnp.argmax(q, -1)).astype(jnp.float32))))
+    rep = model_size(cfg, policy)
+    return QualityReport(policy.name, float(np.mean(errs)),
+                         float(np.mean(kls)), float(np.mean(agrees)),
+                         rep.avg_bits)
+
+
+# ---------------------------------------------------------------------------
+# super weights (Yu et al., 2024)
+# ---------------------------------------------------------------------------
+
+def detect_super_weights(params: dict, threshold_sigma: float = 6.0) -> dict:
+    """path -> count of |w| > threshold_sigma * std outliers (2D weights)."""
+    out = {}
+    for path, w in params.items():
+        if getattr(w, "ndim", 0) < 2:
+            continue
+        wf = np.asarray(w, np.float32)
+        std = wf.std() + 1e-12
+        n = int((np.abs(wf) > threshold_sigma * std).sum())
+        if n:
+            out[path] = n
+    return out
+
+
+def inject_super_weights(params: dict, paths: list[str], *,
+                         magnitude_sigma: float = 40.0,
+                         n_per_tensor: int = 4, seed: int = 0) -> dict:
+    """Plant outlier weights (as observed in real LLM down-projections) to
+    reproduce the paper's §3 sensitivity experiment on synthetic models."""
+    rng = np.random.default_rng(seed)
+    out = dict(params)
+    for path in paths:
+        w = np.asarray(out[path], np.float32).copy()
+        std = w.std()
+        flat = w.reshape(-1)
+        idx = rng.choice(flat.size, n_per_tensor, replace=False)
+        flat[idx] = magnitude_sigma * std * rng.choice([-1.0, 1.0],
+                                                       n_per_tensor)
+        out[path] = jnp.asarray(w).astype(out[path].dtype)
+    return out

@@ -1,0 +1,424 @@
+"""K-quant block formats (llama.cpp family) implemented natively in JAX.
+
+Every format quantizes a weight matrix ``W`` of logical shape ``(K, N)`` in
+*superblocks* along the contraction dimension ``K``:
+
+  * K-quants (q2_k .. q6_k): superblock = 256 elements, split into sub-blocks
+    of 32 (q4_k/q5_k) or 16 (q2_k/q3_k/q6_k), each sub-block carrying a
+    quantized scale (and, for the asymmetric formats, a quantized min).
+  * q8_0: plain blocks of 32 with one fp16 scale each.
+
+TPU adaptation (see DESIGN.md §3): GGUF packs each superblock as a single
+interleaved byte struct; we store a structure-of-arrays so each field is a
+contiguous, aligned array that Pallas can tile into VMEM.  The packed *quants*
+(the dominant term) are bit-exact with GGUF densities; the 6-bit scale fields
+of q3_k/q4_k/q5_k are relaxed to 8-bit arrays (+1.4-3.6 % per format, reported
+separately from the GGUF-exact analytic sizes used for the Table-1
+reproduction).
+
+Field layout convention for a weight of shape ``(K, N)`` (optionally with a
+leading expert/batch dimension): every field has shape ``(..., S, X, N)`` with
+``S = ceil(K / block)`` superblocks; ``X`` is the per-superblock byte/value
+count of that field.  Scalar-per-superblock fields have shape ``(..., S, N)``.
+
+Packing order (element index ``i`` within a 256-superblock):
+
+  * 4-bit (q4_k, q5_k low bits, q6_k low bits): byte ``k`` in ``0..127`` holds
+    element ``k`` in its low nibble and element ``k + 128`` in its high nibble.
+  * 2-bit (q2_k, q3_k low bits, q6_k high bits): byte ``k`` holds elements
+    ``k + 64*p`` in bit-pair ``p`` (p = 0..3).
+  * 1-bit (q3_k high bit, q5_k high bit): byte ``k`` in ``0..31`` holds the
+    high bit of element ``k + 32*b`` in bit ``b``.
+
+These choices make unpacking a shift-mask-concat with *no* interleaving
+gather, which vectorises on both the VPU and in interpret mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QK_K = 256  # superblock size for the K-quant family
+QK8_0 = 32  # block size for q8_0
+
+_F16 = jnp.float16
+_U8 = jnp.uint8
+_I8 = jnp.int8
+
+
+# ---------------------------------------------------------------------------
+# bit packing helpers (element-order preserving, see module docstring)
+# ---------------------------------------------------------------------------
+
+def pack_nibbles(q: jax.Array) -> jax.Array:
+    """(..., 2*H, N) uint8 values in [0,16) -> (..., H, N) packed bytes."""
+    h = q.shape[-2] // 2
+    lo = q[..., :h, :]
+    hi = q[..., h:, :]
+    return (lo | (hi << 4)).astype(_U8)
+
+
+def unpack_nibbles(b: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_nibbles`."""
+    lo = b & 0x0F
+    hi = (b >> 4) & 0x0F
+    return jnp.concatenate([lo, hi], axis=-2)
+
+
+def pack_2bit(q: jax.Array) -> jax.Array:
+    """(..., 4*H, N) uint8 values in [0,4) -> (..., H, N) packed bytes."""
+    h = q.shape[-2] // 4
+    parts = [q[..., p * h:(p + 1) * h, :] << (2 * p) for p in range(4)]
+    out = parts[0]
+    for p in parts[1:]:
+        out = out | p
+    return out.astype(_U8)
+
+
+def unpack_2bit(b: jax.Array) -> jax.Array:
+    return jnp.concatenate([(b >> (2 * p)) & 0x03 for p in range(4)], axis=-2)
+
+
+def pack_1bit(q: jax.Array) -> jax.Array:
+    """(..., 8*H, N) uint8 values in [0,2) -> (..., H, N) packed bytes."""
+    h = q.shape[-2] // 8
+    parts = [q[..., p * h:(p + 1) * h, :] << p for p in range(8)]
+    out = parts[0]
+    for p in parts[1:]:
+        out = out | p
+    return out.astype(_U8)
+
+
+def unpack_1bit(b: jax.Array) -> jax.Array:
+    return jnp.concatenate([(b >> p) & 0x01 for p in range(8)], axis=-2)
+
+
+def _rnd(x: jax.Array) -> jax.Array:
+    """Round-half-away-from-zero, llama.cpp's nearest_int behaviour."""
+    return jnp.trunc(x + jnp.where(x >= 0, 0.5, -0.5))
+
+
+def _safe_inv(x: jax.Array) -> jax.Array:
+    return jnp.where(x != 0, 1.0 / jnp.where(x != 0, x, 1.0), 0.0)
+
+
+def _expand_sub(s: jax.Array, sub: int) -> jax.Array:
+    """(..., S, nsub, N) per-sub-block value -> (..., S, nsub*sub, N)."""
+    return jnp.repeat(s, sub, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# format definitions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockFormat:
+    """One quantization format.
+
+    ``quantize`` maps fp blocks ``(..., S, B, N)`` to a dict of field arrays;
+    ``dequantize`` inverts it (up to quantization error).
+    ``gguf_bits`` is the exact GGUF bits-per-weight (Table-1 accounting);
+    ``tpu_bits`` is our structure-of-arrays layout's bits-per-weight.
+    """
+
+    name: str
+    block: int                       # elements per superblock
+    sub: int                         # elements per sub-block
+    gguf_bits: float
+    tpu_bits: float
+    field_specs: Callable[[int, tuple[int, ...]], dict[str, jax.ShapeDtypeStruct]]
+    quantize: Callable[[jax.Array], dict[str, jax.Array]]
+    dequantize: Callable[[dict[str, jax.Array]], jax.Array]
+
+    @property
+    def nsub(self) -> int:
+        return self.block // self.sub
+
+
+# -- q8_0 -------------------------------------------------------------------
+
+def _q8_0_quantize(w):  # (..., S, 32, N)
+    amax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)
+    d = amax / 127.0
+    q = jnp.clip(_rnd(w * _safe_inv(d)), -127, 127).astype(_I8)
+    return {"qs": q, "d": d.squeeze(-2).astype(_F16)}
+
+
+def _q8_0_dequantize(f):
+    return f["qs"].astype(jnp.float32) * f["d"].astype(jnp.float32)[..., None, :]
+
+
+def _q8_0_specs(s, batch):
+    return {
+        "qs": jax.ShapeDtypeStruct(batch[:-1] + (s, 32, batch[-1]), _I8),
+        "d": jax.ShapeDtypeStruct(batch[:-1] + (s, batch[-1]), _F16),
+    }
+
+
+# -- q4_k: 8 sub-blocks of 32, 4-bit asymmetric ------------------------------
+
+def _minmax_scales(w, sub, qmax, smax):
+    """Asymmetric per-sub-block quantization (q2_k / q4_k / q5_k family).
+
+    Returns (d, dmin, sc, m) with ``x ~= d*sc*q - dmin*m``; sc/m integer codes
+    in [0, smax]; q in [0, qmax].
+    """
+    *lead, S, B, N = w.shape
+    nsub = B // sub
+    wb = w.reshape(*lead, S, nsub, sub, N)
+    wmax = jnp.max(wb, axis=-2)                      # (..., S, nsub, N)
+    wmin = jnp.min(wb, axis=-2)
+    wmin = jnp.minimum(wmin, 0.0)                    # llama.cpp: min <= 0
+    wmax = jnp.maximum(wmax, wmin)                   # degenerate guard
+    scale = (wmax - wmin) / qmax                     # per-sub fp scale
+    mins = -wmin                                     # >= 0
+    d = jnp.max(scale, axis=-2, keepdims=True) / smax          # (..., S, 1, N)
+    dmin = jnp.max(mins, axis=-2, keepdims=True) / smax
+    sc = jnp.clip(_rnd(scale * _safe_inv(d)), 0, smax)
+    m = jnp.clip(_rnd(mins * _safe_inv(dmin)), 0, smax)
+    return d.squeeze(-2), dmin.squeeze(-2), sc, m
+
+
+def _asym_quants(w, sub, d, dmin, sc, m, qmax):
+    *lead, S, B, N = w.shape
+    eff_scale = d[..., None, :] * sc                 # (..., S, nsub, N)
+    eff_min = dmin[..., None, :] * m
+    eff_scale_e = _expand_sub(eff_scale, sub)        # (..., S, B, N)
+    eff_min_e = _expand_sub(eff_min, sub)
+    q = jnp.clip(_rnd((w + eff_min_e) * _safe_inv(eff_scale_e)), 0, qmax)
+    return q.astype(_U8)
+
+
+def _asym_dequant(q, sub, d, dmin, sc, m):
+    eff_scale = _expand_sub(d[..., None, :] * sc, sub)
+    eff_min = _expand_sub(dmin[..., None, :] * m, sub)
+    return q.astype(jnp.float32) * eff_scale - eff_min
+
+
+def _q4_k_quantize(w):  # (..., S, 256, N)
+    d, dmin, sc, m = _minmax_scales(w.astype(jnp.float32), 32, 15, 63)
+    q = _asym_quants(w.astype(jnp.float32), 32, d, dmin, sc, m, 15)
+    return {
+        "qs": pack_nibbles(q),
+        "scales": sc.astype(_U8),
+        "mins": m.astype(_U8),
+        "d": d.astype(_F16),
+        "dmin": dmin.astype(_F16),
+    }
+
+
+def _q4_k_dequantize(f):
+    q = unpack_nibbles(f["qs"])
+    return _asym_dequant(
+        q, 32,
+        f["d"].astype(jnp.float32), f["dmin"].astype(jnp.float32),
+        f["scales"].astype(jnp.float32), f["mins"].astype(jnp.float32))
+
+
+def _q4_k_specs(s, batch):
+    lead, n = batch[:-1], batch[-1]
+    return {
+        "qs": jax.ShapeDtypeStruct(lead + (s, 128, n), _U8),
+        "scales": jax.ShapeDtypeStruct(lead + (s, 8, n), _U8),
+        "mins": jax.ShapeDtypeStruct(lead + (s, 8, n), _U8),
+        "d": jax.ShapeDtypeStruct(lead + (s, n), _F16),
+        "dmin": jax.ShapeDtypeStruct(lead + (s, n), _F16),
+    }
+
+
+# -- q5_k: 8 sub-blocks of 32, 5-bit asymmetric ------------------------------
+
+def _q5_k_quantize(w):
+    d, dmin, sc, m = _minmax_scales(w.astype(jnp.float32), 32, 31, 63)
+    q = _asym_quants(w.astype(jnp.float32), 32, d, dmin, sc, m, 31)
+    return {
+        "qs": pack_nibbles(q & 0x0F),
+        "qh": pack_1bit((q >> 4) & 0x01),
+        "scales": sc.astype(_U8),
+        "mins": m.astype(_U8),
+        "d": d.astype(_F16),
+        "dmin": dmin.astype(_F16),
+    }
+
+
+def _q5_k_dequantize(f):
+    q = unpack_nibbles(f["qs"]) | (unpack_1bit(f["qh"]) << 4)
+    return _asym_dequant(
+        q, 32,
+        f["d"].astype(jnp.float32), f["dmin"].astype(jnp.float32),
+        f["scales"].astype(jnp.float32), f["mins"].astype(jnp.float32))
+
+
+def _q5_k_specs(s, batch):
+    lead, n = batch[:-1], batch[-1]
+    return {
+        "qs": jax.ShapeDtypeStruct(lead + (s, 128, n), _U8),
+        "qh": jax.ShapeDtypeStruct(lead + (s, 32, n), _U8),
+        "scales": jax.ShapeDtypeStruct(lead + (s, 8, n), _U8),
+        "mins": jax.ShapeDtypeStruct(lead + (s, 8, n), _U8),
+        "d": jax.ShapeDtypeStruct(lead + (s, n), _F16),
+        "dmin": jax.ShapeDtypeStruct(lead + (s, n), _F16),
+    }
+
+
+# -- q2_k: 16 sub-blocks of 16, 2-bit asymmetric, 4-bit scale/min ------------
+
+def _q2_k_quantize(w):
+    d, dmin, sc, m = _minmax_scales(w.astype(jnp.float32), 16, 3, 15)
+    q = _asym_quants(w.astype(jnp.float32), 16, d, dmin, sc, m, 3)
+    # GGUF-exact nibble packing of (scale, min) pairs: low nibble scale,
+    # high nibble min -> 16 bytes per superblock.
+    sm = (sc.astype(_U8) | (m.astype(_U8) << 4))
+    return {
+        "qs": pack_2bit(q),
+        "sm": sm,
+        "d": d.astype(_F16),
+        "dmin": dmin.astype(_F16),
+    }
+
+
+def _q2_k_dequantize(f):
+    q = unpack_2bit(f["qs"])
+    sc = (f["sm"] & 0x0F).astype(jnp.float32)
+    m = ((f["sm"] >> 4) & 0x0F).astype(jnp.float32)
+    return _asym_dequant(q, 16, f["d"].astype(jnp.float32),
+                         f["dmin"].astype(jnp.float32), sc, m)
+
+
+def _q2_k_specs(s, batch):
+    lead, n = batch[:-1], batch[-1]
+    return {
+        "qs": jax.ShapeDtypeStruct(lead + (s, 64, n), _U8),
+        "sm": jax.ShapeDtypeStruct(lead + (s, 16, n), _U8),
+        "d": jax.ShapeDtypeStruct(lead + (s, n), _F16),
+        "dmin": jax.ShapeDtypeStruct(lead + (s, n), _F16),
+    }
+
+
+# -- symmetric family (q3_k, q6_k) -------------------------------------------
+
+def _sym_scales(w, sub, qabs, sabs):
+    """Symmetric per-sub-block quantization: ``x ~= d * sc * q``.
+
+    q in [-qabs-1, qabs]; sc signed integer code in [-sabs-1, sabs].
+    """
+    *lead, S, B, N = w.shape
+    nsub = B // sub
+    wb = w.reshape(*lead, S, nsub, sub, N)
+    amax_idx = jnp.argmax(jnp.abs(wb), axis=-2, keepdims=True)
+    wmax = jnp.take_along_axis(wb, amax_idx, axis=-2).squeeze(-2)
+    # llama.cpp make_qx_quants: scale carries the sign of the max-|x| element
+    # so that element maps to -qabs-1 (uses the extra negative code).
+    scale = wmax / (-(qabs + 1))
+    d = jnp.max(jnp.abs(scale), axis=-2, keepdims=True) / sabs
+    sc = jnp.clip(_rnd(scale * _safe_inv(d)), -(sabs + 1), sabs)
+    return d.squeeze(-2), sc
+
+
+def _sym_quants(w, sub, d, sc, qabs):
+    eff = _expand_sub(d[..., None, :] * sc, sub)
+    q = jnp.clip(_rnd(w * _safe_inv(eff)), -(qabs + 1), qabs)
+    return q.astype(jnp.int32)
+
+
+def _sym_dequant(q, sub, d, sc):
+    eff = _expand_sub(d[..., None, :] * sc, sub)
+    return q.astype(jnp.float32) * eff
+
+
+def _q3_k_quantize(w):
+    d, sc = _sym_scales(w.astype(jnp.float32), 16, 3, 31)
+    q = _sym_quants(w.astype(jnp.float32), 16, d, sc, 3) + 4   # [0, 7]
+    return {
+        "qs": pack_2bit((q & 0x03).astype(_U8)),
+        "hmask": pack_1bit(((q >> 2) & 0x01).astype(_U8)),
+        "scales": sc.astype(_I8),
+        "d": d.astype(_F16),
+    }
+
+
+def _q3_k_dequantize(f):
+    q = (unpack_2bit(f["qs"]) | (unpack_1bit(f["hmask"]) << 2)).astype(jnp.int32) - 4
+    return _sym_dequant(q, 16, f["d"].astype(jnp.float32),
+                        f["scales"].astype(jnp.float32))
+
+
+def _q3_k_specs(s, batch):
+    lead, n = batch[:-1], batch[-1]
+    return {
+        "qs": jax.ShapeDtypeStruct(lead + (s, 64, n), _U8),
+        "hmask": jax.ShapeDtypeStruct(lead + (s, 32, n), _U8),
+        "scales": jax.ShapeDtypeStruct(lead + (s, 16, n), _I8),
+        "d": jax.ShapeDtypeStruct(lead + (s, n), _F16),
+    }
+
+
+def _q6_k_quantize(w):
+    d, sc = _sym_scales(w.astype(jnp.float32), 16, 31, 127)
+    q = _sym_quants(w.astype(jnp.float32), 16, d, sc, 31) + 32  # [0, 63]
+    return {
+        "ql": pack_nibbles((q & 0x0F).astype(_U8)),
+        "qh": pack_2bit(((q >> 4) & 0x03).astype(_U8)),
+        "scales": sc.astype(_I8),
+        "d": d.astype(_F16),
+    }
+
+
+def _q6_k_dequantize(f):
+    q = (unpack_nibbles(f["ql"]) | (unpack_2bit(f["qh"]) << 4)).astype(jnp.int32) - 32
+    return _sym_dequant(q, 16, f["d"].astype(jnp.float32),
+                        f["scales"].astype(jnp.float32))
+
+
+def _q6_k_specs(s, batch):
+    lead, n = batch[:-1], batch[-1]
+    return {
+        "ql": jax.ShapeDtypeStruct(lead + (s, 128, n), _U8),
+        "qh": jax.ShapeDtypeStruct(lead + (s, 64, n), _U8),
+        "scales": jax.ShapeDtypeStruct(lead + (s, 16, n), _I8),
+        "d": jax.ShapeDtypeStruct(lead + (s, n), _F16),
+    }
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def _bits(gguf_bytes: int, block: int) -> float:
+    return gguf_bytes * 8.0 / block
+
+
+FORMATS: dict[str, BlockFormat] = {
+    "q8_0": BlockFormat("q8_0", QK8_0, QK8_0, _bits(34, 32), _bits(34, 32),
+                        _q8_0_specs, _q8_0_quantize, _q8_0_dequantize),
+    "q6_k": BlockFormat("q6_k", QK_K, 16, _bits(210, 256), _bits(210, 256),
+                        _q6_k_specs, _q6_k_quantize, _q6_k_dequantize),
+    "q5_k": BlockFormat("q5_k", QK_K, 32, _bits(176, 256), _bits(180, 256),
+                        _q5_k_specs, _q5_k_quantize, _q5_k_dequantize),
+    "q4_k": BlockFormat("q4_k", QK_K, 32, _bits(144, 256), _bits(148, 256),
+                        _q4_k_specs, _q4_k_quantize, _q4_k_dequantize),
+    "q3_k": BlockFormat("q3_k", QK_K, 16, _bits(110, 256), _bits(114, 256),
+                        _q3_k_specs, _q3_k_quantize, _q3_k_dequantize),
+    "q2_k": BlockFormat("q2_k", QK_K, 16, _bits(84, 256), _bits(84, 256),
+                        _q2_k_specs, _q2_k_quantize, _q2_k_dequantize),
+}
+
+# Unquantized formats participate in policies/size accounting.
+FLOAT_BITS = {"f32": 32.0, "bf16": 16.0, "f16": 16.0, "f8": 8.0}
+
+
+def is_quantized(fmt: str) -> bool:
+    return fmt in FORMATS
+
+
+def bits_per_weight(fmt: str, exact: bool = True) -> float:
+    if fmt in FORMATS:
+        f = FORMATS[fmt]
+        return f.gguf_bits if exact else f.tpu_bits
+    return FLOAT_BITS[fmt]

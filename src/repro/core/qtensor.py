@@ -1,0 +1,120 @@
+"""QuantizedTensor: a pytree holding one K-quant-packed weight matrix.
+
+The logical tensor is ``(..., K, N)`` (leading dims are expert/stack axes);
+blocks run along ``K`` (the contraction dim of ``y = x @ W``).  ``K`` is
+zero-padded up to a multiple of the format's superblock internally; padding
+rows contribute exactly zero to matmuls because the padded *activation*
+positions never exist (we slice on dequant) and padded weight rows only meet
+activation index >= K, which callers never supply.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .formats import FORMATS, BlockFormat
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    fields: dict[str, jax.Array]
+    fmt: str                      # static
+    shape: tuple[int, ...]        # static logical shape (..., K, N)
+
+    # -- pytree protocol -----------------------------------------------------
+    def tree_flatten(self):
+        keys = tuple(sorted(self.fields))
+        return tuple(self.fields[k] for k in keys), (keys, self.fmt, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        keys, fmt, shape = aux
+        return cls(dict(zip(keys, children)), fmt, shape)
+
+    # -- info ------------------------------------------------------------------
+    @property
+    def format(self) -> BlockFormat:
+        return FORMATS[self.fmt]
+
+    @property
+    def logical_k(self) -> int:
+        return self.shape[-2]
+
+    @property
+    def logical_n(self) -> int:
+        return self.shape[-1]
+
+    @property
+    def num_superblocks(self) -> int:
+        blk = self.format.block
+        return (self.logical_k + blk - 1) // blk
+
+    def packed_bytes(self) -> int:
+        tot = 0
+        for v in self.fields.values():
+            tot += int(np_prod(v.shape)) * v.dtype.itemsize
+        return tot
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        w = self.format.dequantize(self.fields)          # (..., S, B, N)
+        *lead, s, b, n = w.shape
+        w = w.reshape(*lead, s * b, n)[..., : self.logical_k, :]
+        return w.astype(dtype)
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def _pad_blocks(w: jax.Array, block: int) -> jax.Array:
+    k = w.shape[-2]
+    pad = (-k) % block
+    if pad:
+        cfg = [(0, 0)] * (w.ndim - 2) + [(0, pad), (0, 0)]
+        w = jnp.pad(w, cfg)
+    s = w.shape[-2] // block
+    *lead, _, n = w.shape
+    return w.reshape(*lead, s, block, n)
+
+
+def quantize(w: jax.Array, fmt: str) -> QTensor:
+    """Quantize ``w`` of shape (..., K, N) into packed fields."""
+    f = FORMATS[fmt]
+    blocks = _pad_blocks(w, f.block)
+    fields = f.quantize(blocks)
+    return QTensor(fields, fmt, tuple(int(s) for s in w.shape))
+
+
+def dequantize(qt: QTensor, dtype=jnp.float32) -> jax.Array:
+    return qt.dequantize(dtype)
+
+
+def qtensor_specs(shape: tuple[int, ...], fmt: str) -> QTensor:
+    """ShapeDtypeStruct skeleton of a QTensor — for dry-run lowering."""
+    f = FORMATS[fmt]
+    *lead, k, n = shape
+    s = (k + f.block - 1) // f.block
+    specs = f.field_specs(s, tuple(lead) + (n,))
+    return QTensor(dict(specs), fmt, tuple(int(x) for x in shape))
+
+
+def quantization_error(w: jax.Array, fmt: str) -> dict[str, jax.Array]:
+    """RMSE / relative error / SQNR of quantizing ``w`` with ``fmt``."""
+    qt = quantize(w, fmt)
+    wd = qt.dequantize(jnp.float32)
+    err = wd - w.astype(jnp.float32)
+    mse = jnp.mean(err * err)
+    power = jnp.mean(jnp.square(w.astype(jnp.float32)))
+    return {
+        "rmse": jnp.sqrt(mse),
+        "rel_err": jnp.sqrt(mse) / jnp.sqrt(power + 1e-30),
+        "sqnr_db": 10.0 * jnp.log10(power / (mse + 1e-30) + 1e-30),
+    }

@@ -1,0 +1,155 @@
+"""Analytic model-size / average-bit-width calculator (Table 1 & 6 repro).
+
+Computes, for (architecture x policy), the exact quantized byte count per
+module role, the overall average bits-per-weight ("Avg Quants" in Table 1),
+and serving memory-use estimates (weights + KV cache + auxiliary) without
+allocating anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+from ..configs.base import ModelConfig
+from ..models import spec as mspec
+from .formats import FORMATS, FLOAT_BITS, bits_per_weight
+from .policy import Policy
+
+GIB = 1024 ** 3
+
+
+@dataclasses.dataclass
+class SizeReport:
+    arch: str
+    policy: str
+    total_params: int
+    gguf_bytes: int          # GGUF-exact accounting (paper's Table 1 basis)
+    tpu_bytes: int           # our structure-of-arrays layout
+    by_role: dict            # role -> (params, gguf_bytes)
+    by_format: dict          # fmt -> params
+
+    @property
+    def avg_bits(self) -> float:
+        return self.gguf_bytes * 8.0 / self.total_params
+
+    @property
+    def avg_bits_tpu(self) -> float:
+        return self.tpu_bytes * 8.0 / self.total_params
+
+    @property
+    def gib(self) -> float:
+        return self.gguf_bytes / GIB
+
+    @property
+    def tpu_gib(self) -> float:
+        return self.tpu_bytes / GIB
+
+
+def _weight_bytes(s: mspec.WeightSpec, fmt: str, exact: bool) -> int:
+    """Bytes for one weight under one format.
+
+    Quantized formats count whole superblocks along the K (axis -2) dim,
+    matching both GGUF storage and our packed layout (K padded up to the
+    block size).  Float formats count params x width.
+    """
+    if fmt in FLOAT_BITS:
+        return int(s.num_params * FLOAT_BITS[fmt] // 8)
+    f = FORMATS[fmt]
+    *lead, k, n = s.shape
+    nblocks = -(-k // f.block)
+    lead_n = 1
+    for x in lead:
+        lead_n *= x
+    bits = f.gguf_bits if exact else f.tpu_bits
+    return int(round(lead_n * nblocks * n * f.block * bits / 8))
+
+
+def model_size(cfg: ModelConfig, policy: Policy) -> SizeReport:
+    specs = mspec.model_specs(cfg)
+    tables = mspec.role_layer_tables(specs)
+    by_role: dict[str, list[int]] = defaultdict(lambda: [0, 0])
+    by_format: dict[str, int] = defaultdict(int)
+    gguf = tpu = total = 0
+    for s in specs.values():
+        fmt = mspec.resolve_format(s, policy, tables)
+        gb = _weight_bytes(s, fmt, exact=True)
+        tb = _weight_bytes(s, fmt, exact=False)
+        gguf += gb
+        tpu += tb
+        total += s.num_params
+        by_role[s.role][0] += s.num_params
+        by_role[s.role][1] += gb
+        by_format[fmt] += s.num_params
+    return SizeReport(cfg.name, policy.name, total, gguf, tpu,
+                      dict(by_role), dict(by_format))
+
+
+def kv_cache_bytes(cfg: ModelConfig, batch: int, seq: int,
+                   dtype_bytes: int = 2, mla_compressed: bool = True) -> int:
+    """Decode-cache bytes for the whole model (all layers, one replica).
+
+    ``mla_compressed=False`` reproduces llama.cpp's accounting for DeepSeek
+    (it materialises full per-head K/V — 40,960 values/token — which is
+    what the paper's Table-1 "MU @32k" numbers contain); our TPU serving
+    path uses the compressed MLA latent cache (~9x smaller), reported as a
+    beyond-paper improvement in EXPERIMENTS.md.
+    """
+    def attn_per_tok() -> int:
+        if cfg.mla and mla_compressed:
+            return cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        if cfg.mla:
+            # llama.cpp stores per-head K (nope+rope) and V
+            return cfg.n_heads * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+                                  + cfg.v_head_dim)
+        return 2 * cfg.n_kv_heads * cfg.head_dim
+
+    total = 0
+    for layer in range(cfg.n_layers):
+        kind = cfg.block_kind(layer)
+        if kind == "attn":
+            total += batch * seq * attn_per_tok() * dtype_bytes
+        elif kind == "local_attn":
+            total += batch * min(seq, cfg.window or seq) * attn_per_tok() \
+                * dtype_bytes
+        elif kind == "rglru":
+            total += batch * cfg.lru_width * 4  # f32 recurrent state
+        elif kind == "mlstm":
+            inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+            hd = inner // cfg.n_heads
+            total += batch * cfg.n_heads * hd * hd * 4  # matrix memory C
+        elif kind == "slstm":
+            total += batch * 4 * cfg.d_model * 4  # c,n,h,m states
+    if cfg.is_encdec:
+        # encoder output retained for cross-attention
+        total += batch * cfg.frontend_tokens * cfg.d_model * dtype_bytes
+    return total
+
+
+def serving_memory(cfg: ModelConfig, policy: Policy, *, batch: int = 1,
+                   context: int = 32768, n_devices: int = 8,
+                   aux_gb: float = 4.0, mla_compressed: bool = False) -> dict:
+    """Paper-style MU accounting (Table 1/6): weights + KV + auxiliary.
+
+    Calibrated against the paper: MU(total) in decimal GB = weights +
+    uncompressed KV @32k + ~4 GB runtime workspace reproduces all five
+    Table-1 columns within a few GB (e.g. Q4_K_M: 404.8 + 163.8 + 4 =
+    572.6 -> 71.6 GB/GPU vs the paper's 71).  ``mla_compressed=True``
+    switches to our TPU serving cache (the beyond-paper variant).
+    """
+    GB = 1e9
+    rep = model_size(cfg, policy)
+    kv = kv_cache_bytes(cfg, batch, context, mla_compressed=mla_compressed)
+    total = rep.gguf_bytes + kv + aux_gb * GB
+    return {
+        "weights_gib": rep.gib,
+        "weights_gb": rep.gguf_bytes / GB,
+        "kv_gb": kv / GB,
+        "aux_gb": aux_gb,
+        "total_gb": total / GB,
+        "per_device_gb": total / GB / n_devices,
+        # GiB aliases used by feasibility checks
+        "total_gib": total / GIB,
+        "per_device_gib": total / GIB / n_devices,
+        "avg_bits": rep.avg_bits,
+    }

@@ -1,0 +1,125 @@
+"""Deterministic synthetic data pipeline (sharded, resumable, prefetching).
+
+Serves three purposes:
+  * training batches for the end-to-end examples (a mixture of structured
+    synthetic tasks so small models show real learning curves),
+  * calibration batches for PTQ error measurement (Eq. 1 of the paper),
+  * an explicit, checkpointable pipeline state (host shard + step) so
+    fault-tolerant resume restores the exact stream position.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import queue as queue_mod
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PipelineState:
+    seed: int
+    step: int
+    host_id: int
+    num_hosts: int
+
+
+class SyntheticLM:
+    """Structured synthetic language-model stream.
+
+    Sequences mix: (a) copy tasks (`a b c | a b c`), (b) modular-arithmetic
+    chains, (c) Zipfian bag-of-tokens with local bigram structure — enough
+    signal that cross-entropy drops well below uniform within a few hundred
+    steps on a ~10M-param model.
+    """
+
+    def __init__(self, vocab_size: int, seq_len: int, batch: int, *,
+                 seed: int = 0, host_id: int = 0, num_hosts: int = 1):
+        assert vocab_size >= 16
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.batch = batch
+        self.state = PipelineState(seed, 0, host_id, num_hosts)
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            (self.state.seed, self.state.host_id, step))
+
+    def _sequence(self, rng: np.random.Generator) -> np.ndarray:
+        kind = rng.integers(0, 3)
+        v = self.vocab
+        t = self.seq + 1
+        if kind == 0:  # copy task
+            half = t // 2
+            pat = rng.integers(4, v, half)
+            seq = np.concatenate([pat, [2], pat])[:t]
+        elif kind == 1:  # modular arithmetic chain x_{i+1} = (a*x_i + b) % m
+            m = min(v - 4, 97)
+            a, b = int(rng.integers(2, m)), int(rng.integers(1, m))
+            x = int(rng.integers(0, m))
+            seq = np.empty(t, np.int64)
+            for i in range(t):
+                seq[i] = 4 + x
+                x = (a * x + b) % m
+        else:  # zipf with bigram locality
+            base = rng.zipf(1.5, t).clip(max=v - 5) + 4
+            seq = base.copy()
+            seq[1::2] = np.minimum(seq[::2][: len(seq[1::2])] + 1, v - 1)
+        if len(seq) < t:
+            seq = np.pad(seq, (0, t - len(seq)), constant_values=3)
+        return seq.astype(np.int32)
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        rng = self._rng(step)
+        seqs = np.stack([self._sequence(rng) for _ in range(self.batch)])
+        return {"tokens": seqs[:, :-1], "labels": seqs[:, 1:]}
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        while True:
+            out = self.batch_at(self.state.step)
+            self.state.step += 1
+            yield out
+
+    # -- checkpointable state -------------------------------------------------
+    def state_dict(self) -> dict:
+        return dataclasses.asdict(self.state)
+
+    def load_state(self, d: dict) -> None:
+        self.state = PipelineState(**d)
+
+
+class Prefetcher:
+    """Background-thread prefetch (depth-N) around any batch iterator."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self.it = it
+        self.q: queue_mod.Queue = queue_mod.Queue(maxsize=depth)
+        self._done = False
+        self.thread = threading.Thread(target=self._work, daemon=True)
+        self.thread.start()
+
+    def _work(self):
+        try:
+            for item in self.it:
+                self.q.put(item)
+        finally:
+            self._done = True
+            self.q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+
+def calibration_batches(vocab: int, seq: int, batch: int, n: int,
+                        seed: int = 1234):
+    """Fixed calibration set for the PTQ objective (Eq. 1)."""
+    ds = SyntheticLM(vocab, seq, batch, seed=seed)
+    return [ds.batch_at(i) for i in range(n)]

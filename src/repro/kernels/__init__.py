@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the quantized-serving hot path.
+
+Importing this package registers every fused dequant-matmul with
+``ops.PALLAS_MATMULS``.  ``ops.qmatmul`` is the jit'd dispatch wrapper;
+``ref.qmatmul_ref`` the pure-jnp oracle.
+"""
+
+from . import ops, ref
+from . import q2_k, q3_k, q4_k, q5_k, q6_k, q8_0  # noqa: F401 (registration)
+
+qmatmul = ops.qmatmul
+qmatmul_ref = ref.qmatmul_ref

@@ -1,0 +1,27 @@
+"""Fused q2_k dequant-matmul (2-bit asymmetric, 16 sub-blocks of 16).
+
+Scale/min codes are GGUF-exact packed nibbles (low=scale, high=min).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ops
+from .common import build_qmatmul, expand_2bit, expand_sub, flatten_k, i32
+
+FIELDS = {"qs": (64,), "sm": (16,), "d": (), "dmin": ()}
+
+
+def dequant_tile(t):
+    q = expand_2bit(t["qs"]).astype(jnp.float32)         # (g, 256, bn)
+    sm = i32(t["sm"])
+    sc = (sm & 0x0F).astype(jnp.float32)
+    mn = ((sm >> 4) & 0x0F).astype(jnp.float32)
+    d = t["d"].astype(jnp.float32)[:, None, :]
+    dm = t["dmin"].astype(jnp.float32)[:, None, :]
+    return flatten_k(q * expand_sub(sc * d, 16) - expand_sub(mn * dm, 16))
+
+
+qmatmul_q2_k = build_qmatmul("q2_k", FIELDS, dequant_tile)
+ops.PALLAS_MATMULS["q2_k"] = qmatmul_q2_k

@@ -1,0 +1,28 @@
+"""Fused q3_k dequant-matmul (3-bit symmetric, 16 sub-blocks of 16).
+
+q = (2 low bits | high bit << 2) - 4; per-sub-block signed scale codes.
+This is DQ3_K_M's workhorse format (75.9 % of ffn_down_exps plus all
+gate/up expert weights).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ops
+from .common import (build_qmatmul, expand_1bit, expand_2bit, expand_sub,
+                     flatten_k)
+
+FIELDS = {"qs": (64,), "hmask": (32,), "scales": (16,), "d": ()}
+
+
+def dequant_tile(t):
+    q = ((expand_2bit(t["qs"]) | (expand_1bit(t["hmask"]) << 2)) - 4
+         ).astype(jnp.float32)
+    sc = t["scales"].astype(jnp.float32)                 # (g, 16, bn) signed
+    d = t["d"].astype(jnp.float32)[:, None, :]
+    return flatten_k(q * expand_sub(sc * d, 16))
+
+
+qmatmul_q3_k = build_qmatmul("q3_k", FIELDS, dequant_tile)
+ops.PALLAS_MATMULS["q3_k"] = qmatmul_q3_k

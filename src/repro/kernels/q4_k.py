@@ -1,0 +1,31 @@
+"""Fused q4_k dequant-matmul (4-bit asymmetric, 8 sub-blocks of 32).
+
+x ~= d*sc*q - dmin*m with q in [0,16), sc/m 6-bit codes (stored u8).
+Packed tile per superblock-column: 128 B quants + 8+8 B scale/min codes
++ 4 B fp16 super-scales = ~148 B for 256 weights (4.625 bpw streamed).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ops
+from .common import (build_qmatmul, expand_nibbles, expand_sub, flatten_k,
+                     i32)
+
+FIELDS = {"qs": (128,), "scales": (8,), "mins": (8,), "d": (), "dmin": ()}
+
+
+def dequant_tile(t):
+    q = expand_nibbles(t["qs"]).astype(jnp.float32)      # (g, 256, bn)
+    sc = t["scales"].astype(jnp.float32)                 # (g, 8, bn)
+    mn = t["mins"].astype(jnp.float32)
+    d = t["d"].astype(jnp.float32)[:, None, :]           # (g, 1, bn)
+    dm = t["dmin"].astype(jnp.float32)[:, None, :]
+    eff_s = expand_sub(sc * d, 32)                       # (g, 256, bn)
+    eff_m = expand_sub(mn * dm, 32)
+    return flatten_k(q * eff_s - eff_m)                  # (g*256, bn)
+
+
+qmatmul_q4_k = build_qmatmul("q4_k", FIELDS, dequant_tile)
+ops.PALLAS_MATMULS["q4_k"] = qmatmul_q4_k

@@ -1,0 +1,26 @@
+"""Fused q5_k dequant-matmul (5-bit asymmetric, 8 sub-blocks of 32)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ops
+from .common import (build_qmatmul, expand_1bit, expand_nibbles, expand_sub,
+                     flatten_k)
+
+FIELDS = {"qs": (128,), "qh": (32,), "scales": (8,), "mins": (8,),
+          "d": (), "dmin": ()}
+
+
+def dequant_tile(t):
+    q = (expand_nibbles(t["qs"])
+         | (expand_1bit(t["qh"]) << 4)).astype(jnp.float32)
+    sc = t["scales"].astype(jnp.float32)
+    mn = t["mins"].astype(jnp.float32)
+    d = t["d"].astype(jnp.float32)[:, None, :]
+    dm = t["dmin"].astype(jnp.float32)[:, None, :]
+    return flatten_k(q * expand_sub(sc * d, 32) - expand_sub(mn * dm, 32))
+
+
+qmatmul_q5_k = build_qmatmul("q5_k", FIELDS, dequant_tile)
+ops.PALLAS_MATMULS["q5_k"] = qmatmul_q5_k

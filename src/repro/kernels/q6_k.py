@@ -1,0 +1,28 @@
+"""Fused q6_k dequant-matmul (6-bit symmetric, 16 sub-blocks of 16).
+
+q = (4 low bits | 2 high bits << 4) - 32; int8 sub-block scales.  Used by
+DQ3_K_M for the super-weight-critical modules (attn_kv_*, ffn_down_shexp,
+first ffn_down_exps layers, output head).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ops
+from .common import (build_qmatmul, expand_2bit, expand_nibbles, expand_sub,
+                     flatten_k)
+
+FIELDS = {"ql": (128,), "qh": (64,), "scales": (16,), "d": ()}
+
+
+def dequant_tile(t):
+    q = ((expand_nibbles(t["ql"]) | (expand_2bit(t["qh"]) << 4)) - 32
+         ).astype(jnp.float32)
+    sc = t["scales"].astype(jnp.float32)
+    d = t["d"].astype(jnp.float32)[:, None, :]
+    return flatten_k(q * expand_sub(sc * d, 16))
+
+
+qmatmul_q6_k = build_qmatmul("q6_k", FIELDS, dequant_tile)
+ops.PALLAS_MATMULS["q6_k"] = qmatmul_q6_k

@@ -1,0 +1,24 @@
+"""Fused q8_0 dequant-matmul (8-bit symmetric, blocks of 32).
+
+Eight 32-element blocks are processed per grid step so the contraction tile
+stays MXU-aligned (bk = 256).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ops
+from .common import build_qmatmul, flatten_k
+
+FIELDS = {"qs": (32,), "d": ()}
+
+
+def dequant_tile(t):
+    q = t["qs"].astype(jnp.float32)                      # (g, 32, bn)
+    d = t["d"].astype(jnp.float32)[:, None, :]
+    return flatten_k(q * d)                              # (g*32, bn)
+
+
+qmatmul_q8_0 = build_qmatmul("q8_0", FIELDS, dequant_tile, target_bk=256)
+ops.PALLAS_MATMULS["q8_0"] = qmatmul_q8_0

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for every fused dequant-matmul kernel.
+
+The reference dequantisation is :mod:`repro.core.formats` (itself pure jnp,
+exercised independently by the round-trip property tests); the oracle is
+simply dequantize-then-matmul in f32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.qtensor import QTensor
+
+
+def qmatmul_ref(x, qt: QTensor):
+    w = qt.dequantize(jnp.float32)
+    y = jnp.dot(x.astype(jnp.float32), w)
+    return y.astype(x.dtype)

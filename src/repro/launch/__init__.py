@@ -1,0 +1,2 @@
+# NOTE: do not import dryrun here -- it sets XLA_FLAGS at import time.
+from . import mesh

@@ -1,0 +1,331 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the device-count flag before any jax import (jax locks the device
+count on first init), hence the first two lines.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod, or
+     the paper's 8-device single-machine mesh),
+  2. lowers the right step with ShapeDtypeStruct inputs (no allocation):
+       train_4k    -> train_step (bf16 params, AdamW, microbatched, remat)
+       prefill_32k -> Model.prefill (DQ3_K_M-quantized weights)
+       decode_*    -> Model.decode_step (quantized weights + decode cache)
+  3. compiles, prints memory_analysis / cost_analysis,
+  4. derives the three roofline terms (repro.roofline) and writes JSON to
+     experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh multi
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ALL_ARCHS, ASSIGNED_ARCHS, SHAPES, get_config, shape_applicable
+from ..core import apply as qapply
+from ..core.policy import get_policy
+from ..models import spec as mspec
+from ..models import stacking
+from ..models.model import Model, input_specs
+from ..parallel import sharding as shard
+from ..roofline import analysis as roofline
+from ..roofline import segmented
+from ..training import optimizer as opt
+from ..training.train_loop import make_train_step
+from .mesh import make_production_mesh, make_single_machine_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _micro_count(global_batch: int, mesh, bp) -> int:
+    """Largest microbatch count that keeps per-device batch >= 1."""
+    import numpy as np
+    data = 1 if bp is None else int(
+        np.prod([mesh.shape[a]
+                 for a in (bp if isinstance(bp, tuple) else (bp,))]))
+    return max(1, min(16, global_batch // max(data, 1)))
+
+
+def _mesh(kind: str):
+    if kind == "multi":
+        return make_production_mesh(multi_pod=True), 256
+    if kind == "single":
+        return make_production_mesh(multi_pod=False), None
+    if kind == "single_machine":
+        return make_single_machine_mesh(8), None
+    raise ValueError(kind)
+
+
+def lower_cell(arch: str, shape_name: str, mesh_kind: str,
+               policy_name: str = "DQ3_K_M", n_micro: int = 1,
+               cache_len: int | None = None, act_mode: str = "batch",
+               weight_mode: str = "tp", moe_local: bool = False):
+    """Returns (lowered, meta, mesh, segctx) for one cell.
+
+    ``segctx`` carries what the segment-corrected roofline needs (XLA counts
+    scan bodies once — see roofline/segmented.py).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh, pod_size = _mesh(mesh_kind)
+    n_dev = mesh.size
+
+    policy = get_policy(policy_name)
+    active = mspec.count_active_params(cfg)
+    mflops = roofline.model_flops_estimate(cfg, shape, active)
+    meta = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "n_devices": n_dev, "policy": policy_name,
+        "params_b": mspec.count_params(cfg) / 1e9,
+        "active_params_b": active / 1e9,
+        "model_flops": mflops, "pod_size": pod_size,
+    }
+
+    batch_specs = input_specs(cfg, shape)
+    in_batch_shard = shard.input_shardings(batch_specs, cfg, mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    bp = shard.batch_partition(mesh, shape.global_batch)
+    # act_mode="seq": sequence-parallel residual stream (Korthikanti et al.)
+    # — the layer-boundary activations shard T on the model axis, turning
+    # TP all-reduces into all-gather + reduce-scatter (PERF item A1).
+    seq_ok = shape.seq_len % mesh.shape.get("model", 1) == 0
+    act_shard = NamedSharding(
+        mesh, P(bp, "model" if act_mode == "seq" and seq_ok else None, None))
+    # PERF C1: shard-local MoE dispatch at the data-axis degree
+    from ..models import moe as moe_mod
+    if moe_local and bp is not None:
+        import numpy as _np
+        moe_mod.set_data_shards(int(_np.prod(
+            [mesh.shape[a] for a in (bp if isinstance(bp, tuple) else (bp,))])))
+    else:
+        moe_mod.set_data_shards(0)
+
+    if shape.kind == "train":
+        sp = stacking.plan(cfg, None)
+        model = Model(cfg, scan=True, plan=sp, remat=True,
+                      act_shard=act_shard)
+        flat_specs = mspec.param_shape_specs(cfg)
+        pspecs = stacking.stack_tree(flat_specs, sp)
+        pshard = shard.tree_shardings(pspecs, cfg, mesh,
+                                      rules=shard.TRAIN_RULES, plan=sp)
+        ostate = opt.state_specs(pspecs)
+        oshard = {"m": dict(pshard), "v": dict(pshard),
+                  "count": shard.replicated(mesh)}
+        nm = max(n_micro, 1)
+        while shape.global_batch % nm:
+            nm //= 2
+        step = make_train_step(model, opt.AdamWConfig(), n_micro=nm)
+        with mesh:
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, in_batch_shard),
+                out_shardings=(pshard, oshard, shard.replicated(mesh)),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(pspecs, ostate, batch_specs)
+
+        # memory-honest variant: microbatched to the per-device batch floor
+        def lower_micro():
+            step2 = make_train_step(
+                model, opt.AdamWConfig(),
+                n_micro=_micro_count(shape.global_batch, mesh, bp))
+            with mesh:
+                j2 = jax.jit(step2,
+                             in_shardings=(pshard, oshard, in_batch_shard),
+                             out_shardings=(pshard, oshard,
+                                            shard.replicated(mesh)),
+                             donate_argnums=(0, 1))
+                return j2.lower(pspecs, ostate, batch_specs)
+
+        segctx = {
+            "lower_micro": lower_micro,
+            "cfg": cfg, "mesh": mesh, "plan": sp, "kind": "train",
+            "param_specs": flat_specs,
+            "param_shards": shard.tree_shardings(
+                flat_specs, cfg, mesh, rules=shard.TRAIN_RULES),
+            "batch": shape.global_batch, "seq": shape.seq_len,
+            "pod_size": pod_size, "act_shard": act_shard,
+        }
+        return lowered, meta, mesh, segctx
+
+    # serving paths: quantized params under the policy
+    sp = stacking.plan(cfg, policy)
+    model = Model(cfg, scan=True, plan=sp, act_shard=act_shard)
+    flat_q = qapply.quantized_param_specs(cfg, policy)
+    qspecs = stacking.stack_tree(flat_q, sp)
+    srules = {"tp": shard.SERVE_RULES, "fsdp": shard.SERVE_FSDP_RULES,
+              "etp": shard.SERVE_ETP_RULES}[weight_mode]
+    qshard = shard.tree_shardings(qspecs, cfg, mesh, rules=srules, plan=sp)
+    flat_qshard = shard.tree_shardings(flat_q, cfg, mesh, rules=srules)
+    segctx = {
+        "cfg": cfg, "mesh": mesh, "plan": sp,
+        "param_specs": flat_q, "param_shards": flat_qshard,
+        "batch": shape.global_batch, "seq": shape.seq_len,
+        "pod_size": pod_size, "act_shard": act_shard,
+    }
+
+    if shape.kind == "prefill":
+        max_len = shape.seq_len + 64
+
+        def prefill(params, batch):
+            return model.prefill(params, batch, max_len)
+
+        with mesh:
+            jitted = jax.jit(prefill, in_shardings=(qshard, in_batch_shard))
+            lowered = jitted.lower(qspecs, batch_specs)
+        segctx["kind"] = "prefill"
+        return lowered, meta, mesh, segctx
+
+    # decode: one token against a cache of seq_len
+    clen = cache_len or shape.seq_len
+    cspecs = model.cache_specs(shape.global_batch, clen)
+    cshard = shard.cache_shardings(cspecs, cfg, mesh)
+    flat_cache = Model(cfg, scan=False).cache_specs(shape.global_batch, clen)
+
+    def decode(params, cache, batch):
+        return model.decode_step(params, cache, batch["tokens"], batch["pos"])
+
+    with mesh:
+        jitted = jax.jit(
+            decode,
+            in_shardings=(qshard, cshard, in_batch_shard),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(qspecs, cspecs, batch_specs)
+    segctx.update({
+        "kind": "decode",
+        "cache_specs": flat_cache,
+        "cache_shards": shard.cache_shardings(flat_cache, cfg, mesh),
+    })
+    return lowered, meta, mesh, segctx
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             policy_name: str = "DQ3_K_M", verbose: bool = True,
+             out_dir: str | None = None, act_mode: str = "batch",
+             weight_mode: str = "tp", moe_local: bool = False,
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    cell = f"{arch}__{shape_name}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    if not ok:
+        result = {"cell": cell, "status": "skipped", "reason": reason}
+        _write(result, out_dir)
+        if verbose:
+            print(f"[skip] {cell}: {reason}")
+        return result
+
+    t0 = time.time()
+    try:
+        lowered, meta, mesh, segctx = lower_cell(arch, shape_name, mesh_kind,
+                                                 policy_name,
+                                                 act_mode=act_mode,
+                                                 weight_mode=weight_mode,
+                                                 moe_local=moe_local)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = roofline.memory_per_device(compiled)
+        if "lower_micro" in segctx:
+            # training: report memory from the microbatched variant (the
+            # deployable config); costs from the n_micro=1 compile above.
+            mem_micro = roofline.memory_per_device(
+                segctx["lower_micro"]().compile())
+            mem = {"unmicrobatched": mem, **mem_micro}
+        segs = segmented.group_body_costs(
+            segctx["cfg"], segctx["mesh"], segctx["plan"],
+            segctx["param_specs"], segctx["param_shards"],
+            kind=segctx["kind"], batch=segctx["batch"], seq=segctx["seq"],
+            cache_specs=segctx.get("cache_specs"),
+            cache_shards=segctx.get("cache_shards"),
+            pod_size=segctx["pod_size"],
+            act_shard=segctx.get("act_shard"))
+        rl = segmented.corrected_roofline(
+            compiled, segs, meta["model_flops"], mesh.size,
+            meta["pod_size"])
+        result = {
+            "cell": cell, "status": "ok", **meta,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": mem, "roofline": rl.to_dict(),
+            "segments": [
+                {"name": s.name, "multiplier": s.multiplier,
+                 "flops": s.flops, "bytes": s.bytes_hbm,
+                 "coll_ici": s.coll_ici, "coll_dci": s.coll_dci}
+                for s in segs],
+        }
+        if verbose:
+            print(f"[ok] {cell}: mem/dev={mem.get('total_gib', 0):.2f}GiB "
+                  f"compute={rl.compute_s*1e3:.2f}ms mem={rl.memory_s*1e3:.2f}ms "
+                  f"coll={rl.collective_s*1e3:.2f}ms dom={rl.dominant} "
+                  f"useful={rl.useful_ratio:.2f} "
+                  f"roofline_frac={rl.roofline_fraction:.3f} "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+            print(f"     memory_analysis: {compiled.memory_analysis()}")
+    except Exception as e:
+        result = {"cell": cell, "status": "error",
+                  "error": f"{type(e).__name__}: {e}",
+                  "trace": traceback.format_exc()[-2000:]}
+        if verbose:
+            print(f"[ERR] {cell}: {type(e).__name__}: {e}")
+    _write(result, out_dir)
+    return result
+
+
+def _write(result: dict, out_dir: str | None):
+    d = out_dir or OUT_DIR
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, result["cell"] + ".json"), "w") as f:
+        json.dump(result, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "single_machine"])
+    ap.add_argument("--policy", default="DQ3_K_M")
+    ap.add_argument("--act-mode", default="batch", choices=["batch", "seq"],
+                    help="activation layout: batch-sharded or "
+                         "sequence-parallel (PERF A1)")
+    ap.add_argument("--weight-mode", default="tp",
+                    choices=["tp", "fsdp", "etp"],
+                    help="serving weights: TP/EP only; +FSDP embed axis "
+                         "(PERF B2); or +expert-ff axis over data (PERF B3)")
+    ap.add_argument("--moe-local", action="store_true",
+                    help="shard-local MoE dispatch (PERF C1)")
+    ap.add_argument("--tag", default="", help="suffix for the result cell id")
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch x shape) cell")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape_name in SHAPES:
+                run_cell(arch, shape_name, args.mesh, args.policy,
+                         out_dir=args.out, act_mode=args.act_mode,
+                         weight_mode=args.weight_mode,
+                         moe_local=args.moe_local, tag=args.tag)
+        return
+    assert args.arch and args.shape, "--arch/--shape or --all required"
+    run_cell(args.arch, args.shape, args.mesh, args.policy, out_dir=args.out,
+             act_mode=args.act_mode, weight_mode=args.weight_mode,
+             moe_local=args.moe_local, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Serving launcher: quantize a checkpoint and serve batched requests.
+
+The paper's deployment pipeline end-to-end: load (or init) fp weights ->
+apply a quantization policy (DQ3_K_M by default) -> shard onto the mesh ->
+serve batched generation requests.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --policy DQ3_K_M --requests 4 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import checkpoint as ckpt
+from ..configs import get_config
+from ..core import quantize_params, get_policy, model_size
+from ..models import spec as mspec
+from ..models.model import Model
+from ..parallel import sharding as shard
+from ..serving.engine import Engine, Request
+from ..serving.sampler import SamplerConfig
+from .mesh import make_host_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--policy", default="DQ3_K_M")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.6)
+    ap.add_argument("--top-p", type=float, default=0.95)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    policy = get_policy(args.policy)
+    mesh = make_host_mesh()
+
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        tree, _ = ckpt.restore(args.ckpt_dir)
+        params = {k[len("param/"):]: v for k, v in tree.items()
+                  if k.startswith("param/")}
+        print(f"loaded checkpoint from {args.ckpt_dir}")
+    else:
+        params = mspec.init_params(cfg, args.seed)
+
+    rep = model_size(cfg, policy)
+    print(f"quantizing {cfg.name} with {policy.name}: "
+          f"{rep.gib:.2f} GiB @ {rep.avg_bits:.2f} bits/weight "
+          f"(bf16 would be {rep.total_params * 2 / 1024**3:.2f} GiB)")
+    qparams = quantize_params(cfg, params, policy)
+    qshard = shard.tree_shardings(qparams, cfg, mesh)
+    qparams = jax.device_put(qparams, qshard)
+
+    model = Model(cfg)
+    engine = Engine(model, qparams, max_len=args.max_len,
+                    sampler=SamplerConfig(args.temperature, args.top_p))
+
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(rid=i,
+                    prompt=list(rng.integers(4, cfg.vocab_size,
+                                             rng.integers(4, 12))),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    t0 = time.time()
+    done = engine.serve(reqs, slots=min(4, args.requests), seed=args.seed)
+    dt = time.time() - t0
+    total_tokens = sum(len(r.out) for r in done)
+    for r in done:
+        print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}")
+    print(f"{total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens / max(dt, 1e-9):.1f} tok/s)")
+    return done
+
+
+if __name__ == "__main__":
+    main()

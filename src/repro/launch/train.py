@@ -1,0 +1,109 @@
+"""Training launcher: mesh + shardings + fault-tolerant step loop.
+
+CPU-host runs use the local mesh and a reduced config (``--reduced``); on a
+real pod slice the same script drives the full config (the multi-pod compile
+path is exercised by dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import checkpoint as ckpt
+from ..configs import get_config
+from ..data.pipeline import Prefetcher, SyntheticLM
+from ..models import spec as mspec
+from ..models import stacking
+from ..models.model import Model
+from ..parallel import sharding as shard
+from ..training import optimizer as opt
+from ..training.train_loop import make_train_step
+from .mesh import make_host_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    print(f"arch={cfg.name} params={mspec.count_params(cfg)/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}")
+
+    sp = stacking.plan(cfg, None)
+    model = Model(cfg, scan=True, plan=sp, remat=False)
+    params = stacking.stack_tree(mspec.init_params(cfg, args.seed), sp)
+    pshard = shard.tree_shardings(params, cfg, mesh,
+                                  rules=shard.TRAIN_RULES, plan=sp)
+    params = jax.device_put(params, pshard)
+    ostate = opt.init_state(params)
+
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                           total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, ocfg, n_micro=args.n_micro),
+                      donate_argnums=(0, 1))
+
+    start = 0
+    ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+    if args.ckpt_dir:
+        latest = ckpt.latest_step(args.ckpt_dir)
+        if latest is not None:
+            tree, extra = ckpt.restore(args.ckpt_dir, latest)
+            params = jax.device_put(
+                {k[len("param/"):]: v for k, v in tree.items()
+                 if k.startswith("param/")}, pshard)
+            ostate = opt.init_state(params)
+            start = extra.get("next_step", latest)
+            ds.load_state(extra["pipeline"])
+            print(f"resumed from step {start}")
+
+    writer = ckpt.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    it = Prefetcher(iter(ds))
+    t0 = time.time()
+    losses = []
+    for step in range(start, args.steps):
+        batch = next(it)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, ostate, metrics = step_fn(params, ostate, batch)
+        losses.append(float(metrics["loss"]))
+        if (step + 1) % args.log_every == 0:
+            dt = (time.time() - t0) / args.log_every
+            print(f"step {step+1}: loss={np.mean(losses[-args.log_every:]):.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} {dt:.2f}s/step")
+            t0 = time.time()
+        if writer and (step + 1) % args.save_every == 0:
+            tree = {f"param/{k}": v for k, v in params.items()}
+            writer.save(tree, step + 1,
+                        extra={"next_step": step + 1,
+                               "pipeline": ds.state_dict()})
+    if writer:
+        writer.wait()
+    print(f"final loss: {np.mean(losses[-10:]):.4f} "
+          f"(first 10: {np.mean(losses[:10]):.4f})")
+    return np.mean(losses[-10:])
+
+
+if __name__ == "__main__":
+    main()

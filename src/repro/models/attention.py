@@ -1,0 +1,238 @@
+"""Attention blocks: GQA/MHA with RoPE, sliding windows, softcaps.
+
+Prefill/train uses a flash-style *chunked* attention (online softmax over KV
+chunks via ``jax.lax.scan``) so the 32k-token shapes never materialise an
+(L x L) score matrix — this keeps the dry-run memory term honest and is one
+of the beyond-paper optimizations recorded in EXPERIMENTS.md.
+
+Decode attends one query position against a cache.  Local-attention layers
+use a ring-buffer cache of ``window`` entries with absolute-position RoPE
+(keys rotated at write time), so a 500k-token stream costs O(window) memory.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import apply_rope, linear, rms_norm, softcap
+
+NEG_INF = -2.0e38
+
+# PERF B1 (EXPERIMENTS.md §Perf): grouped-query attention without
+# materialising jnp.repeat(kv, rep) — the repeat forces the SPMD partitioner
+# to reshard sequence-sharded caches ("involuntary full rematerialization").
+# The grouped einsum keeps KV in its (kv_heads,) layout end to end.
+GQA_EINSUM = os.environ.get("REPRO_GQA_EINSUM", "0") == "1"
+
+
+def _chunk_attn(q, k, v, mask_fn, attn_cap: float, chunk: int = 1024):
+    """Online-softmax attention.
+
+    q: (B, Tq, H, D); k/v: (B, Tk, Hkv, D); mask_fn(qi, ki) -> bool (Tq_c, Tk_c)
+    given absolute query/key index arrays.  Returns (B, Tq, H, D).
+    """
+    b, tq, h, d = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                      # may differ from d (MLA)
+    rep = h // hkv
+    scale = d ** -0.5
+    chunk = max(16, min(chunk, tk))
+    nk = -(-tk // chunk)
+    pad_k = nk * chunk - tk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kc = k.reshape(b, nk, chunk, hkv, d)
+    vc = v.reshape(b, nk, chunk, hkv, dv)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        ki, kci, vci = inputs                        # index, (B,c,Hkv,D) x2
+        kq = jnp.repeat(kci, rep, axis=2)
+        vq = jnp.repeat(vci, rep, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kq,
+                       preferred_element_type=jnp.float32) * scale
+        if attn_cap:
+            s = softcap(s, attn_cap)
+        qi = jnp.arange(tq)
+        kidx = ki * chunk + jnp.arange(chunk)
+        valid = mask_fn(qi[:, None], kidx[None, :]) & (kidx < tk)[None, :]
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vq.dtype), vq,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, tq), jnp.float32)
+    a0 = jnp.zeros((b, h, tq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.arange(nk), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.einsum("bhqd->bqhd", out)
+
+
+def causal_mask_fn(window: int = 0):
+    def fn(qi, ki):
+        ok = ki <= qi
+        if window:
+            ok = ok & (ki > qi - window)
+        return ok
+    return fn
+
+
+def full_mask_fn(valid_len=None):
+    def fn(qi, ki):
+        ok = jnp.ones(jnp.broadcast_shapes(qi.shape, ki.shape), bool)
+        if valid_len is not None:
+            ok = ok & (ki < valid_len)
+        return ok
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def _qkv(p, cfg: ModelConfig, x, positions):
+    b, t, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["q_proj"], x, p.get("q_bias")).reshape(b, t, nh, hd)
+    k = linear(p["k_proj"], x, p.get("k_bias")).reshape(b, t, nkv, hd)
+    v = linear(p["v_proj"], x, p.get("v_bias")).reshape(b, t, nkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                 local: bool, positions=None, kv_override=None,
+                 causal: bool = True) -> jax.Array:
+    """Full-sequence attention (train / prefill).  x: (B, T, D)."""
+    b, t, _ = x.shape
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    if positions is None:
+        positions = jnp.arange(t)[None, :]
+    if kv_override is None:
+        q, k, v = _qkv(p, cfg, h, positions)
+    else:  # cross attention: kv from encoder output
+        nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = linear(p["q_proj"], h).reshape(b, t, nh, hd)
+        k, v = kv_override
+    window = cfg.window if local else 0
+    mask = causal_mask_fn(window) if causal else full_mask_fn()
+    o = _chunk_attn(q, k, v, mask, cfg.attn_softcap)
+    o = o.reshape(b, t, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    return linear(p["o_proj"], o)
+
+
+# ---------------------------------------------------------------------------
+# decode with cache
+# ---------------------------------------------------------------------------
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, local: bool,
+                    dtype=jnp.bfloat16) -> dict:
+    length = min(max_len, cfg.window) if (local and cfg.window) else max_len
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, length, nkv, hd), dtype),
+        "v": jnp.zeros((batch, length, nkv, hd), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+def attn_cache_specs(cfg: ModelConfig, batch: int, max_len: int, local: bool,
+                     dtype=jnp.bfloat16) -> dict:
+    length = min(max_len, cfg.window) if (local and cfg.window) else max_len
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, length, nkv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, length, nkv, hd), dtype),
+        "pos": jax.ShapeDtypeStruct((batch, length), jnp.int32),
+    }
+
+
+def attn_prefill(p: dict, cfg: ModelConfig, x: jax.Array, max_len: int,
+                 *, local: bool) -> tuple[jax.Array, dict]:
+    """Full-sequence forward that also builds the decode cache.
+
+    x: (B, T, D).  The cache covers positions [0, T); ring-buffered to
+    ``window`` entries for local layers.
+    """
+    b, t, _ = x.shape
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    positions = jnp.arange(t)[None, :]
+    q, k, v = _qkv(p, cfg, h, positions)
+    window = cfg.window if local else 0
+    o = _chunk_attn(q, k, v, causal_mask_fn(window), cfg.attn_softcap)
+    o = o.reshape(b, t, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    out = linear(p["o_proj"], o)
+
+    cache = init_attn_cache(cfg, b, max_len, local, dtype=k.dtype)
+    length = cache["k"].shape[1]
+    if length >= t:
+        ck = cache["k"].at[:, :t].set(k)
+        cv = cache["v"].at[:, :t].set(v)
+        cpos = cache["pos"].at[:, :t].set(positions.astype(jnp.int32))
+    else:  # ring buffer: keep the last ``length`` positions
+        tail = slice(t - length, t)
+        pos_tail = jnp.arange(t - length, t, dtype=jnp.int32)
+        slots = pos_tail % length
+        ck = cache["k"].at[:, slots].set(k[:, tail])
+        cv = cache["v"].at[:, slots].set(v[:, tail])
+        cpos = cache["pos"].at[:, slots].set(
+            jnp.broadcast_to(pos_tail, (b, length)))
+    return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                pos: jax.Array, *, local: bool) -> tuple[jax.Array, dict]:
+    """One-token decode.  x: (B, 1, D); pos: (B,) absolute position."""
+    b = x.shape[0]
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, h, pos[:, None])
+    length = cache["k"].shape[1]
+    slot = (pos % length).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    cpos = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+
+    rep = cfg.n_heads // cfg.n_kv_heads
+    scale = cfg.head_dim ** -0.5
+    valid = (cpos >= 0) & (cpos <= pos[:, None])
+    if local and cfg.window:
+        valid &= cpos > (pos[:, None] - cfg.window)
+    if GQA_EINSUM:
+        qg = (q[:, 0] * scale).reshape(b, cfg.n_kv_heads, rep, cfg.head_dim)
+        s = jnp.einsum("bkrd,blkd->bkrl", qg, ck,
+                       preferred_element_type=jnp.float32)
+        if cfg.attn_softcap:
+            s = softcap(s, cfg.attn_softcap)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkrl,blkd->bkrd", w.astype(cv.dtype), cv,
+                       preferred_element_type=jnp.float32)
+    else:
+        kk = jnp.repeat(ck.astype(jnp.float32), rep, axis=2)
+        vv = jnp.repeat(cv.astype(jnp.float32), rep, axis=2)
+        s = jnp.einsum("bhd,blhd->bhl",
+                       q[:, 0].astype(jnp.float32) * scale, kk)
+        if cfg.attn_softcap:
+            s = softcap(s, cfg.attn_softcap)
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhl,blhd->bhd", w, vv)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    out = linear(p["o_proj"], o)
+    return out, {"k": ck, "v": cv, "pos": cpos}

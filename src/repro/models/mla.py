@@ -1,0 +1,147 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3) with compressed KV cache.
+
+Prefill/train materialises per-head K/V from the low-rank latents (the
+"naive" evaluation) and reuses the chunked flash attention.  Decode uses the
+**absorbed** form: the cache stores only the 512-d compressed latent ``c_kv``
+plus the 64-d decoupled RoPE key per token — the deployment-critical memory
+saving behind the paper's Table-1 "MU @32k context" numbers — and the
+``kv_b`` projection is folded into the query/output paths so no per-head K/V
+is ever materialised at decode time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import _chunk_attn, causal_mask_fn, NEG_INF
+from .common import apply_rope, linear, rms_norm
+
+from ..core.qtensor import QTensor
+
+
+def _maybe_dequant(w, dtype):
+    if isinstance(w, QTensor):
+        return w.dequantize(dtype)
+    return w.astype(dtype)
+
+
+def _project_q(p, cfg: ModelConfig, h, positions):
+    b, t, _ = h.shape
+    nh = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rms_norm(linear(p["q_a"], h), p["q_a_norm"], cfg.norm_eps)
+    q = linear(p["q_b"], cq).reshape(b, t, nh, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, cfg: ModelConfig, h, positions):
+    b, t, _ = h.shape
+    dr = cfg.qk_rope_head_dim
+    kv = linear(p["kv_a"], h)                                 # (B,T,rank+dr)
+    c_kv = rms_norm(kv[..., : cfg.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = kv[..., cfg.kv_lora_rank:]                       # (B,T,dr)
+    k_rope = apply_rope(k_rope[..., None, :], positions,
+                        cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(p: dict, cfg: ModelConfig, x: jax.Array,
+                positions=None) -> jax.Array:
+    """Train/prefill MLA.  x: (B, T, D)."""
+    b, t, _ = x.shape
+    nh = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    if positions is None:
+        positions = jnp.arange(t)[None, :]
+    q_nope, q_rope = _project_q(p, cfg, h, positions)
+    c_kv, k_rope = _latents(p, cfg, h, positions)
+    kvb = linear(p["kv_b"], c_kv).reshape(b, t, nh, dn + dv)
+    k_nope, v = kvb[..., :dn], kvb[..., dn:]
+    # decoupled-rope key is shared across heads (MQA-style)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)            # (B,T,H,dn+dr)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, t, nh, dr))],
+        axis=-1)
+    o = _chunk_attn(q, k, v, causal_mask_fn(), 0.0)
+    o = o.reshape(b, t, nh * dv).astype(x.dtype)
+    return linear(p["o_proj"], o)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct(
+            (batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_prefill(p: dict, cfg: ModelConfig, x: jax.Array,
+                max_len: int) -> tuple[jax.Array, dict]:
+    """Full-sequence MLA forward that also fills the compressed cache."""
+    b, t, _ = x.shape
+    positions = jnp.arange(t)[None, :]
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    c_kv, k_rope = _latents(p, cfg, h, positions)
+    out = mla_forward(p, cfg, x, positions)
+    cache = init_mla_cache(cfg, b, max_len, dtype=c_kv.dtype)
+    cache = {
+        "c_kv": cache["c_kv"].at[:, :t].set(c_kv),
+        "k_rope": cache["k_rope"].at[:, :t].set(k_rope),
+    }
+    return out, cache
+
+
+def mla_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+               pos: jax.Array) -> tuple[jax.Array, dict]:
+    """Absorbed one-token decode.  x: (B, 1, D); pos: (B,)."""
+    b = x.shape[0]
+    nh = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    rank = cfg.kv_lora_rank
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q_nope, q_rope = _project_q(p, cfg, h, pos[:, None])      # (B,1,H,*)
+    c_new, kr_new = _latents(p, cfg, h, pos[:, None])         # (B,1,rank)
+
+    bidx = jnp.arange(b)
+    c_kv = cache["c_kv"].at[bidx, pos].set(
+        c_new[:, 0].astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[bidx, pos].set(
+        kr_new[:, 0].astype(cache["k_rope"].dtype))
+
+    # absorb kv_b: W_kb (rank, H, dn) for keys, W_vb (rank, H, dv) for values
+    dt = x.dtype
+    w_kvb = _maybe_dequant(p["kv_b"], dt).reshape(rank, nh, dn + dv)
+    w_kb, w_vb = w_kvb[..., :dn], w_kvb[..., dn:]
+    # q_eff[h] = q_nope[h] @ W_kb[h]^T  -> compare directly against c_kv
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_kb.astype(jnp.float32))              # (B,H,rank)
+    scale = (dn + dr) ** -0.5
+    s = (jnp.einsum("bhr,blr->bhl", q_eff.astype(dt), c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhd,bld->bhl", q_rope[:, 0], k_rope,
+                      preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(c_kv.shape[1])[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    # attend in latent space, then project out with W_vb
+    lat = jnp.einsum("bhl,blr->bhr", w.astype(dt), c_kv,
+                     preferred_element_type=jnp.float32)      # (B,H,rank)
+    o = jnp.einsum("bhr,rhd->bhd", lat.astype(dt), w_vb,
+                   preferred_element_type=jnp.float32)        # (B,H,dv)
+    o = o.reshape(b, 1, nh * dv).astype(x.dtype)
+    out = linear(p["o_proj"], o)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,293 @@
+"""Model: the public forward / loss / prefill / decode API over all archs.
+
+Two execution modes share the same per-layer code:
+
+  * ``scan=False`` (eager/unrolled): per-layer flat params; any policy mix;
+    used by tests, examples and the quality benchmarks (small models).
+  * ``scan=True``: parameters stacked by :mod:`.stacking` groups and the
+    layer stack executed with ``jax.lax.scan`` (+ optional remat) — one trace
+    per repeating unit, which keeps compile time bounded for the 35-80-layer
+    full configs in the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import InputShape, ModelConfig
+from ..core.policy import Policy
+from . import stacking, transformer
+from .common import embed, linear, rms_norm, softcap
+from .spec import layer_prefix, subview
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    scan: bool = False
+    plan: stacking.StackPlan | None = None   # required when scan=True
+    remat: bool = False
+    dtype: Any = jnp.bfloat16
+    # NamedSharding for (B, T, D) activations; pinning this stops the SPMD
+    # partitioner from "helpfully" resharding activations to match FSDP
+    # weight shardings (observed 35 GB/layer of activation all-gathers
+    # otherwise — EXPERIMENTS.md §Perf).
+    act_shard: Any = None
+
+    def __post_init__(self):
+        if self.scan and self.plan is None:
+            self.plan = stacking.plan(self.cfg)
+
+    def _wsc(self, x):
+        if self.act_shard is not None:
+            return jax.lax.with_sharding_constraint(x, self.act_shard)
+        return x
+
+    # ------------------------------------------------------------------ embed
+    def _embed_tokens(self, params, tokens):
+        x = embed(params["token_embd"], tokens, self.dtype)
+        if self.cfg.embed_scale:
+            x = x * jnp.asarray(
+                jnp.sqrt(self.cfg.d_model), x.dtype)
+        return x
+
+    def _fuse_frontend(self, params, batch):
+        """Returns (x (B,T,D), enc_hidden or None, n_prefix_tokens)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_tokens(params, tokens)
+        if cfg.frontend == "vit":
+            patches = batch["patches"]                   # (B, P, front_dim)
+            front = rms_norm(patches.astype(jnp.float32),
+                             params["mm_proj_norm"], cfg.norm_eps)
+            front = linear(params["mm_proj"], front.astype(x.dtype))
+            x = jnp.concatenate([front, x], axis=1)
+            return x, None, cfg.frontend_tokens
+        if cfg.is_encdec:
+            frames = batch["frames"]                     # (B, F, front_dim)
+            enc_in = linear(params["frontend_proj"], frames.astype(x.dtype))
+            enc_hidden = self._run_encoder(params, enc_in)
+            return x, enc_hidden, 0
+        return x, None, 0
+
+    # ---------------------------------------------------------------- encoder
+    def _run_encoder(self, params, x):
+        cfg = self.cfg
+        if not self.scan:
+            for layer in range(cfg.encoder_layers):
+                p = subview(params, layer_prefix("enc", layer))
+                x, _ = transformer.apply_layer(cfg, p, layer, x, causal=False)
+        else:
+            x, _ = self._scan_stack(params, x, "enc", positions=None,
+                                    enc_hidden=None, causal=False)
+        return rms_norm(x, params["enc/output_norm"], cfg.norm_eps)
+
+    # ---------------------------------------------------------------- forward
+    def _scan_stack(self, params, x, stack, *, positions, enc_hidden, causal):
+        cfg = self.cfg
+        groups = (self.plan.dec_groups if stack == "dec"
+                  else self.plan.enc_groups)
+        aux_total = jnp.zeros((), jnp.float32)
+        for gi, g in enumerate(groups):
+            unit_params = {u: stacking.group_view(params, stack, gi, u)
+                           for u in range(g.unit)}
+
+            def body(carry, pslice, _g=g, _unit=unit_params):
+                xc = carry
+                aux = jnp.zeros((), jnp.float32)
+                for u in range(_g.unit):
+                    layer = _g.layer(0, u)   # structural twin of every rep
+                    xc, a = transformer.apply_layer(
+                        cfg, pslice[u], layer, xc, positions=positions,
+                        enc_hidden=enc_hidden, causal=causal)
+                    xc = self._wsc(xc)
+                    aux = aux + a
+                return xc, aux
+
+            if self.remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            x, auxs = jax.lax.scan(body, x, unit_params)
+            aux_total = aux_total + jnp.sum(auxs)
+        return x, aux_total
+
+    def hidden_states(self, params, batch):
+        """Full forward up to the final norm.  Returns (hidden, aux, n_front)."""
+        cfg = self.cfg
+        x, enc_hidden, n_front = self._fuse_frontend(params, batch)
+        x = self._wsc(x)
+        positions = jnp.arange(x.shape[1])[None, :]
+        if self.scan:
+            x, aux = self._scan_stack(params, x, "dec", positions=positions,
+                                      enc_hidden=enc_hidden, causal=True)
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            for layer in range(cfg.n_layers):
+                p = subview(params, layer_prefix("dec", layer))
+                x, a = transformer.apply_layer(
+                    cfg, p, layer, x, positions=positions,
+                    enc_hidden=enc_hidden)
+                aux = aux + a
+        x = rms_norm(x, params["output_norm"], cfg.norm_eps)
+        return x, aux, n_front
+
+    def logits(self, params, hidden):
+        cfg = self.cfg
+        w = params["token_embd"] if cfg.tie_embeddings else params["output"]
+        out = linear(w, hidden)
+        out = softcap(out, cfg.logit_softcap)
+        return out[..., : cfg.vocab_size]
+
+    def forward(self, params, batch):
+        hidden, aux, n_front = self.hidden_states(params, batch)
+        if n_front:
+            hidden = hidden[:, n_front:]
+        return self.logits(params, hidden), aux
+
+    def loss(self, params, batch):
+        """Next-token cross entropy (+ MoE aux).  batch['labels']: (B, T)."""
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        lf = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = nll + self.cfg.router_aux_loss * aux
+        return total, {"nll": nll, "aux": aux}
+
+    # ---------------------------------------------------------------- serving
+    def prefill(self, params, batch, max_len: int):
+        """Forward + decode-cache build.  Returns (last_logits, cache)."""
+        cfg = self.cfg
+        x, enc_hidden, n_front = self._fuse_frontend(params, batch)
+        cache: dict[str, Any] = {}
+        if not self.scan:
+            for layer in range(cfg.n_layers):
+                p = subview(params, layer_prefix("dec", layer))
+                x, c = transformer.prefill_layer(
+                    cfg, p, layer, x, max_len, enc_hidden=enc_hidden)
+                for k, v in c.items():
+                    cache[f"{layer_prefix('dec', layer)}/{k}"] = v
+        else:
+            for gi, g in enumerate(self.plan.dec_groups):
+                unit_params = {u: stacking.group_view(params, "dec", gi, u)
+                               for u in range(g.unit)}
+
+                def body(carry, pslice, _g=g):
+                    xc = carry
+                    caches = {}
+                    for u in range(_g.unit):
+                        layer = _g.layer(0, u)
+                        xc, c = transformer.prefill_layer(
+                            cfg, pslice[u], layer, xc, max_len,
+                            enc_hidden=enc_hidden)
+                        caches[u] = c
+                    return xc, caches
+
+                x, caches = jax.lax.scan(body, x, unit_params)
+                for u, c in caches.items():
+                    for k, v in c.items():
+                        cache[f"{stacking.group_prefix('dec', gi)}/u{u}/{k}"] = v
+        x = rms_norm(x, params["output_norm"], cfg.norm_eps)
+        last = self.logits(params, x[:, -1:])
+        return last, cache
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        flat = {}
+        for layer in range(self.cfg.n_layers):
+            c = transformer.init_layer_cache(
+                self.cfg, layer, batch, max_len, dtype)
+            for k, v in c.items():
+                flat[f"{layer_prefix('dec', layer)}/{k}"] = v
+        if self.scan:
+            flat = stacking.stack_tree(flat, self.plan)
+        return flat
+
+    def cache_specs(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        flat = {}
+        for layer in range(self.cfg.n_layers):
+            c = transformer.layer_cache_specs(
+                self.cfg, layer, batch, max_len, dtype)
+            for k, v in c.items():
+                flat[f"{layer_prefix('dec', layer)}/{k}"] = v
+        if self.scan:
+            flat = stacking.stack_tree(flat, self.plan)
+        return flat
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One decode step.  tokens: (B,) int32; pos: (B,).
+
+        Returns (logits (B, vocab), new_cache).
+        """
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens[:, None])
+        new_cache: dict[str, Any] = {}
+        if not self.scan:
+            for layer in range(cfg.n_layers):
+                lp = layer_prefix("dec", layer)
+                p = subview(params, lp)
+                c = subview(cache, lp)
+                x, c_new = transformer.decode_layer(cfg, p, layer, x, c, pos)
+                for k, v in c_new.items():
+                    new_cache[f"{lp}/{k}"] = v
+        else:
+            for gi, g in enumerate(self.plan.dec_groups):
+                unit_params = {u: stacking.group_view(params, "dec", gi, u)
+                               for u in range(g.unit)}
+                unit_cache = {
+                    u: stacking.group_view(cache, "dec", gi, u)
+                    for u in range(g.unit)}
+
+                def body(carry, inp, _g=g):
+                    xc = carry
+                    pslice, cslice = inp
+                    out_caches = {}
+                    for u in range(_g.unit):
+                        layer = _g.layer(0, u)
+                        xc, c_new = transformer.decode_layer(
+                            cfg, pslice[u], layer, xc, dict(cslice[u]), pos)
+                        out_caches[u] = c_new
+                    return xc, out_caches
+
+                x, caches = jax.lax.scan(body, x, (unit_params, unit_cache))
+                for u, c in caches.items():
+                    for k, v in c.items():
+                        new_cache[
+                            f"{stacking.group_prefix('dec', gi)}/u{u}/{k}"] = v
+        x = rms_norm(x, params["output_norm"], cfg.norm_eps)
+        return self.logits(params, x)[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# input specs for the assigned shape matrix
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of one cell."""
+    b, t = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        specs: dict[str, Any] = {}
+        t_text = t
+        if cfg.frontend == "vit":
+            t_text = t - cfg.frontend_tokens
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+        if cfg.is_encdec:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, t_text), i32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, t_text), i32)
+        return specs
+    # decode: one new token against a length-t cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((b,), i32),
+        "pos": jax.ShapeDtypeStruct((b,), i32),
+    }

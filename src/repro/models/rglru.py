@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Training/prefill uses ``jax.lax.associative_scan`` over the linear
+recurrence ``h_t = a_t * h_{t-1} + b_t`` (log-parallel depth); decode is a
+single-step state update.  Gates are Griffin-style block-diagonal per head.
+State per layer is O(batch x lru_width) — this is what makes the 500k-token
+decode shape feasible for this architecture (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import linear, rms_norm
+
+_C = 8.0  # Griffin's recurrence sharpness constant
+
+
+def _block_diag(w: jax.Array, x: jax.Array) -> jax.Array:
+    """x: (..., H*hw) @ blockdiag w: (H, hw, hw) -> (..., H*hw).
+
+    Computed in f32: the CPU thunk runtime rejects bf16 batched dots, and
+    these per-head gates are tiny.
+    """
+    *lead, d = x.shape
+    h, hw, _ = w.shape
+    xh = x.reshape(*lead, h, hw).astype(jnp.float32)
+    y = jnp.einsum("...hi,hij->...hj", xh, w.astype(jnp.float32))
+    return y.reshape(*lead, d).astype(x.dtype)
+
+
+def _conv1d(w: jax.Array, x: jax.Array, state: jax.Array | None = None):
+    """Causal depthwise temporal conv.  x: (B, T, D); w: (W, D).
+
+    Returns (y, new_state) where state is the trailing (W-1) inputs.
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)               # (B, T+W-1, D)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(width))
+    return y, xp[:, -(width - 1):] if width > 1 else state
+
+
+def _gates(p, xc):
+    """Recurrence gate a_t (log-space) and input gate scaling."""
+    r = jax.nn.sigmoid(_block_diag(p["gate_a"], xc).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(p["gate_x"], xc).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["a_param"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) input normalisation (Griffin eq. 4)
+    gate = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = gate * i * xc.astype(jnp.float32)
+    return a, b
+
+
+def rglru_forward(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence RG-LRU block.  x: (B, T, D)."""
+    h = rms_norm(x, p["rec_norm"], cfg.norm_eps)
+    xb = linear(p["in_x"], h)                              # (B, T, lru)
+    gb = linear(p["in_g"], h)
+    xc, _ = _conv1d(p["conv"], xb)
+    a, b = _gates(p, xc)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = hseq.astype(x.dtype) * jax.nn.gelu(
+        gb.astype(jnp.float32)).astype(x.dtype)
+    return linear(p["out"], y)
+
+
+def rglru_prefill(p: dict, cfg: ModelConfig, x: jax.Array,
+                  max_len: int) -> tuple[jax.Array, dict]:
+    """Full-sequence forward returning output + final recurrent state."""
+    h = rms_norm(x, p["rec_norm"], cfg.norm_eps)
+    xb = linear(p["in_x"], h)
+    gb = linear(p["in_g"], h)
+    xc, conv_state = _conv1d(p["conv"], xb)
+    a, b = _gates(p, xc)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = hseq.astype(x.dtype) * jax.nn.gelu(
+        gb.astype(jnp.float32)).astype(x.dtype)
+    out = linear(p["out"], y)
+    return out, {"h": hseq[:, -1], "conv": conv_state}
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+    }
+
+
+def rglru_cache_specs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "h": jax.ShapeDtypeStruct((batch, cfg.lru_width), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+    }
+
+
+def rglru_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                 pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One-token step.  x: (B, 1, D)."""
+    h = rms_norm(x, p["rec_norm"], cfg.norm_eps)
+    xb = linear(p["in_x"], h)
+    gb = linear(p["in_g"], h)
+    xc, conv_state = _conv1d(p["conv"], xb, cache["conv"])
+    a, b = _gates(p, xc)                                   # (B, 1, lru) f32
+    h_new = a[:, 0] * cache["h"] + b[:, 0]
+    y = h_new[:, None].astype(x.dtype) * jax.nn.gelu(
+        gb.astype(jnp.float32)).astype(x.dtype)
+    out = linear(p["out"], y)
+    return out, {"h": h_new, "conv": conv_state}

@@ -1,0 +1,387 @@
+"""WeightSpec registry — the structural backbone of the framework.
+
+Every architecture enumerates its full weight inventory as ``WeightSpec``s:
+logical shape, canonical quantization *role* (llama.cpp-style class used by
+the paper's Table-7 policies), absolute layer index, and logical sharding
+axes.  Everything else derives from this registry:
+
+  * parameter init (tests / examples),
+  * ``jax.ShapeDtypeStruct`` stand-ins for the multi-pod dry-run,
+  * the analytic size calculator that reproduces Table 1,
+  * policy application (fp weights -> QTensor tree),
+  * sharding specs (logical axes -> mesh axes).
+
+Params are held as a *flat dict* ``{path: array-or-QTensor}``; paths are
+``/``-separated, layers prefixed ``dec/L000/`` (``enc/L000/`` for encoder
+stacks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.policy import Policy, ROLES_FLOAT
+
+DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32, "f16": jnp.float16}
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightSpec:
+    path: str
+    shape: tuple[int, ...]
+    role: str
+    layer: int | None = None          # absolute layer index within its stack
+    stack: str = "dec"                # "dec" | "enc" | "global"
+    axes: tuple = ()                  # logical sharding axis names (len == ndim)
+    dtype: str = "bf16"
+    init: str = "fan_in"              # fan_in | zeros | ones | normal
+
+    @property
+    def num_params(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def quantizable(self) -> bool:
+        return self.role not in ROLES_FLOAT and len(self.shape) >= 2
+
+
+class SpecBuilder:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.specs: dict[str, WeightSpec] = {}
+
+    def add(self, path: str, shape, role: str, *, layer=None, stack="global",
+            axes=None, dtype="bf16", init="fan_in") -> None:
+        if axes is None:
+            axes = (None,) * len(shape)
+        assert len(axes) == len(shape), (path, axes, shape)
+        assert path not in self.specs, f"duplicate spec {path}"
+        self.specs[path] = WeightSpec(
+            path=path, shape=tuple(int(s) for s in shape), role=role,
+            layer=layer, stack=stack, axes=tuple(axes), dtype=dtype, init=init)
+
+
+# ---------------------------------------------------------------------------
+# per-block spec emitters (apply fns live in the sibling block modules)
+# ---------------------------------------------------------------------------
+
+def _attn_specs(b: SpecBuilder, cfg: ModelConfig, prefix: str, layer: int,
+                stack: str, cross: bool = False) -> None:
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    a = lambda *ax: ax
+    b.add(f"{prefix}/attn_norm", (d,), "norm", layer=layer, stack=stack,
+          axes=a(None), init="ones")
+    b.add(f"{prefix}/q_proj", (d, nh * hd), "attn_q", layer=layer, stack=stack,
+          axes=a("embed", "heads"))
+    b.add(f"{prefix}/k_proj", (d, nkv * hd), "attn_k", layer=layer, stack=stack,
+          axes=a("embed", "kv_heads"))
+    b.add(f"{prefix}/v_proj", (d, nkv * hd), "attn_v", layer=layer, stack=stack,
+          axes=a("embed", "kv_heads"))
+    b.add(f"{prefix}/o_proj", (nh * hd, d), "attn_output", layer=layer,
+          stack=stack, axes=a("heads", "embed"))
+    if cfg.qkv_bias and not cross:
+        for nm, width in (("q_bias", nh * hd), ("k_bias", nkv * hd),
+                          ("v_bias", nkv * hd)):
+            b.add(f"{prefix}/{nm}", (width,), "bias", layer=layer, stack=stack,
+                  axes=a("heads" if nm == "q_bias" else "kv_heads"),
+                  init="zeros")
+
+
+def _mla_specs(b: SpecBuilder, cfg: ModelConfig, prefix: str, layer: int,
+               stack: str) -> None:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    b.add(f"{prefix}/attn_norm", (d,), "norm", layer=layer, stack=stack,
+          init="ones")
+    b.add(f"{prefix}/q_a", (d, cfg.q_lora_rank), "attn_q_a", layer=layer,
+          stack=stack, axes=("embed", None))
+    b.add(f"{prefix}/q_a_norm", (cfg.q_lora_rank,), "norm", layer=layer,
+          stack=stack, init="ones")
+    b.add(f"{prefix}/q_b", (cfg.q_lora_rank, nh * qk), "attn_q_b", layer=layer,
+          stack=stack, axes=(None, "heads"))
+    b.add(f"{prefix}/kv_a", (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+          "attn_kv_a_mqa", layer=layer, stack=stack, axes=("embed", None))
+    b.add(f"{prefix}/kv_a_norm", (cfg.kv_lora_rank,), "norm", layer=layer,
+          stack=stack, init="ones")
+    b.add(f"{prefix}/kv_b",
+          (cfg.kv_lora_rank, nh * (cfg.qk_nope_head_dim + cfg.v_head_dim)),
+          "attn_kv_b", layer=layer, stack=stack, axes=(None, "heads"))
+    b.add(f"{prefix}/o_proj", (nh * cfg.v_head_dim, d), "attn_output",
+          layer=layer, stack=stack, axes=("heads", "embed"))
+
+
+def _ffn_specs(b: SpecBuilder, cfg: ModelConfig, prefix: str, layer: int,
+               stack: str, d_ff: int | None = None) -> None:
+    d = cfg.d_model
+    ff = cfg.d_ff if d_ff is None else d_ff
+    b.add(f"{prefix}/ffn_norm", (d,), "norm", layer=layer, stack=stack,
+          init="ones")
+    b.add(f"{prefix}/gate", (d, ff), "ffn_gate", layer=layer, stack=stack,
+          axes=("embed", "ff"))
+    b.add(f"{prefix}/up", (d, ff), "ffn_up", layer=layer, stack=stack,
+          axes=("embed", "ff"))
+    b.add(f"{prefix}/down", (ff, d), "ffn_down", layer=layer, stack=stack,
+          axes=("ff", "embed"))
+
+
+def _moe_specs(b: SpecBuilder, cfg: ModelConfig, prefix: str, layer: int,
+               stack: str) -> None:
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.d_expert
+    b.add(f"{prefix}/ffn_norm", (d,), "norm", layer=layer, stack=stack,
+          init="ones")
+    b.add(f"{prefix}/router", (d, e), "router", layer=layer, stack=stack,
+          axes=("embed", None), dtype="f32")
+    b.add(f"{prefix}/gate_exps", (e, d, fe), "ffn_gate_exps", layer=layer,
+          stack=stack, axes=("expert", "embed", "expert_ff"))
+    b.add(f"{prefix}/up_exps", (e, d, fe), "ffn_up_exps", layer=layer,
+          stack=stack, axes=("expert", "embed", "expert_ff"))
+    b.add(f"{prefix}/down_exps", (e, fe, d), "ffn_down_exps", layer=layer,
+          stack=stack, axes=("expert", "expert_ff", "embed"))
+    if cfg.n_shared_experts:
+        fs = cfg.d_shared_expert * cfg.n_shared_experts
+        b.add(f"{prefix}/gate_shexp", (d, fs), "ffn_gate_shexp", layer=layer,
+              stack=stack, axes=("embed", "ff"))
+        b.add(f"{prefix}/up_shexp", (d, fs), "ffn_up_shexp", layer=layer,
+              stack=stack, axes=("embed", "ff"))
+        b.add(f"{prefix}/down_shexp", (fs, d), "ffn_down_shexp", layer=layer,
+              stack=stack, axes=("ff", "embed"))
+
+
+def _rglru_specs(b: SpecBuilder, cfg: ModelConfig, prefix: str, layer: int,
+                 stack: str) -> None:
+    d, lru, nh = cfg.d_model, cfg.lru_width, cfg.n_heads
+    hw = lru // nh
+    b.add(f"{prefix}/rec_norm", (d,), "norm", layer=layer, stack=stack,
+          init="ones")
+    b.add(f"{prefix}/in_x", (d, lru), "attn_q", layer=layer, stack=stack,
+          axes=("embed", "heads"))
+    b.add(f"{prefix}/in_g", (d, lru), "attn_q", layer=layer, stack=stack,
+          axes=("embed", "heads"))
+    b.add(f"{prefix}/conv", (cfg.conv_width, lru), "conv", layer=layer,
+          stack=stack, axes=(None, "heads"))
+    # Griffin-style block-diagonal recurrence/input gates (per head).
+    b.add(f"{prefix}/gate_a", (nh, hw, hw), "rnn", layer=layer, stack=stack,
+          axes=("heads", None, None))
+    b.add(f"{prefix}/gate_x", (nh, hw, hw), "rnn", layer=layer, stack=stack,
+          axes=("heads", None, None))
+    b.add(f"{prefix}/a_param", (lru,), "scalar", layer=layer, stack=stack,
+          axes=("heads",), init="normal")
+    b.add(f"{prefix}/out", (lru, d), "attn_output", layer=layer, stack=stack,
+          axes=("heads", "embed"))
+
+
+def _mlstm_specs(b: SpecBuilder, cfg: ModelConfig, prefix: str, layer: int,
+                 stack: str) -> None:
+    d, nh = cfg.d_model, cfg.n_heads
+    inner = int(cfg.mlstm_proj_factor * d)
+    hd = inner // nh
+    b.add(f"{prefix}/norm", (d,), "norm", layer=layer, stack=stack, init="ones")
+    b.add(f"{prefix}/up", (d, 2 * inner), "ffn_up", layer=layer, stack=stack,
+          axes=("embed", "heads"))
+    b.add(f"{prefix}/conv", (cfg.conv_width, inner), "conv", layer=layer,
+          stack=stack, axes=(None, "heads"))
+    # per-head block-diagonal q,k,v
+    b.add(f"{prefix}/qkv", (nh, hd, 3 * hd), "attn_qkv", layer=layer,
+          stack=stack, axes=("heads", None, None))
+    b.add(f"{prefix}/if_gates", (inner, 2 * nh), "rnn", layer=layer,
+          stack=stack, axes=("heads", None))
+    b.add(f"{prefix}/down", (inner, d), "ffn_down", layer=layer, stack=stack,
+          axes=("heads", "embed"))
+
+
+def _slstm_specs(b: SpecBuilder, cfg: ModelConfig, prefix: str, layer: int,
+                 stack: str) -> None:
+    d, nh = cfg.d_model, cfg.n_heads
+    hw = d // nh
+    ff = _round256(int(cfg.slstm_proj_factor * d))
+    b.add(f"{prefix}/norm", (d,), "norm", layer=layer, stack=stack, init="ones")
+    b.add(f"{prefix}/conv", (cfg.conv_width, d), "conv", layer=layer,
+          stack=stack, axes=(None, "heads"))
+    b.add(f"{prefix}/w_gates", (d, 4 * d), "attn_qkv", layer=layer, stack=stack,
+          axes=("embed", "heads"))
+    b.add(f"{prefix}/r_gates", (nh, hw, 4 * hw), "rnn", layer=layer,
+          stack=stack, axes=("heads", None, None))
+    b.add(f"{prefix}/ffn_norm", (d,), "norm", layer=layer, stack=stack,
+          init="ones")
+    b.add(f"{prefix}/ff_up", (d, ff), "ffn_up", layer=layer, stack=stack,
+          axes=("embed", "ff"))
+    b.add(f"{prefix}/ff_down", (ff, d), "ffn_down", layer=layer, stack=stack,
+          axes=("ff", "embed"))
+
+
+def _round256(x: int) -> int:
+    return -(-x // 256) * 256
+
+
+# ---------------------------------------------------------------------------
+# whole-model spec assembly
+# ---------------------------------------------------------------------------
+
+def layer_prefix(stack: str, layer: int) -> str:
+    return f"{stack}/L{layer:03d}"
+
+
+def decoder_layer_specs(b: SpecBuilder, cfg: ModelConfig, layer: int,
+                        stack: str = "dec") -> None:
+    """Emit specs for one decoder layer of any supported family."""
+    p = layer_prefix(stack, layer)
+    kind = cfg.block_kind(layer)
+    if kind in ("attn", "local_attn"):
+        if cfg.mla:
+            _mla_specs(b, cfg, p, layer, stack)
+        else:
+            _attn_specs(b, cfg, p, layer, stack)
+    elif kind == "rglru":
+        _rglru_specs(b, cfg, p, layer, stack)
+    elif kind == "mlstm":
+        _mlstm_specs(b, cfg, p, layer, stack)
+        return  # mLSTM blocks carry no separate FFN
+    elif kind == "slstm":
+        _slstm_specs(b, cfg, p, layer, stack)
+        return  # sLSTM block includes its own FFN specs
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+
+    if stack == "dec" and cfg.is_encdec:
+        _attn_specs(b, cfg, p + "/cross", layer, stack, cross=True)
+
+    # FFN / MoE
+    if cfg.d_ff == 0 and not cfg.is_moe:
+        return
+    if cfg.moe_layer(layer):
+        _moe_specs(b, cfg, p, layer, stack)
+        if cfg.dense_residual:
+            _ffn_specs(b, cfg, p + "/res", layer, stack)
+    else:
+        _ffn_specs(b, cfg, p, layer, stack)
+
+
+def model_specs(cfg: ModelConfig) -> dict[str, WeightSpec]:
+    """The complete weight inventory of one architecture."""
+    b = SpecBuilder(cfg)
+    d = cfg.d_model
+    # embeddings / head (stored (d_model, vocab): quant blocks along d_model)
+    b.add("token_embd", (d, cfg.padded_vocab), "token_embd",
+          axes=("embed", "vocab"))
+    if not cfg.tie_embeddings:
+        b.add("output", (d, cfg.padded_vocab), "output", axes=("embed", "vocab"))
+    b.add("output_norm", (d,), "norm", init="ones")
+
+    # modality frontend stubs project precomputed embeddings into d_model
+    if cfg.frontend == "vit":
+        b.add("mm_proj_norm", (cfg.frontend_dim,), "norm", init="ones")
+        b.add("mm_proj", (cfg.frontend_dim, d), "frontend",
+              axes=(None, "embed"))
+    elif cfg.frontend == "audio":
+        b.add("frontend_proj", (cfg.frontend_dim, d), "frontend",
+              axes=(None, "embed"))
+
+    # encoder stack (enc-dec archs)
+    for layer in range(cfg.encoder_layers):
+        p = layer_prefix("enc", layer)
+        _attn_specs(b, cfg, p, layer, "enc")
+        _ffn_specs(b, cfg, p, layer, "enc")
+    if cfg.encoder_layers:
+        b.add("enc/output_norm", (d,), "norm", init="ones")
+
+    # decoder stack
+    for layer in range(cfg.n_layers):
+        decoder_layer_specs(b, cfg, layer)
+    return b.specs
+
+
+# ---------------------------------------------------------------------------
+# derived views
+# ---------------------------------------------------------------------------
+
+def role_layer_tables(specs: dict[str, WeightSpec]) -> dict:
+    """Per (stack, role): sorted list of layers containing it.
+
+    Policy rules receive ``(index_of_layer_in_this_list, len(list))``.
+    """
+    table: dict[tuple[str, str], list[int]] = {}
+    for s in specs.values():
+        if s.layer is None or not s.quantizable:
+            continue
+        key = (s.stack, s.role)
+        table.setdefault(key, [])
+        if s.layer not in table[key]:
+            table[key].append(s.layer)
+    for v in table.values():
+        v.sort()
+    return table
+
+
+def resolve_format(spec: WeightSpec, policy: Policy,
+                   tables: dict) -> str:
+    """Format for one weight under one policy (fp formats pass through)."""
+    if not spec.quantizable:
+        return spec.dtype if policy.unquantized else policy.float_fmt \
+            if spec.dtype == "bf16" else spec.dtype
+    if spec.layer is None:
+        return policy.resolve(spec.role, 0, 1)
+    layers = tables[(spec.stack, spec.role)]
+    return policy.resolve(spec.role, layers.index(spec.layer), len(layers))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0,
+                dtype=jnp.bfloat16) -> dict[str, jax.Array]:
+    """Random init of the full (unquantized) parameter tree."""
+    specs = model_specs(cfg)
+    params = {}
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(specs))
+    for k, (path, s) in zip(keys, sorted(specs.items())):
+        dt = DTYPES[s.dtype] if s.dtype != "bf16" else dtype
+        if s.init == "zeros":
+            params[path] = jnp.zeros(s.shape, dt)
+        elif s.init == "ones":
+            params[path] = jnp.ones(s.shape, dt)
+        elif s.init == "normal":
+            params[path] = jax.random.normal(k, s.shape, jnp.float32).astype(dt)
+        else:  # fan_in
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            w = jax.random.normal(k, s.shape, jnp.float32) / jnp.sqrt(fan_in)
+            params[path] = w.astype(dt)
+    return params
+
+
+def param_shape_specs(cfg: ModelConfig, dtype=jnp.bfloat16) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct tree (no allocation) — dry-run input."""
+    out = {}
+    for path, s in model_specs(cfg).items():
+        dt = DTYPES[s.dtype] if s.dtype != "bf16" else dtype
+        out[path] = jax.ShapeDtypeStruct(s.shape, dt)
+    return out
+
+
+def subview(params: dict[str, Any], prefix: str) -> dict[str, Any]:
+    """All params under ``prefix/``, with the prefix stripped."""
+    pl = len(prefix) + 1
+    return {k[pl:]: v for k, v in params.items() if k.startswith(prefix + "/")}
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return sum(s.num_params for s in model_specs(cfg).values())
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active (per-token) params — MoE experts count top_k of n_experts."""
+    total = 0
+    for s in model_specs(cfg).values():
+        n = s.num_params
+        if s.role in ("ffn_gate_exps", "ffn_up_exps", "ffn_down_exps"):
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total

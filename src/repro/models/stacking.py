@@ -1,0 +1,164 @@
+"""Layer grouping for ``jax.lax.scan`` over heterogeneous stacks.
+
+Large models are executed as a sequence of *groups*; within a group, layers
+repeat a fixed *unit* (e.g. gemma2's (local, global) pair, xLSTM's 7xmLSTM +
+1xsLSTM octet, or DQ3_K_M's (q4, q3, q3, q3, q3) ffn_down_exps period), so
+their parameters stack into arrays with a leading ``repeats`` dim and the
+unit body is scanned — one trace per unit instead of one per layer, keeping
+HLO size and compile time bounded for 60-80-layer models.
+
+Grouping is *policy-aware*: when weights are quantized, a layer's signature
+includes the format of every module (a stacked weight must share one
+format), so per-layer dynamic policies like DQ3_K_M produce correct groups
+automatically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.policy import Policy
+from ..core.qtensor import QTensor
+from . import spec as mspec
+
+MAX_UNIT = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    start: int       # first absolute layer
+    unit: int        # layers per scan step
+    repeats: int     # scan length
+
+    @property
+    def layers(self) -> list[int]:
+        return list(range(self.start, self.start + self.unit * self.repeats))
+
+    def layer(self, rep: int, u: int) -> int:
+        return self.start + rep * self.unit + u
+
+
+def layer_signature(cfg: ModelConfig, layer: int, stack: str,
+                    policy: Policy | None,
+                    specs: dict, tables: dict) -> tuple:
+    """Hashable structural (+format) signature of one layer."""
+    prefix = mspec.layer_prefix(stack, layer) + "/"
+    items = []
+    for path, s in specs.items():
+        if not path.startswith(prefix):
+            continue
+        rel = path[len(prefix):]
+        fmt = mspec.resolve_format(s, policy, tables) if policy else s.dtype
+        items.append((rel, s.shape, fmt))
+    return (cfg.block_kind(layer), cfg.moe_layer(layer), tuple(sorted(items)))
+
+
+def detect_groups(sigs: list) -> list[Group]:
+    """Greedy maximal-coverage repeating-unit detection."""
+    groups: list[Group] = []
+    i, n = 0, len(sigs)
+    while i < n:
+        best_u, best_r = 1, 1
+        for u in range(1, min(MAX_UNIT, n - i) + 1):
+            r = 1
+            while (i + (r + 1) * u <= n
+                   and sigs[i + r * u: i + (r + 1) * u] == sigs[i: i + u]):
+                r += 1
+            if u * r > best_u * best_r:
+                best_u, best_r = u, r
+        groups.append(Group(i, best_u, best_r))
+        i += best_u * best_r
+    return groups
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    cfg: ModelConfig
+    dec_groups: tuple[Group, ...]
+    enc_groups: tuple[Group, ...]
+
+    @property
+    def n_scan_traces(self) -> int:
+        return len(self.dec_groups) + len(self.enc_groups)
+
+
+def plan(cfg: ModelConfig, policy: Policy | None = None) -> StackPlan:
+    specs = mspec.model_specs(cfg)
+    tables = mspec.role_layer_tables(specs)
+    dec_sigs = [layer_signature(cfg, l, "dec", policy, specs, tables)
+                for l in range(cfg.n_layers)]
+    enc_sigs = [layer_signature(cfg, l, "enc", policy, specs, tables)
+                for l in range(cfg.encoder_layers)]
+    return StackPlan(cfg, tuple(detect_groups(dec_sigs)),
+                     tuple(detect_groups(enc_sigs)))
+
+
+# ---------------------------------------------------------------------------
+# stacked parameter / spec trees
+# ---------------------------------------------------------------------------
+
+def group_prefix(stack: str, gi: int) -> str:
+    return f"{stack}/G{gi:02d}"
+
+
+def _stack_leaves(leaves: list):
+    """Stack per-layer leaves (arrays, SDS, or QTensor) along a new axis 0."""
+    first = leaves[0]
+    if isinstance(first, QTensor):
+        fields = {k: _stack_leaves([l.fields[k] for l in leaves])
+                  for k in first.fields}
+        return QTensor(fields, first.fmt, first.shape)
+    if isinstance(first, jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct((len(leaves),) + tuple(first.shape),
+                                    first.dtype)
+    return jnp.stack(leaves)
+
+
+def _unstack_leaf(leaf, r: int):
+    """Slice rep ``r`` from a stacked leaf (inside scan this is automatic;
+    used only by eager fallbacks/tests)."""
+    if isinstance(leaf, QTensor):
+        return QTensor({k: v[r] for k, v in leaf.fields.items()},
+                       leaf.fmt, leaf.shape)
+    return leaf[r]
+
+
+def stack_tree(flat: dict[str, Any], sp: StackPlan) -> dict[str, Any]:
+    """Re-key a per-layer flat param/cache/spec dict into stacked groups.
+
+    Non-layer keys pass through unchanged.  Per-layer keys
+    ``dec/L017/attn/q_proj`` become ``dec/G03/u1/attn/q_proj`` with a new
+    leading ``repeats`` axis.
+    """
+    out: dict[str, Any] = {}
+    layer_keys: set[str] = set()
+    for stack, groups in (("dec", sp.dec_groups), ("enc", sp.enc_groups)):
+        for gi, g in enumerate(groups):
+            for u in range(g.unit):
+                # collect the per-rep leaves for every subpath of (g, u)
+                l0 = mspec.layer_prefix(stack, g.layer(0, u)) + "/"
+                subpaths = [k[len(l0):] for k in flat if k.startswith(l0)]
+                for sub in subpaths:
+                    leaves = []
+                    for r in range(g.repeats):
+                        key = (mspec.layer_prefix(stack, g.layer(r, u))
+                               + "/" + sub)
+                        leaves.append(flat[key])
+                        layer_keys.add(key)
+                    out[f"{group_prefix(stack, gi)}/u{u}/{sub}"] = (
+                        _stack_leaves(leaves))
+    for k, v in flat.items():
+        if k not in layer_keys:
+            out[k] = v
+    return out
+
+
+def group_view(stacked: dict[str, Any], stack: str, gi: int,
+               u: int) -> dict[str, Any]:
+    """Subview of one unit-position's stacked params (leading repeats dim)."""
+    return mspec.subview(stacked, f"{group_prefix(stack, gi)}/u{u}")

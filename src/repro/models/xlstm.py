@@ -1,0 +1,317 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM train/prefill uses the **chunkwise-parallel** form (sequential scan
+over chunks, attention-like parallelism within a chunk, log-space
+stabilisers carried across chunks) — the TPU-native analogue of the paper's
+recurrent kernels: the per-chunk work is MXU matmuls, and state stays
+O(batch x heads x d_head^2) regardless of sequence length, which is what
+qualifies this arch for the 500k decode shape.
+
+sLSTM is a per-head scalar recurrence with block-diagonal recurrent gates,
+evaluated with ``jax.lax.scan`` over time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import as_array, linear, rms_norm
+from .rglru import _block_diag, _conv1d
+
+CHUNK = 256
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+    return inner, cfg.n_heads, inner // cfg.n_heads
+
+
+def _mlstm_qkv(p, xc, nh, hd):
+    """Block-diagonal per-head q,k,v from the conv'd cell input (f32 — the
+    CPU thunk runtime rejects bf16 batched dots)."""
+    *lead, d = xc.shape
+    xh = xc.reshape(*lead, nh, hd).astype(jnp.float32)
+    qkv = jnp.einsum("...hi,hij->...hj", xh, as_array(p["qkv"], jnp.float32))
+    qkv = qkv.astype(xc.dtype)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    return q, k * (hd ** -0.5), v
+
+
+def _mlstm_gates(p, xc, nh):
+    g = jnp.einsum("...d,dg->...g", xc.astype(jnp.float32),
+                   p["if_gates"].astype(jnp.float32))
+    i_pre, f_pre = jnp.split(g, 2, axis=-1)               # (..., H)
+    return i_pre, jax.nn.log_sigmoid(f_pre)
+
+
+def mlstm_chunked(q, k, v, i_pre, log_f, state=None):
+    """Chunkwise-parallel mLSTM.
+
+    q,k,v: (B, T, H, hd); i_pre/log_f: (B, T, H).
+    state: optional (C (B,H,hd,hd), n (B,H,hd), m (B,H)) carry.
+    Returns (h (B,T,H,hd), new_state).  T must be a multiple of CHUNK or
+    less than CHUNK (single partial chunk).
+    """
+    b, t, h, hd = q.shape
+    L = min(CHUNK, t)
+    nchunk = t // L
+    assert nchunk * L == t, f"T={t} not divisible by chunk {L}"
+
+    def resh(x):
+        return jnp.moveaxis(
+            x.reshape(b, nchunk, L, *x.shape[2:]), 1, 0)  # (nc, B, L, ...)
+
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    is_, fs = resh(i_pre), resh(log_f)                    # (nc, B, L, H)
+
+    if state is None:
+        C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, ic, fc = inp                          # (B,L,H,*) / (B,L,H)
+        fc = jnp.moveaxis(fc, -1, 1)                      # (B,H,L)
+        ic = jnp.moveaxis(ic, -1, 1)
+        F = jnp.cumsum(fc, axis=-1)                       # inclusive
+        g = ic - F                                        # (B,H,L)
+        m_intra = F + jax.lax.cummax(g, axis=2)
+        m_inter = F + m[..., None]
+        m_t = jnp.maximum(m_inter, m_intra)               # (B,H,L)
+        # intra-chunk decay matrix D[t,s] = exp(F_t - F_s + i_s - m_t), s<=t
+        Dlog = (F[..., :, None] - F[..., None, :]
+                + ic[..., None, :] - m_t[..., :, None])   # (B,H,L,L)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(mask, jnp.exp(Dlog), 0.0)
+        qf = jnp.moveaxis(qc, 2, 1).astype(jnp.float32)   # (B,H,L,hd)
+        kf = jnp.moveaxis(kc, 2, 1).astype(jnp.float32)
+        vf = jnp.moveaxis(vc, 2, 1).astype(jnp.float32)
+        scores = jnp.einsum("bhld,bhsd->bhls", qf, kf) * D
+        c_in = jnp.exp(m_inter - m_t)                     # (B,H,L)
+        num = (jnp.einsum("bhls,bhsd->bhld", scores, vf)
+               + jnp.einsum("bhld,bhde->bhle", qf, C) * c_in[..., None])
+        nvec = (jnp.einsum("bhls,bhsd->bhld", D, kf)
+                + n[..., None, :] * c_in[..., None])
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhld,bhld->bhl", qf, nvec)),
+                            jnp.exp(-m_t))
+        hout = num / denom[..., None]                     # (B,H,L,hd)
+        # carry update (end of chunk)
+        m_end = m_t[..., -1]
+        w_old = jnp.exp(F[..., -1] + m - m_end)           # (B,H)
+        w_new = jnp.exp(F[..., -1:] - F + ic - m_end[..., None])  # (B,H,L)
+        C_new = (C * w_old[..., None, None]
+                 + jnp.einsum("bhl,bhld,bhle->bhde", w_new, kf, vf))
+        n_new = n * w_old[..., None] + jnp.einsum("bhl,bhld->bhd", w_new, kf)
+        return (C_new, n_new, m_end), jnp.moveaxis(hout, 1, 2)  # (B,L,H,hd)
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                 (qs, ks, vs, is_, fs))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, t, h, hd)
+    return hs, (C, n, m)
+
+
+def mlstm_forward(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Full mLSTM block (pre-norm, up-proj, cell, gated down-proj)."""
+    inner, nh, hd = _mlstm_dims(cfg)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    up = linear(p["up"], h)                               # (B,T,2*inner)
+    cell_in, gate_z = jnp.split(up, 2, axis=-1)
+    xc, _ = _conv1d(p["conv"], cell_in)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q, k, v = _mlstm_qkv(p, xc, nh, hd)
+    i_pre, log_f = _mlstm_gates(p, xc, nh)
+    hs, _ = mlstm_chunked(q, k, v, i_pre, log_f)
+    hs = hs.reshape(*x.shape[:-1], inner).astype(x.dtype)
+    y = hs * jax.nn.silu(gate_z.astype(jnp.float32)).astype(x.dtype)
+    return linear(p["down"], y)
+
+
+def mlstm_prefill(p: dict, cfg: ModelConfig, x: jax.Array,
+                  max_len: int) -> tuple[jax.Array, dict]:
+    inner, nh, hd = _mlstm_dims(cfg)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    up = linear(p["up"], h)
+    cell_in, gate_z = jnp.split(up, 2, axis=-1)
+    xc, conv_state = _conv1d(p["conv"], cell_in)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q, k, v = _mlstm_qkv(p, xc, nh, hd)
+    i_pre, log_f = _mlstm_gates(p, xc, nh)
+    hs, (C, n, m) = mlstm_chunked(q, k, v, i_pre, log_f)
+    hs = hs.reshape(*x.shape[:-1], inner).astype(x.dtype)
+    y = hs * jax.nn.silu(gate_z.astype(jnp.float32)).astype(x.dtype)
+    out = linear(p["down"], y)
+    return out, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    inner, nh, hd = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, inner), dtype),
+    }
+
+
+def mlstm_cache_specs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    inner, nh, hd = _mlstm_dims(cfg)
+    return {
+        "C": jax.ShapeDtypeStruct((batch, nh, hd, hd), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, nh, hd), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.conv_width - 1, inner), dtype),
+    }
+
+
+def mlstm_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                 pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One-token mLSTM step.  x: (B, 1, D)."""
+    inner, nh, hd = _mlstm_dims(cfg)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    up = linear(p["up"], h)
+    cell_in, gate_z = jnp.split(up, 2, axis=-1)
+    xc, conv_state = _conv1d(p["conv"], cell_in, cache["conv"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q, k, v = _mlstm_qkv(p, xc, nh, hd)                   # (B,1,H,hd)
+    i_pre, log_f = _mlstm_gates(p, xc, nh)                # (B,1,H)
+    qf = q[:, 0].astype(jnp.float32)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    i0, f0 = i_pre[:, 0], log_f[:, 0]                     # (B,H)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(f0 + m, i0)
+    fw = jnp.exp(f0 + m - m_new)
+    iw = jnp.exp(i0 - m_new)
+    C_new = C * fw[..., None, None] + iw[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n_new = n * fw[..., None] + iw[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                        jnp.exp(-m_new))
+    hout = (num / denom[..., None]).reshape(x.shape[0], 1, inner)
+    y = hout.astype(x.dtype) * jax.nn.silu(
+        gate_z.astype(jnp.float32)).astype(x.dtype)
+    out = linear(p["down"], y)
+    return out, {"C": C_new, "n": n_new, "m": m_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _slstm_cell(w_pre, r_gates, state, nh):
+    """One sLSTM step.  w_pre: (B, 4D) precomputed Wx; state: (c,n,h,m)."""
+    c, n, hprev, m = state
+    b, d4 = w_pre.shape
+    d = d4 // 4
+    rec = _block_diag_4(r_gates, hprev, nh)               # (B, 4D)
+    pre = w_pre.astype(jnp.float32) + rec
+    z_p, i_p, f_p, o_p = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_p)
+    o = jax.nn.sigmoid(o_p)
+    log_f = jax.nn.log_sigmoid(f_p)
+    m_new = jnp.maximum(log_f + m, i_p)
+    i = jnp.exp(i_p - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def _block_diag_4(r: jax.Array, h: jax.Array, nh: int) -> jax.Array:
+    """h: (B, D) @ r: (H, hw, 4*hw) -> (B, 4D) grouped per gate."""
+    b, d = h.shape
+    hw = d // nh
+    hh = h.reshape(b, nh, hw).astype(jnp.float32)
+    out = jnp.einsum("bhi,hij->bhj", hh, r.astype(jnp.float32))  # (B,H,4hw)
+    gates = out.reshape(b, nh, 4, hw).swapaxes(1, 2)      # (B,4,H,hw)
+    return gates.reshape(b, 4 * d)
+
+
+def slstm_block(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """sLSTM block returning the *delta* (caller adds residual)."""
+    b, t, d = x.shape
+    nh = cfg.n_heads
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xc, _ = _conv1d(p["conv"], h)
+    w_pre = linear(p["w_gates"], xc)
+
+    def step(state, wt):
+        new = _slstm_cell(wt, p["r_gates"], state, nh)
+        return new, new[2]
+
+    z = jnp.zeros((b, d), jnp.float32)
+    state0 = (z, z, z, jnp.full((b, d), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(w_pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    mid = x + y
+    ff = linear(p["ff_down"], jax.nn.gelu(linear(
+        p["ff_up"], rms_norm(mid, p["ffn_norm"], cfg.norm_eps)
+    ).astype(jnp.float32)).astype(x.dtype))
+    return y + ff
+
+
+def slstm_prefill(p: dict, cfg: ModelConfig, x: jax.Array,
+                  max_len: int) -> tuple[jax.Array, dict]:
+    b, t, d = x.shape
+    nh = cfg.n_heads
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xc, conv_state = _conv1d(p["conv"], h)
+    w_pre = linear(p["w_gates"], xc)
+
+    def step(state, wt):
+        new = _slstm_cell(wt, p["r_gates"], state, nh)
+        return new, new[2]
+
+    z = jnp.zeros((b, d), jnp.float32)
+    state0 = (z, z, z, jnp.full((b, d), -1e30, jnp.float32))
+    (c, n, hn, m), hs = jax.lax.scan(step, state0, jnp.moveaxis(w_pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    mid = x + y
+    ff = linear(p["ff_down"], jax.nn.gelu(linear(
+        p["ff_up"], rms_norm(mid, p["ffn_norm"], cfg.norm_eps)
+    ).astype(jnp.float32)).astype(x.dtype))
+    return y + ff, {"c": c, "n": n, "h": hn, "m": m, "conv": conv_state}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {
+        "c": z, "n": z, "h": z,
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d), dtype),
+    }
+
+
+def slstm_cache_specs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    f32 = lambda: jax.ShapeDtypeStruct((batch, d), jnp.float32)
+    return {
+        "c": f32(), "n": f32(), "h": f32(), "m": f32(),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, d), dtype),
+    }
+
+
+def slstm_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                 pos: jax.Array) -> tuple[jax.Array, dict]:
+    b = x.shape[0]
+    nh = cfg.n_heads
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xc, conv_state = _conv1d(p["conv"], h, cache["conv"])
+    w_pre = linear(p["w_gates"], xc)[:, 0]                # (B, 4D)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, hn, m = _slstm_cell(w_pre, p["r_gates"], state, nh)
+    y = hn[:, None].astype(x.dtype)
+    mid = x + y
+    ff = linear(p["ff_down"], jax.nn.gelu(linear(
+        p["ff_up"], rms_norm(mid, p["ffn_norm"], cfg.norm_eps)
+    ).astype(jnp.float32)).astype(x.dtype))
+    return y + ff, {"c": c, "n": n, "h": hn, "m": m, "conv": conv_state}

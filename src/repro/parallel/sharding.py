@@ -1,0 +1,219 @@
+"""Logical-axis sharding rules -> NamedShardings for every tree we lower.
+
+Model weights carry *logical* axis names in their WeightSpec
+(``embed/vocab/heads/kv_heads/ff/expert``).  This module maps them onto the
+production mesh:
+
+  * ``model`` axis: tensor parallelism (vocab, heads, ff) and expert
+    parallelism (expert axis) — EP means expert matrices are never split
+    across quantization superblocks (DESIGN.md §3).
+  * ``data`` (+ ``pod``) axes: batch sharding; in training additionally
+    FSDP-shards the ``embed`` axis of the weights (ZeRO-style).
+  * Every assignment is divisibility-checked and falls back to replication
+    (GSPMD would pad silently; we prefer explicit, even shardings).
+
+Quantized weights (QTensor pytrees) shard field-wise: the packed fields all
+carry N last (sharded like the parent's N axis) and superblocks S first
+(sharded like the parent's K axis when S divides the mesh axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..core.qtensor import QTensor
+from ..models import spec as mspec
+from ..models import stacking
+
+# logical axis -> mesh axis (serving / inference)
+SERVE_RULES: dict = {
+    "vocab": "model", "heads": "model", "ff": "model", "expert": "model",
+    "kv_heads": "model", "embed": None, "expert_ff": None,
+}
+# training additionally FSDP-shards the embed axis across data(+pod)
+TRAIN_RULES: dict = dict(SERVE_RULES, embed="__fsdp__")
+# serving variant for models whose quantized weights exceed HBM when only
+# TP/EP-sharded (e.g. arctic-480b decode): weights also shard their embed
+# (contraction) axis across the data axes; at decode batch sizes the extra
+# partial-sum all-reduce is tiny vs the 16x weight-memory saving (PERF B2).
+SERVE_FSDP_RULES: dict = dict(SERVE_RULES, embed="__fsdp__")
+# PERF B3: shard the per-expert FFN axis across data instead of the embed
+# (contraction) axis — gate/up outputs and down's contraction stay aligned,
+# so no dequantized-weight gathers are ever needed; the only collective is
+# a tiny partial-sum all-reduce of (tokens x d_model) after down_exps.
+SERVE_ETP_RULES: dict = dict(SERVE_RULES, expert_ff="__fsdp__")
+
+
+def _mesh_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _assign(dim: int, logical, mesh: Mesh, rules: dict):
+    mesh_axis = rules.get(logical)
+    if mesh_axis == "__fsdp__":
+        mesh_axis = data_axes(mesh)
+    if mesh_axis is None:
+        return None
+    if dim % _mesh_size(mesh, mesh_axis) != 0:
+        return None
+    return mesh_axis
+
+
+def spec_partition(s: mspec.WeightSpec, mesh: Mesh, rules: dict,
+                   stacked: bool) -> P:
+    parts = [_assign(d, a, mesh, rules) for d, a in zip(s.shape, s.axes)]
+    # never two dims on the same mesh axis: keep the later (output) one
+    seen: set = set()
+    for i in reversed(range(len(parts))):
+        key = parts[i] if not isinstance(parts[i], tuple) else parts[i]
+        if parts[i] is None:
+            continue
+        flat = parts[i] if isinstance(parts[i], tuple) else (parts[i],)
+        if any(f in seen for f in flat):
+            parts[i] = None
+        else:
+            seen.update(flat)
+    if stacked:
+        parts = [None] + parts
+    return P(*parts)
+
+
+def _qtensor_partition(qt_shape: tuple, fmt_block: int, pspec: P,
+                       mesh: Mesh, num_sb: int, stacked: bool) -> dict:
+    """Partition for each packed field given the parent's PartitionSpec."""
+    parts = list(pspec) + [None] * (len(qt_shape) + (1 if stacked else 0)
+                                    - len(pspec))
+    off = 1 if stacked else 0
+    lead = parts[: off + len(qt_shape) - 2]
+    k_part = parts[off + len(qt_shape) - 2]
+    n_part = parts[off + len(qt_shape) - 1]
+    if k_part is not None and num_sb % _mesh_size(mesh, k_part) != 0:
+        k_part = None  # superblock axis must shard evenly
+    return {"lead": lead, "k": k_part, "n": n_part}
+
+
+def tree_shardings(tree: dict[str, Any], cfg: ModelConfig, mesh: Mesh,
+                   *, rules: dict | None = None,
+                   plan: stacking.StackPlan | None = None) -> dict[str, Any]:
+    """NamedSharding tree matching a (possibly stacked/quantized) param tree.
+
+    Keys may be per-layer (``dec/L003/...``) or stacked group keys
+    (``dec/G01/u0/...``); each resolves to its WeightSpec for logical axes.
+    """
+    specs = mspec.model_specs(cfg)
+    rules = SERVE_RULES if rules is None else rules
+    key_to_spec: dict[str, tuple[mspec.WeightSpec, bool]] = {}
+    for key in tree:
+        if "/G" in key and plan is not None:
+            stack = key.split("/")[0]
+            gtok, utok, *rest = key.split("/")[1:]
+            gi = int(gtok[1:])
+            u = int(utok[1:])
+            groups = (plan.dec_groups if stack == "dec" else plan.enc_groups)
+            layer = groups[gi].layer(0, u)
+            spath = mspec.layer_prefix(stack, layer) + "/" + "/".join(rest)
+            key_to_spec[key] = (specs[spath], True)
+        else:
+            key_to_spec[key] = (specs[key], False)
+
+    out: dict[str, Any] = {}
+    for key, leaf in tree.items():
+        s, stacked = key_to_spec[key]
+        pspec = spec_partition(s, mesh, rules, stacked)
+        if isinstance(leaf, QTensor):
+            qp = _qtensor_partition(s.shape, leaf.format.block, pspec, mesh,
+                                    leaf.num_superblocks, stacked)
+            fields = {}
+            for name, arr in leaf.fields.items():
+                ndim = len(arr.shape)
+                # (lead..., S, X..., N)
+                n_x = ndim - len(qp["lead"]) - 2
+                fparts = qp["lead"] + [qp["k"]] + [None] * n_x + [qp["n"]]
+                fields[name] = NamedSharding(mesh, P(*fparts))
+            out[key] = QTensor(fields, leaf.fmt, leaf.shape)
+        else:
+            out[key] = NamedSharding(mesh, pspec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# activations / batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_partition(mesh: Mesh, batch_size: int):
+    axes = data_axes(mesh)
+    if axes and batch_size % _mesh_size(mesh, axes) == 0:
+        return axes
+    # try data only (pod replicated)
+    if "data" in mesh.shape and batch_size % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def input_shardings(tree: dict[str, Any], cfg: ModelConfig,
+                    mesh: Mesh) -> dict[str, Any]:
+    """Shardings for a batch-input spec tree (tokens/labels/patches/...)."""
+    out = {}
+    for key, leaf in tree.items():
+        b = leaf.shape[0]
+        bp = batch_partition(mesh, b)
+        parts = [bp] + [None] * (len(leaf.shape) - 1)
+        out[key] = NamedSharding(mesh, P(*parts))
+    return out
+
+
+def cache_shardings(tree: dict[str, Any], cfg: ModelConfig,
+                    mesh: Mesh) -> dict[str, Any]:
+    """Decode-cache shardings: batch on data axes, heads on model when even.
+
+    Cache layouts (see transformer.layer_cache_specs):
+      attn k/v: (B, L, n_kv, hd); pos: (B, L); mla c_kv/k_rope: (B, L, r);
+      rglru h: (B, lru); conv: (B, W-1, D); mlstm C: (B, H, hd, hd) ...
+      cross_k/v: (B, T_enc, n_kv, hd)
+    """
+    import re as _re
+    msize = mesh.shape.get("model", 1)
+    out = {}
+    for key, leaf in tree.items():
+        shape = tuple(leaf.shape)
+        stacked = bool(_re.search(r"/G\d+/u\d+/", key))
+        body = shape[1:] if stacked else shape   # drop repeats dim
+        bp = batch_partition(mesh, body[0])
+        parts: list = [bp] + [None] * (len(body) - 1)
+        name = key.rsplit("/", 1)[-1]
+        if name in ("k", "v", "cross_k", "cross_v") and len(body) == 4:
+            if body[2] % msize == 0:
+                parts[2] = "model"
+            elif body[1] % msize == 0:
+                # few KV heads (GQA/MQA): shard the sequence dim instead
+                # (flash-decoding style partial-attention partitioning)
+                parts[1] = "model"
+        elif name in ("c_kv", "k_rope", "pos") and len(body) >= 2:
+            if body[1] % msize == 0:
+                parts[1] = "model"  # MLA latent cache: sequence-sharded
+        elif name == "C" and len(body) == 4 and body[1] % msize == 0:
+            parts[1] = "model"
+        elif name in ("h", "conv") and body[-1] % msize == 0 and bp is None:
+            # recurrent state: shard the wide state dim if batch can't shard
+            parts[-1] = "model"
+        if stacked:
+            parts = [None] + parts
+        out[key] = NamedSharding(mesh, P(*parts))
+    return out
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

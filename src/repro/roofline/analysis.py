@@ -1,0 +1,219 @@
+"""Roofline terms from a compiled (dry-run) executable.
+
+  compute   = per-device HLO FLOPs / peak FLOP/s
+  memory    = per-device HLO bytes accessed / HBM bandwidth
+  collective= sum over collectives of (result bytes x op factor) / link bw,
+              split ICI vs DCI by whether the replica groups cross pods.
+
+``cost_analysis`` on a partitioned executable reports *per-partition*
+numbers (verified empirically — see DESIGN.md §6), so no division by chip
+count is applied to flops/bytes.  Collective result shapes in the
+post-SPMD HLO are likewise per-partition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+from . import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^=]*?\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+# iota form: replica_groups=[G,S]<=[d0,d1,...]T(p0,p1,...) or <=[N]
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def _iota_groups(m) -> "list[list[int]]":
+    import numpy as np
+    g, s = int(m.group(1)), int(m.group(2))
+    dims = [int(x) for x in m.group(3).split(",")]
+    ids = np.arange(int(np.prod(dims))).reshape(dims)
+    if m.group(4):
+        perm = [int(x) for x in m.group(4).split(",")]
+        ids = ids.transpose(perm)
+    return ids.reshape(g, s).tolist()
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_ici: float
+    bytes_dci: float
+    by_op_bytes: dict
+    weighted_bytes: float  # op-factor-weighted, ICI-equivalent
+
+
+def parse_collectives(hlo_text: str, pod_size: int | None = None) -> CollectiveStats:
+    counts: dict = defaultdict(int)
+    by_op: dict = defaultdict(float)
+    bytes_ici = bytes_dci = weighted = 0.0
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_text, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_text)
+        counts[op] += 1
+        by_op[op] += nbytes
+        factor = hw.COLLECTIVE_FACTOR[op]
+        # does this collective cross the pod boundary?
+        crosses = False
+        tail = hlo_text[m.end(): m.end() + 2000]
+        if pod_size:
+            gm = _GROUPS_RE.search(tail)
+            im = _IOTA_RE.search(tail)
+            if gm:
+                ids = [int(x) for x in gm.group(1).split(",") if x.strip()]
+                if ids and (min(ids) // pod_size) != (max(ids) // pod_size):
+                    crosses = True
+            elif im:
+                for grp in _iota_groups(im):
+                    if grp and (min(grp) // pod_size) != (max(grp) // pod_size):
+                        crosses = True
+                        break
+        if crosses:
+            bytes_dci += nbytes * factor
+        else:
+            bytes_ici += nbytes * factor
+        weighted += nbytes * factor
+    return CollectiveStats(dict(counts), bytes_ici, bytes_dci, dict(by_op),
+                           weighted)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per device
+    bytes_hbm: float           # per device
+    collectives: CollectiveStats
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float         # analytic useful flops (global)
+    n_devices: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """No-overlap upper bound on step time."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful flops / (peak x bound step time)."""
+        if self.step_s <= 0:
+            return 0.0
+        return (self.model_flops / self.n_devices / self.step_s
+                / hw.PEAK_FLOPS_BF16)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "bytes_per_dev": self.bytes_hbm,
+            "coll_bytes_ici": self.collectives.bytes_ici,
+            "coll_bytes_dci": self.collectives.bytes_dci,
+            "coll_counts": self.collectives.counts,
+            "coll_by_op_bytes": self.collectives.by_op_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "n_devices": self.n_devices,
+        }
+
+
+def analyze(compiled, model_flops: float, n_devices: int,
+            pod_size: int | None = None) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    coll = parse_collectives(compiled.as_text(), pod_size)
+    compute_s = flops / hw.PEAK_FLOPS_BF16
+    memory_s = nbytes / hw.HBM_BW
+    collective_s = (coll.bytes_ici / hw.ICI_BW + coll.bytes_dci / hw.DCI_BW)
+    return Roofline(flops, nbytes, coll, compute_s, memory_s, collective_s,
+                    model_flops, n_devices)
+
+
+def memory_per_device(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    return {
+        "argument_gib": ma.argument_size_in_bytes / 1024**3,
+        "output_gib": ma.output_size_in_bytes / 1024**3,
+        "temp_gib": ma.temp_size_in_bytes / 1024**3,
+        "alias_gib": ma.alias_size_in_bytes / 1024**3,
+        "total_gib": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                      + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+                      ) / 1024**3,
+    }
+
+
+def model_flops_estimate(cfg, shape, active_params: int) -> float:
+    """Analytic 'useful' FLOPs per step (global).
+
+    train: 6*N_active*D; prefill: 2*N_active*D (+attention quadratic term);
+    decode: 2*N_active*B plus cache-read attention flops.
+    """
+    b, t = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        base = 6.0 * active_params * b * t
+    elif shape.kind == "prefill":
+        base = 2.0 * active_params * b * t
+    else:
+        base = 2.0 * active_params * b
+    # attention score/value flops (dense layers only, rough)
+    attn = 0.0
+    nh, hd = cfg.n_heads, cfg.head_dim
+    for layer in range(cfg.n_layers):
+        kind = cfg.block_kind(layer)
+        if kind not in ("attn", "local_attn"):
+            continue
+        ctx = t if kind == "attn" else min(t, cfg.window or t)
+        if shape.kind == "train":
+            attn += 6.0 * b * t * ctx * nh * hd / (1 if kind == "attn" else 1)
+            if kind == "attn":
+                attn /= 2  # causal
+        elif shape.kind == "prefill":
+            attn += 2.0 * b * t * ctx * nh * hd * (0.5 if kind == "attn" else 1)
+        else:
+            attn += 4.0 * b * ctx * nh * hd
+    return base + attn

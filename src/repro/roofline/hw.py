@@ -1,0 +1,18 @@
+"""TPU v5e hardware constants for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12       # per chip, bf16
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (intra-pod)
+DCI_BW = 25e9                  # bytes/s effective inter-pod (data-center links)
+VMEM_BYTES = 128 * 1024 * 1024  # ~128 MiB vector memory
+HBM_BYTES = 16 * 1024**3       # 16 GiB per chip
+
+# effective data volume multiplier per collective (ring algorithms):
+#   all-reduce moves ~2x the buffer; gather/scatter ~1x
+COLLECTIVE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}

@@ -1,0 +1,188 @@
+"""Segment-corrected cost analysis for scanned programs.
+
+XLA's ``cost_analysis`` counts a ``while`` (scan) body **once** (verified
+empirically — see EXPERIMENTS.md §Dry-run), so a scanned 80-layer model
+under-reports flops/bytes/collectives by ~80x.  Correction: every stack
+group's unit body is lowered *separately* under the same mesh & shardings,
+its per-device costs multiplied by ``repeats - 1`` (the full program already
+counts each body once) and added to the full program's numbers.  Training
+bodies are lowered as fwd+bwd with the same remat policy as the real step,
+so recompute flops are included.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import spec as mspec
+from ..models import stacking, transformer
+from ..parallel import sharding as shard
+from . import analysis
+
+
+@dataclasses.dataclass
+class SegmentCost:
+    name: str
+    multiplier: int
+    flops: float
+    bytes_hbm: float
+    coll_ici: float
+    coll_dci: float
+    counts: dict
+
+
+def _unit_specs(full_specs: dict, stack: str, g: stacking.Group) -> dict:
+    out = {}
+    for u in range(g.unit):
+        prefix = mspec.layer_prefix(stack, g.layer(0, u))
+        out[u] = {k[len(prefix) + 1:]: v for k, v in full_specs.items()
+                  if k.startswith(prefix + "/")}
+    return out
+
+
+def _unit_shardings(full_shards: dict, stack: str, g: stacking.Group) -> dict:
+    return _unit_specs(full_shards, stack, g)
+
+
+def _cost_of(compiled, pod_size) -> tuple[float, float, float, float, dict]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = analysis.parse_collectives(compiled.as_text(), pod_size)
+    return (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)),
+            coll.bytes_ici, coll.bytes_dci, coll.counts)
+
+
+def group_body_costs(cfg: ModelConfig, mesh, plan: stacking.StackPlan,
+                     param_specs: dict, param_shards: dict, *,
+                     kind: str, batch: int, seq: int,
+                     cache_specs: dict | None = None,
+                     cache_shards: dict | None = None,
+                     pod_size: int | None = None,
+                     act_shard=None,
+                     dtype=jnp.bfloat16) -> list[SegmentCost]:
+    """Per-device cost of one unit body per group, for every stack."""
+    segs: list[SegmentCost] = []
+    bp = shard.batch_partition(mesh, batch)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    x_shard = act_shard or NamedSharding(mesh, P(bp, None, None))
+    if kind == "decode":  # (B, 1, D) activations: no sequence sharding
+        x_shard = NamedSharding(mesh, P(bp, None, None))
+
+    def wsc(x):
+        return jax.lax.with_sharding_constraint(x, x_shard)
+
+    enc_hidden_spec = None
+    if cfg.is_encdec and kind != "enc":
+        enc_hidden_spec = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_tokens, cfg.d_model), dtype)
+
+    for stack, groups in (("dec", plan.dec_groups), ("enc", plan.enc_groups)):
+        if stack == "enc" and kind == "decode":
+            continue  # encoder does not run at decode time
+        t = seq if kind != "decode" else 1
+        if stack == "enc":
+            t = cfg.frontend_tokens
+        x_spec = jax.ShapeDtypeStruct((batch, t, cfg.d_model), dtype)
+        positions = jnp.arange(t)[None, :]
+        for gi, g in enumerate(groups):
+            if g.repeats <= 1:
+                continue
+            uspecs = _unit_specs(param_specs, stack, g)
+            ushards = _unit_shardings(param_shards, stack, g)
+            enc_h = enc_hidden_spec if stack == "dec" else None
+
+            eh_args = () if enc_h is None or stack != "dec" else (enc_h,)
+            eh_shard = () if not eh_args else (x_shard,)
+
+            if kind == "train":
+                def fwd(x, ups, *eh, _g=g, _stack=stack):
+                    eh = eh[0] if eh else None
+                    for u in range(_g.unit):
+                        x, _ = transformer.apply_layer(
+                            cfg, ups[u], _g.layer(0, u), x,
+                            positions=positions, enc_hidden=eh,
+                            causal=(_stack == "dec"))
+                        x = wsc(x)
+                    return jnp.sum(x.astype(jnp.float32))
+
+                fwd = jax.checkpoint(
+                    fwd, policy=jax.checkpoint_policies.nothing_saveable)
+                body = jax.value_and_grad(fwd, argnums=(0, 1))
+                args = (x_spec, uspecs) + eh_args
+                in_sh = (x_shard, ushards) + eh_shard
+                # grads keep the params' (FSDP) shardings -> reduce-scatter,
+                # exactly as the real step's optimizer consumes them
+                out_sh = (NamedSharding(mesh, P()), (x_shard, ushards))
+            elif kind == "prefill":
+                def body(x, ups, *eh, _g=g, _stack=stack):
+                    eh = eh[0] if eh else None
+                    caches = {}
+                    for u in range(_g.unit):
+                        if _stack == "dec":
+                            x, c = transformer.prefill_layer(
+                                cfg, ups[u], _g.layer(0, u), x, seq,
+                                enc_hidden=eh)
+                            caches[u] = c
+                        else:
+                            x, _ = transformer.apply_layer(
+                                cfg, ups[u], _g.layer(0, u), x,
+                                positions=positions, causal=False)
+                        x = wsc(x)
+                    return x, caches
+                args = (x_spec, uspecs) + eh_args
+                in_sh = (x_shard, ushards) + eh_shard
+            else:  # decode
+                ucache = _unit_specs(cache_specs, stack, g) \
+                    if cache_specs else {u: {} for u in range(g.unit)}
+                ucshard = _unit_specs(cache_shards, stack, g) \
+                    if cache_shards else {u: {} for u in range(g.unit)}
+                pos_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+
+                def body(x, ups, ucs, pos, _g=g):
+                    outs = {}
+                    for u in range(_g.unit):
+                        x, c = transformer.decode_layer(
+                            cfg, ups[u], _g.layer(0, u), x, dict(ucs[u]), pos)
+                        outs[u] = c
+                    return x, outs
+                args = (jax.ShapeDtypeStruct((batch, 1, cfg.d_model), dtype),
+                        uspecs, ucache, pos_spec)
+                in_sh = (x_shard, ushards, ucshard,
+                         NamedSharding(mesh, P(bp)))
+
+            with mesh:
+                if kind == "train":
+                    jitted = jax.jit(body, in_shardings=in_sh,
+                                     out_shardings=out_sh)
+                else:
+                    jitted = jax.jit(body, in_shardings=in_sh)
+                compiled = jitted.lower(*args).compile()
+            fl, by, ci, cd, counts = _cost_of(compiled, pod_size)
+            segs.append(SegmentCost(f"{stack}/G{gi:02d}", g.repeats - 1,
+                                    fl, by, ci, cd, counts))
+    return segs
+
+
+def corrected_roofline(full_compiled, segs: list[SegmentCost],
+                       model_flops: float, n_devices: int,
+                       pod_size: int | None = None) -> analysis.Roofline:
+    base = analysis.analyze(full_compiled, model_flops, n_devices, pod_size)
+    flops = base.flops + sum(s.flops * s.multiplier for s in segs)
+    nbytes = base.bytes_hbm + sum(s.bytes_hbm * s.multiplier for s in segs)
+    ici = base.collectives.bytes_ici + sum(
+        s.coll_ici * s.multiplier for s in segs)
+    dci = base.collectives.bytes_dci + sum(
+        s.coll_dci * s.multiplier for s in segs)
+    from . import hw
+    coll = dataclasses.replace(base.collectives, bytes_ici=ici, bytes_dci=dci)
+    return analysis.Roofline(
+        flops, nbytes, coll,
+        flops / hw.PEAK_FLOPS_BF16, nbytes / hw.HBM_BW,
+        ici / hw.ICI_BW + dci / hw.DCI_BW,
+        model_flops, n_devices)

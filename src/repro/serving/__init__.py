@@ -1,0 +1,2 @@
+from .engine import Engine, Request
+from .sampler import SamplerConfig, sample

@@ -1,0 +1,33 @@
+"""Token samplers: greedy / temperature / top-p (the paper's decoding
+configuration is temperature=0.6, top_p=0.95, max 32k generated tokens)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.6
+    top_p: float = 0.95
+    greedy: bool = False
+
+
+def sample(logits: jax.Array, key: jax.Array,
+           cfg: SamplerConfig = SamplerConfig()) -> jax.Array:
+    """logits: (B, V) -> tokens (B,) int32."""
+    if cfg.greedy or cfg.temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_p < 1.0:
+        sorted_l = jnp.sort(lf, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p
+        cutoff_idx = jnp.sum(csum < cfg.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx, axis=-1)
+        lf = jnp.where(lf < cutoff, -jnp.inf, lf)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

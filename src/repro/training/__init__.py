@@ -1,0 +1,2 @@
+from . import optimizer, grad_compression
+from .train_loop import make_train_step

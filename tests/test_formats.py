@@ -1,0 +1,109 @@
+"""K-quant format unit + property tests (pack/unpack, round-trip error)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize
+from repro.core.formats import (FORMATS, pack_1bit, pack_2bit, pack_nibbles,
+                                unpack_1bit, unpack_2bit, unpack_nibbles)
+
+# empirical per-format relative-error ceilings on N(0,1) weights
+ERR_CEILING = {"q8_0": 0.01, "q6_k": 0.03, "q5_k": 0.06, "q4_k": 0.11,
+               "q3_k": 0.21, "q2_k": 0.42}
+
+
+@pytest.mark.parametrize("fmt", list(FORMATS))
+def test_round_trip_error(fmt, rng):
+    w = jnp.asarray(rng.normal(size=(1024, 96)).astype(np.float32))
+    qt = quantize(w, fmt)
+    wd = qt.dequantize()
+    rel = float(jnp.linalg.norm(wd - w) / jnp.linalg.norm(w))
+    assert rel < ERR_CEILING[fmt], (fmt, rel)
+
+
+def test_error_ordering(rng):
+    """More bits -> strictly less error (paper's accuracy-compression
+    trade-off, Table 3)."""
+    w = jnp.asarray(rng.normal(size=(2048, 64)).astype(np.float32))
+    errs = {}
+    for fmt in FORMATS:
+        qt = quantize(w, fmt)
+        errs[fmt] = float(jnp.linalg.norm(qt.dequantize() - w))
+    order = ["q8_0", "q6_k", "q5_k", "q4_k", "q3_k", "q2_k"]
+    for a, b in zip(order, order[1:]):
+        assert errs[a] < errs[b], (a, b, errs)
+
+
+@pytest.mark.parametrize("fmt", list(FORMATS))
+def test_bits_per_weight(fmt, rng):
+    k, n = 1536, 32
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    qt = quantize(w, fmt)
+    bpw = qt.packed_bytes() * 8 / (k * n)
+    assert abs(bpw - FORMATS[fmt].tpu_bits) < 1e-6, (fmt, bpw)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_nibbles_roundtrip(seed):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.integers(0, 16, (2, 256, 3)).astype(np.uint8))
+    assert (unpack_nibbles(pack_nibbles(q)) == q).all()
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_2bit_roundtrip(seed):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.integers(0, 4, (1, 256, 5)).astype(np.uint8))
+    assert (unpack_2bit(pack_2bit(q)) == q).all()
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_1bit_roundtrip(seed):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.integers(0, 2, (4, 256, 2)).astype(np.uint8))
+    assert (unpack_1bit(pack_1bit(q)) == q).all()
+
+
+@given(st.sampled_from(list(FORMATS)),
+       st.integers(1, 4), st.integers(8, 700), st.integers(1, 64),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_quantize_any_shape(fmt, lead, k, n, seed):
+    """Property: quantize handles any (lead, K, N) incl. non-block-multiple
+    K, and dequantize returns the exact logical shape with finite values."""
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.normal(size=(lead, k, n)).astype(np.float32))
+    qt = quantize(w, fmt)
+    wd = qt.dequantize()
+    assert wd.shape == w.shape
+    assert bool(jnp.all(jnp.isfinite(wd)))
+
+
+@given(st.sampled_from(list(FORMATS)), st.floats(1e-3, 1e3),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_scale_invariance(fmt, scale, seed):
+    """Relative error is (approximately) invariant to weight scale — the
+    block scales are fp16, so any fixed tensor scale factors out."""
+    r = np.random.default_rng(seed)
+    w = r.normal(size=(512, 16)).astype(np.float32)
+    e1 = _rel(jnp.asarray(w), fmt)
+    e2 = _rel(jnp.asarray(w * scale), fmt)
+    assert abs(e1 - e2) < 0.15 * max(e1, 1e-3), (e1, e2)
+
+
+def _rel(w, fmt):
+    qt = quantize(w, fmt)
+    return float(jnp.linalg.norm(qt.dequantize() - w) / jnp.linalg.norm(w))
+
+
+def test_zero_weights():
+    for fmt in FORMATS:
+        w = jnp.zeros((512, 8), jnp.float32)
+        wd = quantize(w, fmt).dequantize()
+        assert float(jnp.max(jnp.abs(wd))) == 0.0, fmt

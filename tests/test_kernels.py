@@ -1,0 +1,89 @@
+"""Pallas fused dequant-matmul kernels vs the pure-jnp oracle.
+
+Interpret-mode execution on CPU; shape/dtype sweeps per format as required
+by the kernel deliverable.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize
+from repro.kernels import ops, qmatmul_ref
+
+FORMATS = ["q8_0", "q6_k", "q5_k", "q4_k", "q3_k", "q2_k"]
+SHAPES = [(16, 512, 128), (1, 256, 256), (33, 768, 384), (8, 300, 128),
+          (128, 1024, 128)]
+
+
+def _check(fmt, m, k, n, dtype, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)).astype(dtype)
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    qt = quantize(w, fmt)
+    y = ops.PALLAS_MATMULS[fmt](x, qt, **kw)
+    y_ref = qmatmul_ref(x, qt)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32),
+        rtol=2e-2, atol=2e-2 * np.abs(np.asarray(y_ref)).max())
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_kernel_matches_ref(fmt, shape):
+    _check(fmt, *shape, jnp.bfloat16)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(fmt, dtype):
+    _check(fmt, 8, 512, 128, dtype)
+
+
+@pytest.mark.parametrize("fmt", ["q4_k", "q3_k"])
+@pytest.mark.parametrize("bm,bn,bk", [(32, 128, 256), (128, 256, 512),
+                                      (8, 128, 256)])
+def test_kernel_block_sizes(fmt, bm, bn, bk):
+    _check(fmt, 64, 1024, 256, jnp.bfloat16, bm=bm, bn=bn, target_bk=bk)
+
+
+@given(st.sampled_from(FORMATS), st.integers(1, 40),
+       st.integers(1, 3), st.integers(1, 3), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_kernel_property(fmt, m, ks, ns, seed):
+    """Random (m, 256*ks, 128*ns) shapes always match the oracle."""
+    _check(fmt, m, 256 * ks, 128 * ns, jnp.bfloat16, seed=seed)
+
+
+def test_batched_x_leading_dims():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 5, 512)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(512, 128)).astype(np.float32))
+    qt = quantize(w, "q4_k")
+    y = ops.PALLAS_MATMULS["q4_k"](x, qt)
+    assert y.shape == (2, 5, 128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(qmatmul_ref(x, qt)),
+                               rtol=2e-2, atol=1e-2)
+
+
+def test_qmatmul_dispatch_xla_equals_pallas():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(16, 512)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(512, 128)).astype(np.float32))
+    qt = quantize(w, "q6_k")
+    y_xla = ops.qmatmul(x, qt, impl="xla")
+    y_pal = ops.qmatmul(x, qt, impl="pallas")
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_pal),
+                               rtol=2e-2, atol=1e-2)
+
+
+def test_qgather_columns():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(512, 64)).astype(np.float32))
+    qt = quantize(w, "q4_k")
+    idx = jnp.asarray([3, 7, 63, 0])
+    cols = ops.qgather_columns(qt, idx)
+    full = qt.dequantize(jnp.float32)
+    np.testing.assert_allclose(np.asarray(cols),
+                               np.asarray(full[:, idx]), rtol=1e-6)

@@ -1,0 +1,97 @@
+"""Policy engine: Table 7 fidelity, DQ3_K_M layer rules, fallbacks."""
+
+import pytest
+from collections import Counter
+
+from repro.configs import get_config
+from repro.core.policy import (POLICIES, dq3_down_exps, get_policy,
+                               largest_remainder, mix)
+from repro.models.spec import model_specs, resolve_format, role_layer_tables
+
+
+def test_dq3_down_exps_rule_on_deepseek():
+    """§3: 58 MoE layers -> exactly 2 q6_k / 12 q4_k / 44 q3_k
+    (3.4% / 20.7% / 75.9%)."""
+    rule = dq3_down_exps()
+    fmts = [rule(i, 58) for i in range(58)]
+    c = Counter(fmts)
+    assert c == {"q3_k": 44, "q4_k": 12, "q6_k": 2}
+    assert fmts[0] == fmts[1] == "q6_k"
+
+
+def test_dq3_distribution_via_specs():
+    cfg = get_config("deepseek-v3-671b")
+    specs = model_specs(cfg)
+    tables = role_layer_tables(specs)
+    pol = get_policy("DQ3_K_M")
+    c = Counter(resolve_format(s, pol, tables)
+                for s in specs.values() if s.role == "ffn_down_exps")
+    n = sum(c.values())
+    assert n == 58
+    assert abs(c["q3_k"] / n - 0.759) < 0.005
+    assert abs(c["q4_k"] / n - 0.207) < 0.005
+    assert abs(c["q6_k"] / n - 0.034) < 0.005
+
+
+TABLE7_DQ3 = {
+    "output": "q6_k", "token_embd": "q4_k", "attn_kv_a_mqa": "q6_k",
+    "attn_kv_b": "q6_k", "attn_output": "q4_k", "attn_q_a": "q4_k",
+    "attn_q_b": "q4_k", "ffn_down": "q6_k", "ffn_gate": "q4_k",
+    "ffn_up": "q4_k", "ffn_down_shexp": "q6_k", "ffn_gate_exps": "q3_k",
+    "ffn_gate_shexp": "q4_k", "ffn_up_exps": "q3_k", "ffn_up_shexp": "q4_k",
+}
+TABLE7_Q3KM = {
+    "output": "q6_k", "token_embd": "q3_k", "attn_kv_a_mqa": "q3_k",
+    "attn_kv_b": "q3_k", "attn_output": "q4_k", "ffn_down": "q5_k",
+    "ffn_down_exps": "q4_k", "ffn_gate_exps": "q3_k",
+}
+
+
+@pytest.mark.parametrize("policy,table", [("DQ3_K_M", TABLE7_DQ3),
+                                          ("Q3_K_M", TABLE7_Q3KM)])
+def test_table7_rows(policy, table):
+    pol = get_policy(policy)
+    for role, want in table.items():
+        assert pol.resolve(role, 5, 58) == want, role
+
+
+def test_role_fallbacks():
+    """GQA q/k/v map onto MLA classes (DESIGN.md §5): DQ3 protects kv."""
+    pol = get_policy("DQ3_K_M")
+    assert pol.resolve("attn_k", 0, 10) == "q6_k"   # -> attn_kv_b
+    assert pol.resolve("attn_v", 0, 10) == "q6_k"
+    assert pol.resolve("attn_q", 0, 10) == "q4_k"   # -> attn_q_b
+    assert pol.resolve("norm", 0, 10) == "bf16"     # float roles pass through
+
+
+def test_mix_exact_counts():
+    rule = mix([("q6_k", 0.466), ("q4_k", 0.534)], "spread")
+    fmts = [rule(i, 58) for i in range(58)]
+    c = Counter(fmts)
+    assert c["q6_k"] == round(0.466 * 58)
+    # spread: no run of q6_k longer than 2
+    runs = max(len(list(v)) for _, v in __import__("itertools").groupby(fmts))
+    assert runs <= 3
+
+
+def test_mix_first_strategy():
+    rule = mix([("q3_k", 0.052), ("q2_k", 0.948)], "first")
+    fmts = [rule(i, 58) for i in range(58)]
+    assert fmts[:3] == ["q3_k"] * 3
+    assert set(fmts[3:]) == {"q2_k"}
+
+
+def test_largest_remainder_sums():
+    for fracs in ([0.5, 0.5], [0.466, 0.534], [0.052, 0.948], [0.2] * 5):
+        for n in (7, 35, 58, 61):
+            assert sum(largest_remainder(fracs, n)) == n
+
+
+def test_all_policies_resolve_all_roles():
+    from repro.core.policy import ALL_QUANT_ROLES
+    for name, pol in POLICIES.items():
+        if pol.unquantized:
+            continue
+        for role in ALL_QUANT_ROLES:
+            fmt = pol.resolve(role, 0, 4)
+            assert fmt, (name, role)

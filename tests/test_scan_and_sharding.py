@@ -1,0 +1,105 @@
+"""Scan-mode equivalence, group detection, and sharding-rule unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS, get_config
+from repro.core.policy import POLICIES
+from repro.models import stacking
+from repro.models.model import Model
+from repro.models.spec import init_params, model_specs, param_shape_specs
+from repro.parallel import sharding as shard
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "deepseek-v3-671b",
+                                  "xlstm-1.3b", "recurrentgemma-2b",
+                                  "seamless-m4t-large-v2"])
+def test_scan_equals_eager(arch):
+    cfg = CONFIGS[arch].reduced()
+    params = init_params(cfg, seed=0, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)))}
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(rng.normal(
+            size=(2, cfg.frontend_tokens, cfg.frontend_dim)).astype(np.float32))
+    le, _ = Model(cfg, dtype=jnp.float32).forward(params, batch)
+    sp = stacking.plan(cfg, None)
+    sparams = stacking.stack_tree(params, sp)
+    ls, _ = Model(cfg, scan=True, plan=sp, dtype=jnp.float32).forward(
+        sparams, batch)
+    rel = float(jnp.max(jnp.abs(le - ls)) / (jnp.max(jnp.abs(le)) + 1e-9))
+    assert rel < 5e-3, rel
+
+
+def test_group_detection_periods():
+    # gemma2: alternating local/global -> one group of unit 2
+    sp = stacking.plan(get_config("gemma2-9b"), None)
+    assert len(sp.dec_groups) == 1
+    assert sp.dec_groups[0].unit == 2 and sp.dec_groups[0].repeats == 21
+    # xlstm: 7 mLSTM + 1 sLSTM octet
+    sp = stacking.plan(get_config("xlstm-1.3b"), None)
+    assert sp.dec_groups[0].unit == 8 and sp.dec_groups[0].repeats == 6
+    # deepseek under DQ3_K_M: format-aware grouping with period 5
+    sp = stacking.plan(get_config("deepseek-v3-671b"), POLICIES["DQ3_K_M"])
+    assert any(g.unit == 5 for g in sp.dec_groups)
+    # every layer covered exactly once
+    covered = [l for g in sp.dec_groups for l in g.layers]
+    assert covered == list(range(61))
+
+
+def test_groups_cover_all_layers_all_archs():
+    for name, cfg in CONFIGS.items():
+        for pol in (None, POLICIES["DQ3_K_M"], POLICIES["Q4_K_M"]):
+            sp = stacking.plan(cfg, pol)
+            covered = [l for g in sp.dec_groups for l in g.layers]
+            assert covered == list(range(cfg.n_layers)), (name, pol)
+
+
+def test_stack_tree_roundtrip_values():
+    cfg = CONFIGS["qwen2-1.5b"].reduced()
+    params = init_params(cfg, seed=1)
+    sp = stacking.plan(cfg, None)
+    stacked = stacking.stack_tree(params, sp)
+    g = sp.dec_groups[0]
+    # layer 1's q_proj must be row 1 of the stacked array
+    key = f"dec/G00/u0/q_proj"
+    orig = params["dec/L001/q_proj"]
+    np.testing.assert_array_equal(np.asarray(stacked[key][1]),
+                                  np.asarray(orig))
+
+
+def test_sharding_divisibility_fallback():
+    """Axes that don't divide the mesh fall back to replication."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_config("qwen2-1.5b")
+    specs = param_shape_specs(cfg)
+    sh = shard.tree_shardings(specs, cfg, mesh)
+    assert all(s is not None for s in sh.values())
+
+
+def test_spec_partition_no_axis_reuse():
+    """A mesh axis is never assigned to two dims of one weight."""
+    from jax.sharding import PartitionSpec
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ("deepseek-v3-671b", "arctic-480b"):
+        cfg = get_config(arch)
+        for s in model_specs(cfg).values():
+            p = shard.spec_partition(s, mesh, shard.TRAIN_RULES, False)
+            flat = [a for part in p if part is not None
+                    for a in (part if isinstance(part, tuple) else (part,))]
+            assert len(flat) == len(set(flat)), (s.path, p)
+
+
+def test_quantized_tree_shardings_structure():
+    from repro.core import quantized_param_specs, get_policy
+    from repro.core.qtensor import QTensor
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = CONFIGS["qwen2-1.5b"].reduced()
+    qspecs = quantized_param_specs(cfg, get_policy("DQ3_K_M"))
+    sh = shard.tree_shardings(qspecs, cfg, mesh)
+    for k, v in qspecs.items():
+        if isinstance(v, QTensor):
+            assert isinstance(sh[k], QTensor)
+            assert set(sh[k].fields) == set(v.fields)

@@ -1,0 +1,70 @@
+"""Table 1 / Table 6 reproduction: model sizes, avg bits, memory use."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import get_policy
+from repro.core.size import kv_cache_bytes, model_size, serving_memory
+from repro.models.spec import count_active_params, count_params
+
+# Table 1 (DeepSeek-R1 671B): policy -> (GiB, avg bits)
+TABLE1 = {
+    "Q4_K_M": (377, 4.82),
+    "Q3_K_M": (298, 3.81),
+    "DQ3_K_M": (281, 3.59),
+    "Q2_K_L": (228, 2.91),
+    "UD_Q2_K_XL": (212, 2.70),
+}
+
+
+@pytest.fixture(scope="module")
+def deepseek():
+    return get_config("deepseek-v3-671b")
+
+
+def test_param_count_671b(deepseek):
+    n = count_params(deepseek)
+    assert abs(n / 1e9 - 671.0) < 1.5, n
+    na = count_active_params(deepseek)
+    assert abs(na / 1e9 - 37.5) < 1.5, na
+
+
+@pytest.mark.parametrize("policy,expected", list(TABLE1.items()))
+def test_table1_sizes(deepseek, policy, expected):
+    gib, bits = expected
+    rep = model_size(deepseek, get_policy(policy))
+    assert abs(rep.gib - gib) < 1.5, (policy, rep.gib, gib)
+    assert abs(rep.avg_bits - bits) < 0.02, (policy, rep.avg_bits, bits)
+
+
+def test_size_ordering(deepseek):
+    sizes = [model_size(deepseek, get_policy(p)).gguf_bytes for p in
+             ("Q8_0", "Q4_K_M", "Q3_K_M", "DQ3_K_M", "Q2_K_L", "UD_Q2_K_XL")]
+    assert sizes == sorted(sizes, reverse=True)
+
+
+def test_dq3_fits_single_machine(deepseek):
+    """§4.4: DQ3_K_M fits 8x64GB (910B) and 8x80GB (H100); Q4_K_M only
+    fits 8x80GB."""
+    dq3 = serving_memory(deepseek, get_policy("DQ3_K_M"), context=32768,
+                         n_devices=8)
+    q4 = serving_memory(deepseek, get_policy("Q4_K_M"), context=32768,
+                        n_devices=8)
+    assert dq3["per_device_gib"] < 64, dq3
+    assert q4["per_device_gib"] < 80, q4
+    assert q4["per_device_gib"] > dq3["per_device_gib"]
+
+
+def test_mla_cache_is_compressed(deepseek):
+    """MLA latent cache is ~9x smaller than an equivalent GQA cache."""
+    mla_bytes = kv_cache_bytes(deepseek, batch=1, seq=32768)
+    # hypothetical per-head cache for the same model
+    full = (deepseek.n_layers * 2 * deepseek.n_kv_heads * deepseek.head_dim
+            * 32768 * 2)
+    assert mla_bytes * 8 < full
+
+
+def test_tpu_layout_overhead_small(deepseek):
+    rep = model_size(deepseek, get_policy("DQ3_K_M"))
+    overhead = rep.tpu_bytes / rep.gguf_bytes - 1.0
+    assert 0.0 <= overhead < 0.05, overhead  # SoA layout costs < 5 %
