@@ -1,0 +1,89 @@
+"""Serving-engine throughput: sequential vs continuous-batched decode.
+
+Serves the same batch of mixed-length requests two ways on a reduced model:
+
+  * **sequential** — one request at a time through one-shot ``generate``
+    (what ``Engine.serve`` did before continuous batching), and
+  * **continuous** — the slot scheduler, one jit'd batched decode step over
+    all live slots per iteration.
+
+Reported tokens/s covers the full serve call (prefill + decode).  Runs fp32
+plus the paper's quantization policies through the policy layer (Q4_K_M,
+DQ3_K_M), so the comparison reflects the quantized deployment path.
+
+  PYTHONPATH=src python -m benchmarks.engine_bench [--requests 8 --slots 4]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import CONFIGS
+from repro.core import get_policy, quantize_params
+from repro.models.model import Model
+from repro.models.spec import init_params
+from repro.serving import Engine, Request, SamplerConfig
+
+POLICIES = ("fp32", "Q4_K_M", "DQ3_K_M")
+
+
+def _requests(n: int, vocab: int, seed: int = 0) -> list[Request]:
+    """Mixed-length prompts and generation budgets."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=list(rng.integers(4, vocab, 4 + 2 * (i % 5))),
+                    max_new=8 + 4 * (i % 3))
+            for i in range(n)]
+
+
+def run(requests: int = 8, slots: int = 4, jit: bool = True,
+        arch: str = "qwen2-1.5b") -> list[tuple[str, float, str]]:
+    cfg = CONFIGS[arch].reduced()
+    params = init_params(cfg, seed=0, dtype=jnp.float32)
+    model = Model(cfg, dtype=jnp.float32)
+
+    rows = []
+    print(f"\n# engine bench: {requests} mixed-length requests, "
+          f"{slots} slots, {arch} (reduced), jit={jit}")
+    print(f"{'policy':9s} {'mode':11s} {'tok':>5s} {'tok/s':>8s} "
+          f"{'iters':>6s} {'conc':>5s} {'speedup':>8s}")
+    for pol in POLICIES:
+        p = (params if pol == "fp32"
+             else quantize_params(cfg, params, get_policy(pol)))
+        eng = Engine(model, p, max_len=128,
+                     sampler=SamplerConfig(greedy=True), jit=jit)
+        results = {}
+        for mode in ("sequential", "continuous"):
+            reqs = _requests(requests, cfg.vocab_size)
+            if mode == "sequential":
+                eng.serve_sequential(reqs)
+            else:
+                eng.serve(reqs, slots=slots)
+            results[mode] = eng.last_stats
+        for mode, st in results.items():
+            speedup = (st.throughput_tok_s /
+                       max(results["sequential"].throughput_tok_s, 1e-9))
+            print(f"{pol:9s} {mode:11s} {st.total_tokens:5d} "
+                  f"{st.throughput_tok_s:8.1f} {st.decode_iterations:6d} "
+                  f"{st.mean_concurrency:5.2f} {speedup:7.2f}x")
+            rows.append((f"engine/{pol}/{mode}",
+                         1e6 / max(st.throughput_tok_s, 1e-9),
+                         f"{st.throughput_tok_s:.1f}tok/s"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--no-jit", action="store_true")
+    args = ap.parse_args()
+    run(args.requests, args.slots, jit=not args.no_jit, arch=args.arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,7 @@ from __future__ import annotations
 import argparse
 import sys
 
-SUITES = ("table1", "table2", "superweight", "kernels")
+SUITES = ("table1", "table2", "superweight", "kernels", "engine")
 
 
 def main() -> None:
@@ -33,6 +33,9 @@ def main() -> None:
     if "kernels" in only:
         from . import kernel_bench
         rows += kernel_bench.run()
+    if "engine" in only:
+        from . import engine_bench
+        rows += engine_bench.run()
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:

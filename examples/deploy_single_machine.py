@@ -22,11 +22,41 @@ from repro.core import get_policy  # noqa: E402
 from repro.core.size import serving_memory  # noqa: E402
 
 
+def demo_serve(policy_name: str):
+    """Drive the continuous-batching engine on a *reduced* DeepSeek-V3 (MLA
+    cache) with the chosen policy — a CPU-sized rehearsal of the serving
+    loop the full deployment runs."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import quantize_params
+    from repro.models.model import Model
+    from repro.models.spec import init_params
+    from repro.serving import Engine, Request, SamplerConfig
+
+    cfg = get_config("deepseek-v3-671b").reduced()
+    params = init_params(cfg, seed=0, dtype=jnp.float32)
+    qparams = quantize_params(cfg, params, get_policy(policy_name))
+    eng = Engine(Model(cfg, dtype=jnp.float32), qparams, max_len=96,
+                 sampler=SamplerConfig(greedy=True), jit=False)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=list(rng.integers(4, cfg.vocab_size,
+                                                    4 + 3 * (i % 3))),
+                    max_new=6 + 2 * (i % 2))
+            for i in range(6)]
+    eng.serve(reqs, slots=3)
+    print(f"\ncontinuous-batching demo ({policy_name}, reduced config):")
+    print(eng.last_stats.report())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--policy", default="DQ3_K_M")
     ap.add_argument("--compile", action="store_true",
                     help="actually lower+compile the decode step (slow)")
+    ap.add_argument("--demo-serve", action="store_true",
+                    help="run the continuous-batching engine on a reduced "
+                         "config (CPU-sized rehearsal of the serving loop)")
     args = ap.parse_args()
 
     cfg = get_config("deepseek-v3-671b")
@@ -45,6 +75,9 @@ def main():
                           n_devices=8, mla_compressed=True)
     print(f"\nours (DQ3_K_M + compressed MLA cache): "
           f"{ours['per_device_gb']:.1f} GB/device — fits 8x40GB class")
+
+    if args.demo_serve:
+        demo_serve(args.policy)
 
     if args.compile:
         from repro.launch import dryrun

@@ -9,25 +9,32 @@ import to build these meshes on CPU.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5; older versions have no explicit axis types
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi-pod adds a leading 2-pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_single_machine_mesh(n_devices: int = 8):
     """The paper's deployment target: one 8-accelerator host (TP only)."""
-    return jax.make_mesh((1, n_devices), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((1, n_devices), ("data", "model"))
 
 
 def make_host_mesh():
     """Whatever devices exist locally (tests / examples)."""
-    n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((1, len(jax.devices())), ("data", "model"))

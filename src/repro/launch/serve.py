@@ -11,7 +11,6 @@ serve batched generation requests.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +34,10 @@ def main(argv=None):
     ap.add_argument("--policy", default="DQ3_K_M")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous-batching decode slots")
+    ap.add_argument("--sequential", action="store_true",
+                    help="serve one request at a time (throughput baseline)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.6)
@@ -74,14 +77,14 @@ def main(argv=None):
                                              rng.integers(4, 12))),
                     max_new=args.max_new)
             for i in range(args.requests)]
-    t0 = time.time()
-    done = engine.serve(reqs, slots=min(4, args.requests), seed=args.seed)
-    dt = time.time() - t0
-    total_tokens = sum(len(r.out) for r in done)
+    if args.sequential:
+        done = engine.serve_sequential(reqs, seed=args.seed)
+    else:
+        done = engine.serve(reqs, slots=min(args.slots, args.requests),
+                            seed=args.seed)
     for r in done:
         print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}")
-    print(f"{total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens / max(dt, 1e-9):.1f} tok/s)")
+    print(engine.last_stats.report())
     return done
 
 

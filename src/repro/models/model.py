@@ -162,8 +162,17 @@ class Model:
         return total, {"nll": nll, "aux": aux}
 
     # ---------------------------------------------------------------- serving
-    def prefill(self, params, batch, max_len: int):
-        """Forward + decode-cache build.  Returns (last_logits, cache)."""
+    def prefill(self, params, batch, max_len: int, *, lengths=None):
+        """Forward + decode-cache build.  Returns (last_logits, cache).
+
+        ``lengths`` ((B,) int32, optional): true prompt lengths for a
+        right-padded batch.  When given, the returned logits are gathered at
+        position ``lengths - 1`` per row instead of the last *padded*
+        position, so mixed-length batches sample their first token from the
+        correct hidden state.  (Padded positions still land in the decode
+        cache, but decode masks entries beyond ``pos`` and overwrites each
+        position before attending to it, so they are never read.)
+        """
         cfg = self.cfg
         x, enc_hidden, n_front = self._fuse_frontend(params, batch)
         cache: dict[str, Any] = {}
@@ -195,7 +204,12 @@ class Model:
                     for k, v in c.items():
                         cache[f"{stacking.group_prefix('dec', gi)}/u{u}/{k}"] = v
         x = rms_norm(x, params["output_norm"], cfg.norm_eps)
-        last = self.logits(params, x[:, -1:])
+        if lengths is None:
+            last_h = x[:, -1:]
+        else:
+            idx = (jnp.asarray(lengths, jnp.int32) + n_front - 1)
+            last_h = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        last = self.logits(params, last_h)
         return last, cache
 
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):

@@ -1,2 +1,2 @@
-from .engine import Engine, Request
+from .engine import Engine, EngineStats, Request, RequestStats
 from .sampler import SamplerConfig, sample

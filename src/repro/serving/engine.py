@@ -1,18 +1,52 @@
-"""Serving engine: batched prefill + decode with slot-based scheduling.
+"""Continuous-batching serving engine (slot scheduler over one pooled cache).
 
-``Engine`` wraps a (usually quantized) model with jit'd prefill and decode
-steps and a simple continuous-batching scheduler: a fixed number of request
-slots share one decode cache; finished requests free their slot and queued
-requests are prefilled into it.  This is the single-machine deployment
-driver for the paper's scenario (DQ3_K_M weights, 32k context) — the
-multi-pod variant shards the same functions via
-``parallel.sharding`` (see launch/serve.py).
+Architecture
+------------
+
+``Engine.serve`` runs a genuine continuous-batching loop, the single-machine
+deployment driver for the paper's scenario (DQ3_K_M weights, 32k context):
+
+  * **Slots.**  A fixed pool of ``slots`` decode lanes shares ONE pooled,
+    slot-indexed decode cache of batch size ``slots`` (every cache leaf —
+    attention K/V rings, MLA latents, recurrent states — has a leading batch
+    dimension, so a slot is row ``s`` of every leaf).
+  * **Decode.**  Each iteration issues a SINGLE jit'd batched
+    ``model.decode_step`` over all ``slots`` rows — live slots advance one
+    token, free slots compute throwaway rows that are overwritten at the next
+    admission.  This is what makes the hot path measurable: per-iteration
+    cost is one batched step, not one step per request.
+  * **Admission.**  When a slot is free and the queue is non-empty, the next
+    request is prefilled alone (batch 1, exact length — so recurrent-state
+    archs are exact too), its first token is sampled from the prefill
+    logits, and its fresh cache rows are written into the slot's rows of the
+    pooled cache.  Admission happens *mid-stream*: new requests join while
+    others are still decoding.
+  * **Retirement.**  A slot frees when its request hits ``eos_id``, produces
+    ``max_new`` tokens, or reaches the ``max_len`` cache horizon; the freed
+    slot is re-admitted into on the same iteration.
+  * **Stats.**  Per-request queue wait / prefill time / decode tokens-per-
+    second plus per-iteration live-slot occupancy are collected into an
+    :class:`EngineStats` report (``engine.last_stats``; also attached to each
+    request as ``req.stats``).
+
+``Engine.generate`` is the one-shot batched path (used for parity testing
+and as the sequential-serving baseline).  Mixed-length prompts are exact:
+prefill gathers logits at ``lengths - 1`` per row rather than the last
+*padded* position (``Model.prefill(..., lengths=...)``).  Note that for
+recurrent archs (RG-LRU / xLSTM) right-padded batched prefill contaminates
+the recurrent state, so one-shot ``generate`` requires equal lengths there —
+``serve`` prefills per-request and is exact for every arch.
+
+The multi-pod variant shards the same functions via ``parallel.sharding``
+(see launch/serve.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+import time
+from collections import deque
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +54,23 @@ import numpy as np
 
 from ..models.model import Model
 from .sampler import SamplerConfig, sample
+
+_RECURRENT_KINDS = ("rglru", "mlstm", "slstm")
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request timing collected by :meth:`Engine.serve`."""
+
+    rid: int
+    queue_wait_s: float = 0.0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    decode_tokens: int = 0
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.decode_tokens / self.decode_s if self.decode_s > 0 else 0.0
 
 
 @dataclasses.dataclass
@@ -29,6 +80,63 @@ class Request:
     max_new: int
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    stats: RequestStats | None = None
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate report for one :meth:`Engine.serve` call."""
+
+    requests: list[RequestStats] = dataclasses.field(default_factory=list)
+    decode_iterations: int = 0
+    live_per_iteration: list[int] = dataclasses.field(default_factory=list)
+    total_tokens: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def max_concurrency(self) -> int:
+        return max(self.live_per_iteration, default=0)
+
+    @property
+    def mean_concurrency(self) -> float:
+        if not self.live_per_iteration:
+            return 0.0
+        return sum(self.live_per_iteration) / len(self.live_per_iteration)
+
+    @property
+    def throughput_tok_s(self) -> float:
+        return self.total_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    def report(self) -> str:
+        lines = [
+            f"{len(self.requests)} requests, {self.total_tokens} tokens in "
+            f"{self.wall_s:.2f}s ({self.throughput_tok_s:.1f} tok/s)",
+            f"decode iterations: {self.decode_iterations}  "
+            f"concurrency max/mean: {self.max_concurrency}/"
+            f"{self.mean_concurrency:.2f}",
+        ]
+        for r in sorted(self.requests, key=lambda r: r.rid):
+            lines.append(
+                f"  req {r.rid}: wait {r.queue_wait_s * 1e3:.1f}ms  "
+                f"prefill {r.prefill_s * 1e3:.1f}ms  "
+                f"decode {r.decode_tokens} tok @ {r.decode_tok_s:.1f} tok/s")
+        return "\n".join(lines)
+
+
+class _Slot:
+    """Host-side bookkeeping for one decode lane."""
+
+    __slots__ = ("req", "tok", "pos", "n_out")
+
+    def __init__(self):
+        self.req: Request | None = None
+        self.tok = 0     # last sampled token (input to the next decode step)
+        self.pos = 0     # absolute position of ``tok``
+        self.n_out = 0   # tokens emitted so far
+
+    @property
+    def live(self) -> bool:
+        return self.req is not None
 
 
 class Engine:
@@ -42,24 +150,48 @@ class Engine:
         self.max_len = max_len
         self.eos_id = eos_id
         self.sampler = sampler
+        self.last_stats: EngineStats | None = None
         self._decode = jax.jit(model.decode_step) if jit else model.decode_step
+        if jit:
+            self._prefill = jax.jit(
+                lambda p, batch, lengths: model.prefill(
+                    p, batch, max_len, lengths=lengths))
+        else:
+            self._prefill = lambda p, batch, lengths: model.prefill(
+                p, batch, max_len, lengths=lengths)
+        # Padding a prompt corrupts recurrent states (no positional cache to
+        # mask), so length-bucketed prefill (which bounds jit recompiles)
+        # and mixed-length one-shot generate are positional-cache-arch only.
+        cfg = model.cfg
+        self._recurrent = any(
+            cfg.block_kind(layer) in _RECURRENT_KINDS
+            for layer in range(cfg.n_layers))
+        self._pad_prompts = jit and not self._recurrent
 
     # -- one-shot batch generation ------------------------------------------
     def generate(self, prompts: list[list[int]], max_new: int,
                  seed: int = 0) -> list[list[int]]:
-        """Left-pad-free batched generation (prompts padded to max)."""
+        """Batched generation; exact for mixed-length prompts on
+        positional-cache archs (the first token of each row is sampled from
+        the logits at ``length - 1``, not the last padded position).
+        Recurrent archs carry pad tokens into their state, so unequal
+        lengths are rejected there — use :meth:`serve`, which prefills each
+        request alone and is exact for every arch."""
         b = len(prompts)
         tmax = max(len(p) for p in prompts)
+        if self._recurrent and any(len(p) != tmax for p in prompts):
+            raise ValueError(
+                "mixed-length one-shot generate is inexact for recurrent "
+                "archs (right-padded prefill contaminates the state); pad "
+                "prompts equally or use Engine.serve")
         toks = np.zeros((b, tmax), np.int32)
         for i, p in enumerate(prompts):
-            toks[i, : len(p)] = p  # right-padded with 0; mask via lengths
+            toks[i, : len(p)] = p  # right-padded with 0; masked via lengths
         lengths = np.array([len(p) for p in prompts], np.int32)
 
         batch = {"tokens": jnp.asarray(toks)}
-        logits, cache = self.model.prefill(self.params, batch, self.max_len)
-        # logits is at the last *padded* position; re-read the true last
-        # token's logits by decoding once per misaligned row is overkill for
-        # the harness — we require equal lengths for exactness:
+        logits, cache = self.model.prefill(
+            self.params, batch, self.max_len, lengths=jnp.asarray(lengths))
         key = jax.random.PRNGKey(seed)
         outs: list[list[int]] = [[] for _ in range(b)]
         pos = jnp.asarray(lengths)
@@ -72,7 +204,7 @@ class Engine:
                     outs[i].append(int(next_tok[i]))
                     if int(next_tok[i]) == self.eos_id:
                         live[i] = False
-            if not live.any():
+            if not live.any() or step == max_new - 1:
                 break
             logits_step, cache = self._decode(
                 self.params, cache, next_tok, pos)
@@ -81,26 +213,150 @@ class Engine:
             pos = pos + 1
         return outs
 
-    # -- continuous batching --------------------------------------------------
+    # -- continuous batching -------------------------------------------------
     def serve(self, requests: list[Request], slots: int = 4,
               seed: int = 0) -> list[Request]:
-        """Slot-scheduler: admits requests as slots free up."""
-        queue = list(requests)
-        active: list[Request | None] = [None] * slots
-        results: list[Request] = []
-        key = jax.random.PRNGKey(seed)
+        """Continuous-batching loop: admit → batched decode → retire.
 
-        while queue or any(a is not None for a in active):
-            # admit
-            for s in range(slots):
-                if active[s] is None and queue:
-                    req = queue.pop(0)
-                    outs = self.generate([req.prompt], req.max_new,
-                                         seed=seed + req.rid)
-                    req.out = outs[0]
-                    req.done = True
-                    results.append(req)
-                    active[s] = None  # immediate completion in this harness
-            if not queue:
-                break
-        return results
+        Returns the requests in completion order; ``self.last_stats`` holds
+        the :class:`EngineStats` for the call.
+        """
+        t_start = time.perf_counter()
+        stats = EngineStats()
+        queue: deque[Request] = deque(requests)
+        lanes = [_Slot() for _ in range(slots)]
+        pooled: dict | None = None
+        key = jax.random.PRNGKey(seed)
+        done: list[Request] = []
+
+        def finish(req: Request, rst: RequestStats):
+            req.done = True
+            req.stats = rst
+            stats.requests.append(rst)
+            stats.total_tokens += len(req.out)
+            done.append(req)
+
+        while queue or any(s.live for s in lanes):
+            # -- admission: prefill queued requests into free slots ----------
+            for s, lane in enumerate(lanes):
+                if lane.live or not queue:
+                    continue
+                req = queue.popleft()
+                t0 = time.perf_counter()
+                rst = RequestStats(rid=req.rid, queue_wait_s=t0 - t_start)
+                first, fresh = self._prefill_one(req.prompt)
+                key, kp = jax.random.split(key)
+                tok = int(sample(first[:, -1], kp, self.sampler)[0])
+                rst.prefill_s = time.perf_counter() - t0
+                req.out = [tok]  # rebind: serving a request restarts its output
+                budget = min(req.max_new, self.max_len - len(req.prompt))
+                if tok == self.eos_id or len(req.out) >= budget:
+                    finish(req, rst)  # completed on the prefill token alone
+                    continue
+                pooled = self._install(pooled, fresh, s, slots)
+                lane.req, lane.tok, lane.n_out = req, tok, 1
+                lane.pos = len(req.prompt)
+                lane.req.stats = rst
+
+            live = [s for s in lanes if s.live]
+            if not live:
+                continue
+
+            # -- one jit'd batched decode step over ALL slots ----------------
+            stats.decode_iterations += 1
+            stats.live_per_iteration.append(len(live))
+            toks = jnp.asarray([s.tok for s in lanes], jnp.int32)
+            pos = jnp.asarray([s.pos for s in lanes], jnp.int32)
+            t0 = time.perf_counter()
+            logits, pooled = self._decode(self.params, pooled, toks, pos)
+            key, ks = jax.random.split(key)
+            next_tok = sample(logits, ks, self.sampler)
+            dt = time.perf_counter() - t0
+
+            # -- emit + retire ----------------------------------------------
+            for s, lane in enumerate(lanes):
+                if not lane.live:
+                    continue
+                req = lane.req
+                rst = req.stats
+                rst.decode_s += dt
+                rst.decode_tokens += 1
+                tok = int(next_tok[s])
+                req.out.append(tok)
+                lane.tok, lane.pos, lane.n_out = tok, lane.pos + 1, \
+                    lane.n_out + 1
+                budget = min(req.max_new, self.max_len - len(req.prompt))
+                if (tok == self.eos_id or lane.n_out >= budget
+                        or lane.pos + 1 >= self.max_len):
+                    finish(req, rst)
+                    lane.req = None
+
+        stats.wall_s = time.perf_counter() - t_start
+        self.last_stats = stats
+        return done
+
+    def serve_sequential(self, requests: list[Request],
+                         seed: int = 0) -> list[Request]:
+        """Baseline: one request at a time through one-shot ``generate``
+        (what the engine did before continuous batching; kept for the
+        throughput comparison in benchmarks/engine_bench.py)."""
+        t_start = time.perf_counter()
+        stats = EngineStats()
+        done = []
+        for req in requests:
+            t0 = time.perf_counter()
+            rst = RequestStats(rid=req.rid, queue_wait_s=t0 - t_start)
+            req.out = self.generate([req.prompt], req.max_new,
+                                    seed=seed + req.rid)[0]
+            rst.decode_s = time.perf_counter() - t0
+            rst.decode_tokens = max(len(req.out) - 1, 0)
+            req.done = True
+            req.stats = rst
+            stats.requests.append(rst)
+            stats.total_tokens += len(req.out)
+            stats.decode_iterations += rst.decode_tokens
+            stats.live_per_iteration.extend([1] * rst.decode_tokens)
+            done.append(req)
+        stats.wall_s = time.perf_counter() - t_start
+        self.last_stats = stats
+        return done
+
+    # -- internals -----------------------------------------------------------
+    def _prefill_one(self, prompt: list[int]):
+        """Prefill a single request (batch 1).  Returns (last_logits (1,1,V),
+        fresh cache with batch dim 1)."""
+        n = len(prompt)
+        if n + 1 > self.max_len:
+            raise ValueError(f"prompt of {n} tokens leaves no room to "
+                             f"decode within max_len={self.max_len}")
+        padded = n
+        if self._pad_prompts:
+            padded = 8
+            while padded < n:
+                padded *= 2
+            padded = min(padded, self.max_len)
+        toks = np.zeros((1, padded), np.int32)
+        toks[0, :n] = prompt
+        lengths = jnp.asarray([n], jnp.int32)
+        return self._prefill(self.params, {"tokens": jnp.asarray(toks)},
+                             lengths)
+
+    def _install(self, pooled, fresh, slot: int, slots: int):
+        """Write a batch-1 prefill cache into row ``slot`` of the pooled
+        cache (axis 1 under ``scan=True``, where leaves are stacked with a
+        leading repeat dimension)."""
+        axis = 1 if self.model.scan else 0
+        if pooled is None:
+            def expand(v):
+                shape = list(v.shape)
+                shape[axis] = slots
+                return jnp.zeros(shape, v.dtype)
+            pooled = jax.tree_util.tree_map(expand, fresh)
+            # attention caches mask validity via pos >= 0
+            pooled = {k: (jnp.full_like(v, -1) if k.endswith("/pos") else v)
+                      for k, v in pooled.items()}
+        def put(pv, fv):
+            if axis == 1:
+                return pv.at[:, slot].set(fv[:, 0].astype(pv.dtype))
+            return pv.at[slot].set(fv[0].astype(pv.dtype))
+        return jax.tree_util.tree_map(put, pooled, fresh)

@@ -7,7 +7,7 @@ by the kernel deliverable.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo_compat import given, settings, st
 
 from repro.core import quantize
 from repro.kernels import ops, qmatmul_ref

@@ -1,0 +1,88 @@
+"""Deterministic (no-hypothesis) roundtrip coverage: every kernel format
+q2_k..q8_0 plus the DQ3_K_M policy end-to-end through the policy layer.
+
+These are fixed-seed regression tests so the suite exercises each format's
+pack/unpack and quantize/dequantize path even when optional property-testing
+deps are absent.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS
+from repro.core import get_policy, quantize, quantize_params
+from repro.core.formats import (FORMATS, pack_1bit, pack_2bit, pack_nibbles,
+                                unpack_1bit, unpack_2bit, unpack_nibbles)
+from repro.core.qtensor import QTensor
+from repro.models.spec import init_params
+
+# empirical per-format relative-error ceilings on N(0,1) weights
+ERR_CEILING = {"q8_0": 0.01, "q6_k": 0.03, "q5_k": 0.06, "q4_k": 0.11,
+               "q3_k": 0.21, "q2_k": 0.42}
+
+# shapes chosen to hit: non-superblock-multiple K, leading expert dim,
+# single-column N, and the plain 2-D fast path
+SHAPES = [(512, 48), (300, 16), (2, 256, 8), (768, 1)]
+
+
+@pytest.mark.parametrize("fmt", list(FORMATS))
+@pytest.mark.parametrize("shape", SHAPES)
+def test_roundtrip_every_format_deterministic(fmt, shape):
+    rng = np.random.default_rng(hash((fmt, shape)) % 2**32)
+    w = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    qt = quantize(w, fmt)
+    wd = qt.dequantize()
+    assert wd.shape == w.shape
+    assert bool(jnp.all(jnp.isfinite(wd)))
+    rel = float(jnp.linalg.norm(wd - w) / jnp.linalg.norm(w))
+    assert rel < ERR_CEILING[fmt], (fmt, shape, rel)
+
+
+@pytest.mark.parametrize("packer,unpacker,hi", [
+    (pack_nibbles, unpack_nibbles, 16),
+    (pack_2bit, unpack_2bit, 4),
+    (pack_1bit, unpack_1bit, 2),
+])
+def test_bitpack_roundtrip_deterministic(packer, unpacker, hi):
+    per_byte = {16: 2, 4: 4, 2: 8}[hi]
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.integers(0, hi, (3, 32 * per_byte, 5)).astype(np.uint8))
+    assert (unpacker(packer(q)) == q).all()
+
+
+def test_quantize_idempotent_determinism():
+    """Same input -> bit-identical packed fields (no hidden randomness)."""
+    rng = np.random.default_rng(11)
+    w = jnp.asarray(rng.normal(size=(512, 24)).astype(np.float32))
+    for fmt in FORMATS:
+        a, b = quantize(w, fmt), quantize(w, fmt)
+        assert sorted(a.fields) == sorted(b.fields), fmt
+        for k in a.fields:
+            assert (np.asarray(a.fields[k]) == np.asarray(b.fields[k])).all(), \
+                (fmt, k)
+
+
+def test_dq3_policy_roundtrip():
+    """DQ3_K_M through the policy layer: every quantized tensor of a small
+    model roundtrips with finite values and bounded relative error, and the
+    policy's format mix is actually dynamic (more than one format used)."""
+    cfg = CONFIGS["qwen2-1.5b"].reduced()
+    params = init_params(cfg, seed=0, dtype=jnp.float32)
+    qparams = quantize_params(cfg, params, get_policy("DQ3_K_M"))
+    fmts_used = set()
+    checked = 0
+    for name, v in qparams.items():
+        if not isinstance(v, QTensor):
+            continue
+        fmts_used.add(v.fmt)
+        wd = v.dequantize(jnp.float32)
+        w = params[name].astype(jnp.float32)
+        assert wd.shape == w.shape, name
+        assert bool(jnp.all(jnp.isfinite(wd))), name
+        rel = float(jnp.linalg.norm(wd - w) /
+                    (float(jnp.linalg.norm(w)) + 1e-9))
+        assert rel < ERR_CEILING[v.fmt] * 1.5, (name, v.fmt, rel)
+        checked += 1
+    assert checked > 0
+    assert len(fmts_used) > 1, fmts_used

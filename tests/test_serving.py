@@ -99,6 +99,127 @@ def test_engine_serve_completes_all():
     assert all(r.done and len(r.out) == 4 for r in done)
 
 
+def test_generate_mixed_length_prompts_exact():
+    """Regression for the padded-position logits bug: a batched generate
+    over unequal-length prompts must produce exactly what each prompt
+    produces alone.  On the old code the first sampled token of every
+    non-longest row came from the logits at the last *padded* position, so
+    this failed."""
+    cfg, params, model = _setup("qwen2-1.5b")
+    eng = Engine(model, params, max_len=64,
+                 sampler=SamplerConfig(greedy=True), jit=False)
+    prompts = [[5, 6, 7, 8, 9, 10, 11], [9, 10, 11], [4, 5], [8, 7, 6, 5, 4]]
+    batched = eng.generate(prompts, max_new=6)
+    for p, got in zip(prompts, batched):
+        alone = eng.generate([p], max_new=6)[0]
+        assert got == alone, (p, got, alone)
+
+
+def test_serve_matches_generate_greedy():
+    """Continuous-batched serve is token-for-token identical to one-shot
+    generate under greedy sampling — mixed-length prompts, mixed max_new,
+    and mid-stream admission (more requests than slots, staggered
+    retirement so later requests join a half-busy batch)."""
+    from repro.serving import Request
+    cfg, params, model = _setup("qwen2-1.5b")
+    eng = Engine(model, params, max_len=64,
+                 sampler=SamplerConfig(greedy=True), jit=False)
+    prompts = [[5, 6, 7, 8], [9, 10, 11], [4, 5, 6, 7, 8, 9], [12, 13],
+               [7, 8, 9, 10, 11]]
+    reqs = [Request(rid=i, prompt=p, max_new=3 + i)
+            for i, p in enumerate(prompts)]
+    done = eng.serve(reqs, slots=2)
+    assert len(done) == len(reqs)
+    # staggered max_new forces slot 0 to retire and re-admit mid-stream
+    # while slot 1 is still decoding
+    assert eng.last_stats.max_concurrency == 2
+    for r in done:
+        ref = eng.generate([r.prompt], r.max_new)[0]
+        assert r.out == ref, (r.rid, r.out, ref)
+
+
+def test_serve_interleaves_decode_steps():
+    """More than one request is live in the same decode iteration, and
+    batching actually shares iterations: far fewer decode steps than the
+    sequential baseline would need."""
+    from repro.serving import Request
+    cfg, params, model = _setup("qwen2-1.5b")
+    eng = Engine(model, params, max_len=64, jit=False,
+                 sampler=SamplerConfig(greedy=True))
+    reqs = [Request(rid=i, prompt=[4 + i, 5, 6], max_new=8)
+            for i in range(4)]
+    done = eng.serve(reqs, slots=4)
+    stats = eng.last_stats
+    assert all(r.done for r in done)
+    assert stats.max_concurrency > 1
+    assert max(stats.live_per_iteration) == 4  # all four decode together
+    sequential_steps = sum(len(r.out) - 1 for r in done)
+    assert stats.decode_iterations < sequential_steps
+    assert stats.decode_iterations == 7  # 8 tokens: 1 prefill + 7 decodes
+
+
+def test_engine_stats_bookkeeping():
+    from repro.serving import Request
+    cfg, params, model = _setup("qwen2-1.5b")
+    eng = Engine(model, params, max_len=64, jit=False,
+                 sampler=SamplerConfig(greedy=True))
+    reqs = [Request(rid=i, prompt=[5, 6, 7], max_new=4) for i in range(3)]
+    done = eng.serve(reqs, slots=2)
+    stats = eng.last_stats
+    assert stats.total_tokens == sum(len(r.out) for r in done) == 12
+    assert len(stats.requests) == 3
+    for r in done:
+        assert r.stats is not None
+        assert r.stats.queue_wait_s >= 0
+        assert r.stats.prefill_s > 0
+        assert r.stats.decode_tokens == len(r.out) - 1
+    assert stats.wall_s > 0
+    assert stats.throughput_tok_s > 0
+    assert "tok/s" in stats.report()
+
+
+def test_serve_reused_request_restarts_output():
+    """Serving a Request whose ``out`` is already populated (served twice,
+    or copies sharing one list) rebinds the output instead of appending —
+    regression: the admission budget check used to see the stale tokens and
+    retire the request after a single prefill token."""
+    from repro.serving import Request
+    cfg, params, model = _setup("qwen2-1.5b")
+    eng = Engine(model, params, max_len=64, jit=False,
+                 sampler=SamplerConfig(greedy=True))
+    req = Request(rid=0, prompt=[5, 6, 7], max_new=4)
+    first = list(eng.serve([req], slots=1)[0].out)
+    again = eng.serve([req], slots=1)[0].out
+    assert len(first) == 4
+    assert again == first
+
+
+def test_generate_rejects_mixed_lengths_on_recurrent_arch():
+    """Right-padded batched prefill contaminates recurrent state, so
+    one-shot generate must refuse unequal lengths there (serve prefills
+    per-request and stays exact)."""
+    cfg, params, model = _setup("recurrentgemma-2b")
+    eng = Engine(model, params, max_len=32,
+                 sampler=SamplerConfig(greedy=True), jit=False)
+    with pytest.raises(ValueError, match="recurrent"):
+        eng.generate([[5, 6, 7], [8, 9]], max_new=2)
+    # equal lengths stay supported
+    out = eng.generate([[5, 6, 7], [8, 9, 10]], max_new=2)
+    assert all(len(o) == 2 for o in out)
+
+
+def test_serve_sequential_baseline_matches():
+    from repro.serving import Request
+    cfg, params, model = _setup("qwen2-1.5b")
+    eng = Engine(model, params, max_len=64, jit=False,
+                 sampler=SamplerConfig(greedy=True))
+    mk = lambda: [Request(rid=i, prompt=[4 + i, 5, 6, 7], max_new=5)
+                  for i in range(3)]
+    cont = {r.rid: r.out for r in eng.serve(mk(), slots=2)}
+    seq = {r.rid: r.out for r in eng.serve_sequential(mk())}
+    assert cont == seq
+
+
 def test_sampler_top_p_support():
     from repro.serving.sampler import sample
     logits = jnp.asarray([[10.0, 9.5, -5.0, -5.0]])
