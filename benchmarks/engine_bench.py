@@ -1,17 +1,33 @@
-"""Serving-engine throughput: sequential vs continuous-batched decode.
+"""Serving-engine throughput + memory: sequential vs continuous vs paged.
 
-Serves the same batch of mixed-length requests two ways on a reduced model:
+Serves the same batch of mixed-length requests three ways on a reduced
+model:
 
   * **sequential** — one request at a time through one-shot ``generate``
-    (what ``Engine.serve`` did before continuous batching), and
-  * **continuous** — the slot scheduler, one jit'd batched decode step over
-    all live slots per iteration.
+    (what ``Engine.serve`` did before continuous batching),
+  * **continuous** — the slot scheduler over the dense contiguous pooled
+    cache (``slots x max_len`` rows reserved up front), and
+  * **paged** — the same scheduler over the paged KV cache with chunked
+    prefill admission, where cache memory scales with live tokens.
 
-Reported tokens/s covers the full serve call (prefill + decode).  Runs fp32
-plus the paper's quantization policies through the policy layer (Q4_K_M,
-DQ3_K_M), so the comparison reflects the quantized deployment path.
+Reported per mode: tokens/s over the full serve call (prefill + decode),
+decode iterations, mean concurrency, mean admission latency (queue wait +
+prefill, the time-to-first-token component the chunked admission path
+optimises) and the positional-cache footprint in bytes per live token —
+for the paged mode this must come in at or below the dense layout's.  Runs
+fp32 plus the paper's quantization policies through the policy layer
+(Q4_K_M, DQ3_K_M), so the comparison reflects the quantized deployment
+path.
 
   PYTHONPATH=src python -m benchmarks.engine_bench [--requests 8 --slots 4]
+      [--page-size 16 --prefill-chunk 32] [--json BENCH_engine.json]
+      [--gate]
+
+``--json`` writes the table as a machine-readable artifact (CI uploads it
+as BENCH_engine.json); ``--gate`` exits non-zero if continuous batching
+fails to reach sequential throughput or the paged cache fails to beat the
+dense layout's bytes/live-token — the CI step treats this as a *soft*
+gate (warning, not failure) until CI timing stabilises.
 """
 
 from __future__ import annotations
@@ -40,23 +56,39 @@ def _requests(n: int, vocab: int, seed: int = 0) -> list[Request]:
 
 
 def run(requests: int = 8, slots: int = 4, jit: bool = True,
-        arch: str = "qwen2-1.5b") -> list[tuple[str, float, str]]:
+        arch: str = "qwen2-1.5b", page_size: int = 16,
+        prefill_chunk: int = 32,
+        results_out: dict | None = None) -> list[tuple[str, float, str]]:
+    """Returns CSV rows; when ``results_out`` is given it is filled with
+    ``{policy: {mode: EngineStats}}`` for :func:`gate`."""
     cfg = CONFIGS[arch].reduced()
     params = init_params(cfg, seed=0, dtype=jnp.float32)
     model = Model(cfg, dtype=jnp.float32)
 
     rows = []
     print(f"\n# engine bench: {requests} mixed-length requests, "
-          f"{slots} slots, {arch} (reduced), jit={jit}")
+          f"{slots} slots, {arch} (reduced), jit={jit}, "
+          f"page={page_size} chunk={prefill_chunk}")
     print(f"{'policy':9s} {'mode':11s} {'tok':>5s} {'tok/s':>8s} "
-          f"{'iters':>6s} {'conc':>5s} {'speedup':>8s}")
+          f"{'iters':>6s} {'conc':>5s} {'admit_ms':>9s} {'B/livetok':>10s} "
+          f"{'speedup':>8s}")
     for pol in POLICIES:
         p = (params if pol == "fp32"
              else quantize_params(cfg, params, get_policy(pol)))
-        eng = Engine(model, p, max_len=128,
-                     sampler=SamplerConfig(greedy=True), jit=jit)
+        # sequential + continuous share one engine (and its jit traces);
+        # only the paged mode needs a differently-configured instance
+        dense = Engine(model, p, max_len=128,
+                       sampler=SamplerConfig(greedy=True), jit=jit)
+        engines = {
+            "sequential": dense,
+            "continuous": dense,
+            "paged": Engine(model, p, max_len=128,
+                            sampler=SamplerConfig(greedy=True), jit=jit,
+                            page_size=page_size,
+                            prefill_chunk=prefill_chunk),
+        }
         results = {}
-        for mode in ("sequential", "continuous"):
+        for mode, eng in engines.items():
             reqs = _requests(requests, cfg.vocab_size)
             if mode == "sequential":
                 eng.serve_sequential(reqs)
@@ -66,13 +98,46 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
         for mode, st in results.items():
             speedup = (st.throughput_tok_s /
                        max(results["sequential"].throughput_tok_s, 1e-9))
+            blt = st.bytes_per_live_token if mode != "sequential" else 0.0
             print(f"{pol:9s} {mode:11s} {st.total_tokens:5d} "
                   f"{st.throughput_tok_s:8.1f} {st.decode_iterations:6d} "
-                  f"{st.mean_concurrency:5.2f} {speedup:7.2f}x")
+                  f"{st.mean_concurrency:5.2f} "
+                  f"{st.mean_admission_s * 1e3:9.1f} {blt:10.0f} "
+                  f"{speedup:7.2f}x")
             rows.append((f"engine/{pol}/{mode}",
                          1e6 / max(st.throughput_tok_s, 1e-9),
                          f"{st.throughput_tok_s:.1f}tok/s"))
+            rows.append((f"engine/{pol}/{mode}/admission",
+                         st.mean_admission_s * 1e6,
+                         f"{st.mean_admission_s * 1e3:.1f}ms"))
+            if mode != "sequential":
+                rows.append((f"engine/{pol}/{mode}/mem",
+                             blt, f"{blt:.0f}B/livetok"))
+        if results_out is not None:
+            results_out[pol] = dict(results)
     return rows
+
+
+def gate(results: dict, requests: int = 8) -> list[str]:
+    """Soft perf/memory gate over :func:`run` results; returns failures."""
+    failures = []
+    if not results:
+        return ["no benchmark results to gate"]
+    for pol, res in results.items():
+        seq = res["sequential"].throughput_tok_s
+        cont = res["continuous"].throughput_tok_s
+        if cont < seq:
+            failures.append(
+                f"{pol}: continuous {cont:.1f} tok/s < sequential "
+                f"{seq:.1f} tok/s on the {requests}-request mixed workload")
+        pg = res["paged"]
+        dense_blt = (pg.dense_cache_bytes
+                     / max(pg.mean_live_tokens, 1e-9))
+        if pg.bytes_per_live_token > dense_blt:
+            failures.append(
+                f"{pol}: paged cache {pg.bytes_per_live_token:.0f} "
+                f"B/live-token exceeds dense layout {dense_blt:.0f}")
+    return failures
 
 
 def main():
@@ -80,9 +145,32 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--no-jit", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows as a JSON artifact")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 if continuous < sequential throughput or "
+                         "paged > dense bytes/live-token (CI soft gate)")
     args = ap.parse_args()
-    run(args.requests, args.slots, jit=not args.no_jit, arch=args.arch)
+    results: dict = {}
+    rows = run(args.requests, args.slots, jit=not args.no_jit,
+               arch=args.arch, page_size=args.page_size,
+               prefill_chunk=args.prefill_chunk, results_out=results)
+    if args.json:
+        from .run import write_rows_json
+        write_rows_json(rows, args.json)
+    if args.gate:
+        failures = gate(results, args.requests)
+        for msg in failures:
+            print(f"PERF GATE: {msg}")
+        if failures:
+            # distinct exit code so CI can soften gate failures while any
+            # other non-zero exit (crash, import error) stays hard-red
+            raise SystemExit(3)
+        print("perf gate OK: continuous >= sequential, paged <= dense "
+              "bytes/live-token")
 
 
 if __name__ == "__main__":

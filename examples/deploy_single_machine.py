@@ -37,8 +37,10 @@ def demo_serve(policy_name: str):
     cfg = get_config("deepseek-v3-671b").reduced()
     params = init_params(cfg, seed=0, dtype=jnp.float32)
     qparams = quantize_params(cfg, params, get_policy(policy_name))
+    # paged KV cache + chunked admission: memory scales with live tokens
     eng = Engine(Model(cfg, dtype=jnp.float32), qparams, max_len=96,
-                 sampler=SamplerConfig(greedy=True), jit=False)
+                 sampler=SamplerConfig(greedy=True), jit=False,
+                 page_size=16, prefill_chunk=24)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=list(rng.integers(4, cfg.vocab_size,
                                                     4 + 3 * (i % 3))),

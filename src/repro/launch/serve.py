@@ -38,6 +38,17 @@ def main(argv=None):
                     help="continuous-batching decode slots")
     ap.add_argument("--sequential", action="store_true",
                     help="serve one request at a time (throughput baseline)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="tokens per KV-cache page; >0 pages the pooled "
+                         "cache so memory scales with live tokens instead "
+                         "of slots x max_len")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool capacity (default: worst case for "
+                         "--slots x --max-len)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="admission chunk length in tokens; long prompts "
+                         "stream in chunk-by-chunk interleaved with decode "
+                         "(default: whole prompt in one chunk)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.6)
@@ -69,7 +80,9 @@ def main(argv=None):
 
     model = Model(cfg)
     engine = Engine(model, qparams, max_len=args.max_len,
-                    sampler=SamplerConfig(args.temperature, args.top_p))
+                    sampler=SamplerConfig(args.temperature, args.top_p),
+                    page_size=args.page_size, num_pages=args.num_pages,
+                    prefill_chunk=args.prefill_chunk)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,

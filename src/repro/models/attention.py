@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from . import paged
 from .common import apply_rope, linear, rms_norm, softcap
 
 NEG_INF = -2.0e38
@@ -34,7 +35,10 @@ def _chunk_attn(q, k, v, mask_fn, attn_cap: float, chunk: int = 1024):
     """Online-softmax attention.
 
     q: (B, Tq, H, D); k/v: (B, Tk, Hkv, D); mask_fn(qi, ki) -> bool (Tq_c, Tk_c)
-    given absolute query/key index arrays.  Returns (B, Tq, H, D).
+    given absolute query/key index arrays.  ``mask_fn`` may also return a
+    per-row mask (B, Tq_c, Tk_c) — used by the chunked-prefill path, where
+    every batch row sits at a different absolute position.  Returns
+    (B, Tq, H, D).
     """
     b, tq, h, d = q.shape
     tk, hkv = k.shape[1], k.shape[2]
@@ -62,7 +66,8 @@ def _chunk_attn(q, k, v, mask_fn, attn_cap: float, chunk: int = 1024):
         qi = jnp.arange(tq)
         kidx = ki * chunk + jnp.arange(chunk)
         valid = mask_fn(qi[:, None], kidx[None, :]) & (kidx < tk)[None, :]
-        s = jnp.where(valid[None, None], s, NEG_INF)
+        valid = valid[:, None] if valid.ndim == 3 else valid[None, None]
+        s = jnp.where(valid, s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -195,18 +200,178 @@ def attn_prefill(p: dict, cfg: ModelConfig, x: jax.Array, max_len: int,
     return out, {"k": ck, "v": cv, "pos": cpos}
 
 
+def cache_len(cfg: ModelConfig, max_len: int, local: bool) -> int:
+    """Dense cache length for one attention layer (ring-bounded if local)."""
+    return min(max_len, cfg.window) if (local and cfg.window) else max_len
+
+
+def init_paged_attn_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                          dtype=jnp.bfloat16) -> dict:
+    """Paged K/V/pos pools shared by every slot (see models/paged.py)."""
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((num_pages, page_size, nkv, hd), dtype),
+        "v": jnp.zeros((num_pages, page_size, nkv, hd), dtype),
+        "pos": jnp.full((num_pages, page_size), -1, jnp.int32),
+    }
+
+
+def paged_attn_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
+                           dtype=jnp.bfloat16) -> dict:
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((num_pages, page_size, nkv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((num_pages, page_size, nkv, hd), dtype),
+        "pos": jax.ShapeDtypeStruct((num_pages, page_size), jnp.int32),
+    }
+
+
+def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                      pos: jax.Array, block_table: jax.Array, *, local: bool,
+                      max_len: int, live: jax.Array | None = None,
+                      ) -> tuple[jax.Array, dict]:
+    """One-token decode against a paged cache.
+
+    Gathers the exact dense view from the page pools, runs the unchanged
+    dense :func:`attn_decode` on it (bitwise-identical logits by
+    construction), then scatters the one newly written row back into the
+    pages.
+    """
+    length = cache_len(cfg, max_len, local)
+    dense = {k: paged.gather_pages(cache[k], block_table, length)
+             for k in ("k", "v", "pos")}
+    delta, dnew = attn_decode(p, cfg, x, dense, pos, local=local, live=live)
+    b = x.shape[0]
+    bidx = jnp.arange(b)
+    slot = (pos % length).astype(jnp.int32)
+    new = {key: paged.scatter_token(cache[key], block_table, slot,
+                                    dnew[key][bidx, slot], ok=live)
+           for key in ("k", "v", "pos")}
+    return delta, new
+
+
+def chunk_key_positions(old_pos: jax.Array, positions: jax.Array,
+                        valid_tok: jax.Array) -> jax.Array:
+    """Key positions over [old cache view | chunk]: cache entries carry
+    their stored/logical position, chunk tokens theirs (-1 when padded)."""
+    return jnp.concatenate(
+        [old_pos, jnp.where(valid_tok, positions, -1).astype(jnp.int32)],
+        axis=1)
+
+
+def chunk_mask_fn(key_pos: jax.Array, n_old: int, positions: jax.Array,
+                  start: jax.Array, window: int):
+    """Per-row validity for chunked prefill over [old cache | chunk] keys.
+
+    A key is attendable iff it is written (pos >= 0), causal (pos <= query
+    pos), inside the sliding window when one applies, and — for cache-side
+    entries — strictly below this request's write frontier (``pos <
+    start``), which also masks stale entries left by a previous occupant
+    of the slot or page.  Shared by the GQA and MLA chunk paths so the
+    frontier semantics cannot drift apart.
+    """
+    total = key_pos.shape[1]
+    from_old = jnp.arange(total) < n_old
+
+    def mask_fn(qi, ki):
+        kj = jnp.clip(ki[0], 0, total - 1)                         # (kc,)
+        kp = key_pos[:, kj]                                        # (B, kc)
+        qp = positions[:, :, None]                                 # (B, C, 1)
+        ok = (kp[:, None, :] >= 0) & (kp[:, None, :] <= qp)
+        ok &= jnp.where(from_old[kj][None, None, :],
+                        kp[:, None, :] < start[:, None, None], True)
+        if window:
+            ok &= kp[:, None, :] > qp - window
+        return ok
+
+    return mask_fn
+
+
+def attn_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                       positions: jax.Array, start: jax.Array,
+                       chunk_len: jax.Array, *, local: bool, max_len: int,
+                       block_table: jax.Array | None = None,
+                       ) -> tuple[jax.Array, dict]:
+    """One prefill chunk against an existing (pooled) cache.
+
+    x: (B, C, D) right-padded per row; positions: (B, C) absolute;
+    start: (B,) first position of the chunk; chunk_len: (B,) valid tokens
+    (0 = inactive row: no writes, output ignored).  Queries attend to the
+    cache contents written by *earlier* chunks of the same request (entries
+    with ``cpos < start``, which also masks stale entries left by a
+    previous occupant of the slot) plus the causal prefix of the chunk
+    itself.  Works on a dense pooled cache, or a paged one when
+    ``block_table`` is given.
+    """
+    b, c, _ = x.shape
+    length = cache_len(cfg, max_len, local)
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, h, positions)
+
+    if block_table is not None:
+        ck = paged.gather_pages(cache["k"], block_table, length)
+        cv = paged.gather_pages(cache["v"], block_table, length)
+        cpos = paged.gather_pages(cache["pos"], block_table, length)
+    else:
+        ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+
+    # attend over [old cache view | chunk] so in-chunk ring writes can never
+    # evict entries an earlier in-chunk query still needs
+    valid_tok = jnp.arange(c)[None, :] < chunk_len[:, None]        # (B, C)
+    key_pos = chunk_key_positions(cpos, positions, valid_tok)
+    kk = jnp.concatenate([ck, k.astype(ck.dtype)], axis=1)
+    vv = jnp.concatenate([cv, v.astype(cv.dtype)], axis=1)
+    window = cfg.window if local else 0
+    mask_fn = chunk_mask_fn(key_pos, length, positions, start, window)
+
+    o = _chunk_attn(q.astype(ck.dtype), kk, vv, mask_fn, cfg.attn_softcap)
+    o = o.reshape(b, c, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    out = linear(p["o_proj"], o)
+
+    # write the chunk into the cache (last writer wins on ring collisions)
+    idx = (positions % length).astype(jnp.int32)
+    ok = paged.chunk_write_plan(idx, valid_tok, length)
+    wpos = positions.astype(jnp.int32)
+    if block_table is not None:
+        new = {
+            "k": paged.scatter_chunk(cache["k"], block_table, idx, k, ok),
+            "v": paged.scatter_chunk(cache["v"], block_table, idx, v, ok),
+            "pos": paged.scatter_chunk(cache["pos"], block_table, idx,
+                                       wpos, ok),
+        }
+    else:
+        bidx = jnp.arange(b)[:, None]
+        idx_w = jnp.where(ok, idx, length)         # out-of-bounds -> dropped
+        new = {
+            "k": ck.at[bidx, idx_w].set(k.astype(ck.dtype), mode="drop"),
+            "v": cv.at[bidx, idx_w].set(v.astype(cv.dtype), mode="drop"),
+            "pos": cpos.at[bidx, idx_w].set(wpos, mode="drop"),
+        }
+    return out, new
+
+
 def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
-                pos: jax.Array, *, local: bool) -> tuple[jax.Array, dict]:
-    """One-token decode.  x: (B, 1, D); pos: (B,) absolute position."""
+                pos: jax.Array, *, local: bool,
+                live: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """One-token decode.  x: (B, 1, D); pos: (B,) absolute position.
+
+    ``live`` (B,) bool: rows flagged False (free / mid-prefill lanes in a
+    batched serve step) drop their cache write, so throwaway decode rows
+    can never corrupt a lane whose prompt is still streaming in.
+    """
     b = x.shape[0]
     h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
     q, k, v = _qkv(p, cfg, h, pos[:, None])
     length = cache["k"].shape[1]
     slot = (pos % length).astype(jnp.int32)
+    wslot = slot if live is None else jnp.where(live, slot, length)
     bidx = jnp.arange(b)
-    ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
-    cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
-    cpos = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+    ck = cache["k"].at[bidx, wslot].set(k[:, 0].astype(cache["k"].dtype),
+                                        mode="drop")
+    cv = cache["v"].at[bidx, wslot].set(v[:, 0].astype(cache["v"].dtype),
+                                        mode="drop")
+    cpos = cache["pos"].at[bidx, wslot].set(pos.astype(jnp.int32),
+                                            mode="drop")
 
     rep = cfg.n_heads // cfg.n_kv_heads
     scale = cfg.head_dim ** -0.5

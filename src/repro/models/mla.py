@@ -15,7 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .attention import _chunk_attn, causal_mask_fn, NEG_INF
+from . import paged
+from .attention import (_chunk_attn, causal_mask_fn, chunk_key_positions,
+                        chunk_mask_fn, NEG_INF)
 from .common import apply_rope, linear, rms_norm
 
 from ..core.qtensor import QTensor
@@ -105,9 +107,118 @@ def mla_prefill(p: dict, cfg: ModelConfig, x: jax.Array,
     return out, cache
 
 
+def init_paged_mla_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                         dtype=jnp.bfloat16) -> dict:
+    """Paged latent pools; validity is positional (idx <= pos), so no pos
+    pool is needed — unallocated logical pages gather NULL_PAGE zeros that
+    the mask never attends."""
+    return {
+        "c_kv": jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((num_pages, page_size, cfg.qk_rope_head_dim),
+                            dtype),
+    }
+
+
+def paged_mla_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
+                          dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jax.ShapeDtypeStruct(
+            (num_pages, page_size, cfg.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct(
+            (num_pages, page_size, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                     pos: jax.Array, block_table: jax.Array, *,
+                     max_len: int, live: jax.Array | None = None,
+                     ) -> tuple[jax.Array, dict]:
+    """Absorbed decode against paged latents: gather the exact dense view,
+    run the unchanged :func:`mla_decode`, scatter the new row back."""
+    dense = {k: paged.gather_pages(cache[k], block_table, max_len)
+             for k in ("c_kv", "k_rope")}
+    delta, dnew = mla_decode(p, cfg, x, dense, pos, live=live)
+    bidx = jnp.arange(x.shape[0])
+    new = {k: paged.scatter_token(cache[k], block_table, pos,
+                                  dnew[k][bidx, pos], ok=live)
+           for k in ("c_kv", "k_rope")}
+    return delta, new
+
+
+def mla_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                      positions: jax.Array, start: jax.Array,
+                      chunk_len: jax.Array, *, max_len: int,
+                      block_table: jax.Array | None = None,
+                      ) -> tuple[jax.Array, dict]:
+    """One prefill chunk against the compressed-latent cache.
+
+    Materialises per-head K/V from [cached latents | chunk latents] (the
+    naive evaluation, as in :func:`mla_forward`) and attends the chunk
+    queries over it with per-row positional masks; writes the chunk's
+    latents into the cache (dense rows or pages).
+    """
+    b, c, _ = x.shape
+    nh = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q_nope, q_rope = _project_q(p, cfg, h, positions)
+    c_new, kr_new = _latents(p, cfg, h, positions)
+
+    if block_table is not None:
+        ckv = paged.gather_pages(cache["c_kv"], block_table, max_len)
+        krope = paged.gather_pages(cache["k_rope"], block_table, max_len)
+    else:
+        ckv, krope = cache["c_kv"], cache["k_rope"]
+
+    valid_tok = jnp.arange(c)[None, :] < chunk_len[:, None]        # (B, C)
+    ckv_all = jnp.concatenate([ckv, c_new.astype(ckv.dtype)], axis=1)
+    kr_all = jnp.concatenate([krope, kr_new.astype(krope.dtype)], axis=1)
+    # cache entries carry their logical index (latents store no positions)
+    old_pos = jnp.broadcast_to(
+        jnp.arange(max_len, dtype=jnp.int32)[None, :], (b, max_len))
+    key_pos = chunk_key_positions(old_pos, positions, valid_tok)
+    mask_fn = chunk_mask_fn(key_pos, max_len, positions, start, 0)
+
+    kvb = linear(p["kv_b"], ckv_all).reshape(b, max_len + c, nh, dn + dv)
+    k_nope, v = kvb[..., :dn], kvb[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                  (b, max_len + c, nh, dr))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    o = _chunk_attn(q, k, v, mask_fn, 0.0)
+    o = o.reshape(b, c, nh * dv).astype(x.dtype)
+    out = linear(p["o_proj"], o)
+
+    idx = positions.astype(jnp.int32)
+    ok = valid_tok                          # full horizon: no ring collisions
+    if block_table is not None:
+        new = {
+            "c_kv": paged.scatter_chunk(cache["c_kv"], block_table, idx,
+                                        c_new, ok),
+            "k_rope": paged.scatter_chunk(cache["k_rope"], block_table, idx,
+                                          kr_new, ok),
+        }
+    else:
+        bidx = jnp.arange(b)[:, None]
+        idx_w = jnp.where(ok, idx, max_len)
+        new = {
+            "c_kv": ckv.at[bidx, idx_w].set(c_new.astype(ckv.dtype),
+                                            mode="drop"),
+            "k_rope": krope.at[bidx, idx_w].set(kr_new.astype(krope.dtype),
+                                                mode="drop"),
+        }
+    return out, new
+
+
 def mla_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
-               pos: jax.Array) -> tuple[jax.Array, dict]:
-    """Absorbed one-token decode.  x: (B, 1, D); pos: (B,)."""
+               pos: jax.Array,
+               live: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """Absorbed one-token decode.  x: (B, 1, D); pos: (B,).
+
+    ``live`` (B,) bool: rows flagged False drop their cache write (see
+    :func:`repro.models.attention.attn_decode`).
+    """
     b = x.shape[0]
     nh = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -116,11 +227,13 @@ def mla_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     q_nope, q_rope = _project_q(p, cfg, h, pos[:, None])      # (B,1,H,*)
     c_new, kr_new = _latents(p, cfg, h, pos[:, None])         # (B,1,rank)
 
+    length = cache["c_kv"].shape[1]
+    wpos = pos if live is None else jnp.where(live, pos, length)
     bidx = jnp.arange(b)
-    c_kv = cache["c_kv"].at[bidx, pos].set(
-        c_new[:, 0].astype(cache["c_kv"].dtype))
-    k_rope = cache["k_rope"].at[bidx, pos].set(
-        kr_new[:, 0].astype(cache["k_rope"].dtype))
+    c_kv = cache["c_kv"].at[bidx, wpos].set(
+        c_new[:, 0].astype(cache["c_kv"].dtype), mode="drop")
+    k_rope = cache["k_rope"].at[bidx, wpos].set(
+        kr_new[:, 0].astype(cache["k_rope"].dtype), mode="drop")
 
     # absorb kv_b: W_kb (rank, H, dn) for keys, W_vb (rank, H, dv) for values
     dt = x.dtype

@@ -234,10 +234,15 @@ class Model:
             flat = stacking.stack_tree(flat, self.plan)
         return flat
 
-    def decode_step(self, params, cache, tokens, pos):
+    def decode_step(self, params, cache, tokens, pos, *, paged=None,
+                    live=None):
         """One decode step.  tokens: (B,) int32; pos: (B,).
 
-        Returns (logits (B, vocab), new_cache).
+        Returns (logits (B, vocab), new_cache).  ``live`` (B,) bool: rows
+        flagged False compute a throwaway step whose cache writes are
+        dropped (used by the serve loop so free / mid-prefill lanes never
+        corrupt pooled state).  ``paged`` (internal): see
+        :meth:`decode_step_paged`.
         """
         cfg = self.cfg
         x = self._embed_tokens(params, tokens[:, None])
@@ -247,7 +252,8 @@ class Model:
                 lp = layer_prefix("dec", layer)
                 p = subview(params, lp)
                 c = subview(cache, lp)
-                x, c_new = transformer.decode_layer(cfg, p, layer, x, c, pos)
+                x, c_new = transformer.decode_layer(cfg, p, layer, x, c, pos,
+                                                    paged=paged, live=live)
                 for k, v in c_new.items():
                     new_cache[f"{lp}/{k}"] = v
         else:
@@ -265,7 +271,8 @@ class Model:
                     for u in range(_g.unit):
                         layer = _g.layer(0, u)
                         xc, c_new = transformer.decode_layer(
-                            cfg, pslice[u], layer, xc, dict(cslice[u]), pos)
+                            cfg, pslice[u], layer, xc, dict(cslice[u]), pos,
+                            paged=paged, live=live)
                         out_caches[u] = c_new
                     return xc, out_caches
 
@@ -276,6 +283,110 @@ class Model:
                             f"{stacking.group_prefix('dec', gi)}/u{u}/{k}"] = v
         x = rms_norm(x, params["output_norm"], cfg.norm_eps)
         return self.logits(params, x)[:, 0], new_cache
+
+    # ---------------------------------------------------------------- paged
+    def init_paged_cache(self, num_pages: int, page_size: int, slots: int,
+                         dtype=jnp.bfloat16):
+        """Paged decode cache: attention K/V (+pos) and MLA latents become
+        ``(num_pages, page_size, ...)`` pools shared by all slots via block
+        tables; recurrent state stays dense ``(slots, ...)`` (O(1)/slot)."""
+        flat = {}
+        for layer in range(self.cfg.n_layers):
+            c = transformer.init_layer_cache_paged(
+                self.cfg, layer, num_pages, page_size, slots, dtype)
+            for k, v in c.items():
+                flat[f"{layer_prefix('dec', layer)}/{k}"] = v
+        if self.scan:
+            flat = stacking.stack_tree(flat, self.plan)
+        return flat
+
+    def paged_cache_specs(self, num_pages: int, page_size: int, slots: int,
+                          dtype=jnp.bfloat16):
+        flat = {}
+        for layer in range(self.cfg.n_layers):
+            c = transformer.layer_cache_specs_paged(
+                self.cfg, layer, num_pages, page_size, slots, dtype)
+            for k, v in c.items():
+                flat[f"{layer_prefix('dec', layer)}/{k}"] = v
+        if self.scan:
+            flat = stacking.stack_tree(flat, self.plan)
+        return flat
+
+    def decode_step_paged(self, params, cache, tokens, pos, block_tables,
+                          *, page_size: int, max_len: int, live=None):
+        """One decode step against a paged cache.
+
+        ``block_tables``: {"full": (B, n) int32, "ring": (B, n') int32}
+        mapping each slot's logical pages to pool pages (see
+        models/paged.py).  Bitwise-identical to :meth:`decode_step` on the
+        equivalent dense cache: the paged path gathers the exact dense view
+        and runs the same per-layer decode on it.
+        """
+        return self.decode_step(params, cache, tokens, pos,
+                                paged=(block_tables, page_size, max_len),
+                                live=live)
+
+    def prefill_chunk(self, params, cache, tokens, start, chunk_len, *,
+                      max_len: int, block_tables=None, page_size: int = 0):
+        """One chunked-prefill step over the pooled decode cache.
+
+        tokens: (B, C) int32, right-padded per row; start: (B,) absolute
+        position of each row's first token; chunk_len: (B,) valid tokens
+        (0 = inactive row — no cache writes, output ignored).  Rows whose
+        chunk starts at position 0 reset their recurrent state.  Returns
+        (logits (B, vocab) at each row's last valid position, new_cache).
+
+        With ``block_tables``/``page_size`` the cache is paged; otherwise
+        it is the dense pooled layout of :meth:`init_cache`.
+        """
+        cfg = self.cfg
+        if cfg.frontend == "vit" or cfg.is_encdec:
+            raise ValueError("chunked prefill supports decoder-only text "
+                             "models (no frontend fusion mid-stream)")
+        paged = (None if block_tables is None
+                 else (block_tables, page_size, max_len))
+        c = tokens.shape[1]
+        x = self._embed_tokens(params, tokens)
+        positions = start[:, None] + jnp.arange(c)[None, :]
+        new_cache: dict[str, Any] = {}
+        if not self.scan:
+            for layer in range(cfg.n_layers):
+                lp = layer_prefix("dec", layer)
+                x, c_new = transformer.prefill_chunk_layer(
+                    cfg, subview(params, lp), layer, x, subview(cache, lp),
+                    positions, start, chunk_len, max_len=max_len, paged=paged)
+                for k, v in c_new.items():
+                    new_cache[f"{lp}/{k}"] = v
+        else:
+            for gi, g in enumerate(self.plan.dec_groups):
+                unit_params = {u: stacking.group_view(params, "dec", gi, u)
+                               for u in range(g.unit)}
+                unit_cache = {
+                    u: stacking.group_view(cache, "dec", gi, u)
+                    for u in range(g.unit)}
+
+                def body(carry, inp, _g=g):
+                    xc = carry
+                    pslice, cslice = inp
+                    out_caches = {}
+                    for u in range(_g.unit):
+                        layer = _g.layer(0, u)
+                        xc, c_new = transformer.prefill_chunk_layer(
+                            cfg, pslice[u], layer, xc, dict(cslice[u]),
+                            positions, start, chunk_len, max_len=max_len,
+                            paged=paged)
+                        out_caches[u] = c_new
+                    return xc, out_caches
+
+                x, caches = jax.lax.scan(body, x, (unit_params, unit_cache))
+                for u, cc in caches.items():
+                    for k, v in cc.items():
+                        new_cache[
+                            f"{stacking.group_prefix('dec', gi)}/u{u}/{k}"] = v
+        x = rms_norm(x, params["output_norm"], cfg.norm_eps)
+        idx = jnp.clip(chunk_len - 1, 0, c - 1).astype(jnp.int32)
+        last_h = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        return self.logits(params, last_h)[:, 0], new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,109 @@
+"""Paged KV-cache primitives: page pools, gathers and scatters.
+
+A *paged* cache stores each positional cache leaf as a shared pool of
+fixed-size pages, ``(num_pages, page_size, *entry_shape)``, instead of a
+dense ``(batch, length, *entry_shape)`` block per slot.  A per-slot *block
+table* (``(batch, n_logical_pages)`` int32) maps logical page indices to
+physical page ids, so memory scales with *live tokens* rather than
+``slots x max_len``.
+
+Two physical pages are reserved:
+
+  * ``NULL_PAGE`` (0) — read-only; logical pages a slot has not allocated
+    yet point here.  Its ``pos`` entries stay ``-1`` forever so gathered
+    entries are masked exactly like unwritten dense-cache entries.
+  * ``GARBAGE_PAGE`` (1) — write sink; free decode lanes and padded chunk
+    tokens are routed here.  It is never mapped into a live block table,
+    so its contents are never read.
+
+The gather path reconstructs the *exact* dense layout (``gather_pages`` +
+slice), so the dense decode/prefill math can run unchanged on the gathered
+view — paged and contiguous paths are bitwise identical by construction
+(see tests/test_paged_cache.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NULL_PAGE = 0
+GARBAGE_PAGE = 1
+RESERVED_PAGES = 2
+
+
+def pages_for(length: int, page_size: int) -> int:
+    """Logical pages needed to cover ``length`` positions."""
+    return -(-length // page_size)
+
+
+def gather_pages(pool: jnp.ndarray, block_table: jnp.ndarray,
+                 length: int) -> jnp.ndarray:
+    """Reconstruct the dense ``(B, length, ...)`` view of a paged leaf.
+
+    pool: (num_pages, P, ...); block_table: (B, n_pages) int32 with
+    ``n_pages * P >= length``.  Unallocated logical pages point at
+    ``NULL_PAGE`` and gather its (never written) contents.
+    """
+    b, n_pages = block_table.shape
+    p = pool.shape[1]
+    g = pool[block_table]                       # (B, n_pages, P, ...)
+    g = g.reshape(b, n_pages * p, *pool.shape[2:])
+    return g[:, :length]
+
+
+def scatter_token(pool: jnp.ndarray, block_table: jnp.ndarray,
+                  idx: jnp.ndarray, val: jnp.ndarray,
+                  ok: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Write one entry per batch row at logical index ``idx`` (B,).
+
+    val: (B, ...).  Rows with ``ok == False`` (non-live decode lanes) are
+    routed to ``GARBAGE_PAGE``.  The caller guarantees live rows' logical
+    pages are allocated (free lanes' block tables point at
+    ``GARBAGE_PAGE`` anyway).
+    """
+    p = pool.shape[1]
+    page = idx // p
+    off = idx % p
+    phys = jnp.take_along_axis(block_table, page[:, None], axis=1)[:, 0]
+    if ok is not None:
+        phys = jnp.where(ok, phys, GARBAGE_PAGE)
+        off = jnp.where(ok, off, 0)
+    return pool.at[phys, off].set(val.astype(pool.dtype))
+
+
+def scatter_chunk(pool: jnp.ndarray, block_table: jnp.ndarray,
+                  idx: jnp.ndarray, val: jnp.ndarray,
+                  ok: jnp.ndarray) -> jnp.ndarray:
+    """Write a chunk of entries.  idx/ok: (B, C); val: (B, C, ...).
+
+    Entries with ``ok == False`` (padded tokens, superseded ring writes)
+    are routed to ``GARBAGE_PAGE`` instead of their mapped page.
+    """
+    b, c = idx.shape
+    p = pool.shape[1]
+    page = idx // p
+    off = idx % p
+    phys = jnp.take_along_axis(block_table, page, axis=1)
+    phys = jnp.where(ok, phys, GARBAGE_PAGE)
+    off = jnp.where(ok, off, 0)
+    flat = val.reshape(b * c, *val.shape[2:]).astype(pool.dtype)
+    return pool.at[phys.reshape(-1), off.reshape(-1)].set(flat)
+
+
+def chunk_write_plan(idx: jnp.ndarray, valid: jnp.ndarray, length: int):
+    """Resolve duplicate in-chunk writes to the same logical index.
+
+    idx: (B, C) logical target per token; valid: (B, C) real (non-padded)
+    tokens.  Returns ``ok`` (B, C): valid tokens that are the *last* writer
+    of their logical index — earlier writers are dropped, matching the
+    dense ring-buffer semantics where later positions evict earlier ones.
+    (Duplicates only arise for ring targets when a chunk spans more than
+    one ring revolution.)
+    """
+    b, c = idx.shape
+    j = jnp.arange(c, dtype=jnp.int32)[None, :]
+    marker = jnp.where(valid, j, -1)
+    safe_idx = jnp.where(valid, idx, 0)
+    bidx = jnp.arange(b)[:, None]
+    last = jnp.full((b, length), -1, jnp.int32).at[bidx, safe_idx].max(marker)
+    return valid & (jnp.take_along_axis(last, safe_idx, axis=1) == j)

@@ -97,6 +97,65 @@ def rglru_prefill(p: dict, cfg: ModelConfig, x: jax.Array,
     return out, {"h": hseq[:, -1], "conv": conv_state}
 
 
+def _conv1d_chunk(w: jax.Array, x: jax.Array, state: jax.Array,
+                  chunk_len: jax.Array):
+    """Causal conv over a right-padded chunk with an exact carried state.
+
+    x: (B, C, D); state: (B, W-1, D); chunk_len: (B,) valid tokens per row.
+    The returned state holds, per row, the trailing ``W-1`` *valid* inputs
+    (rows with ``chunk_len == 0`` keep their state untouched) — padding at
+    the end of a partial chunk never leaks into the next chunk's conv.
+    """
+    width = w.shape[0]
+    xp = jnp.concatenate([state, x], axis=1)               # (B, W-1+C, D)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(width))
+    if width == 1:
+        return y, state
+    take = chunk_len[:, None] + jnp.arange(width - 1)[None, :]   # (B, W-1)
+    new_state = jnp.take_along_axis(xp, take[..., None], axis=1)
+    return y, new_state.astype(state.dtype)
+
+
+def rglru_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                        start: jax.Array, chunk_len: jax.Array,
+                        ) -> tuple[jax.Array, dict]:
+    """One prefill chunk carrying the recurrent state.
+
+    Rows whose chunk starts at position 0 reset their state first (the
+    pooled cache row may hold a retired request's final state).  Padded
+    steps (``j >= chunk_len``) are folded to the identity update
+    ``a=1, b=0``, so the final state is exact for partial chunks and rows
+    with ``chunk_len == 0`` pass through untouched.
+    """
+    fresh = (start == 0) & (chunk_len > 0)
+    h0 = jnp.where(fresh[:, None], 0.0, cache["h"])
+    conv0 = jnp.where(fresh[:, None, None], 0.0, cache["conv"])
+
+    h = rms_norm(x, p["rec_norm"], cfg.norm_eps)
+    xb = linear(p["in_x"], h)
+    gb = linear(p["in_g"], h)
+    xc, conv_state = _conv1d_chunk(p["conv"], xb, conv0, chunk_len)
+    a, b = _gates(p, xc)
+    valid = (jnp.arange(x.shape[1])[None, :] < chunk_len[:, None])[..., None]
+    a = jnp.where(valid, a, 1.0)
+    b = jnp.where(valid, b, 0.0)
+    # fold the carried state into the first step: h_1 = a_1 * h0 + b_1
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = hseq.astype(x.dtype) * jax.nn.gelu(
+        gb.astype(jnp.float32)).astype(x.dtype)
+    out = linear(p["out"], y)
+    # identity updates after the last valid step leave hseq[:, -1] exact
+    return out, {"h": hseq[:, -1], "conv": conv_state}
+
+
 def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
     return {
         "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),

@@ -66,29 +66,62 @@ def apply_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
     return x, aux
 
 
+def _select_live(cache_new: dict, cache_old: dict, live) -> dict:
+    """Keep non-live rows' state untouched (recurrent passthrough leaves:
+    every leaf has a leading batch dim)."""
+    if live is None:
+        return cache_new
+    out = {}
+    for k, v in cache_new.items():
+        m = live.reshape(live.shape[0], *([1] * (v.ndim - 1)))
+        out[k] = jnp.where(m, v, cache_old[k])
+    return out
+
+
 def decode_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
-                 cache: dict, pos: jax.Array):
-    """One-token decode through one layer.  Returns (x, new_cache)."""
+                 cache: dict, pos: jax.Array, *, paged=None, live=None):
+    """One-token decode through one layer.  Returns (x, new_cache).
+
+    ``paged``: optional ``(block_tables, page_size, max_len)`` — attention
+    and MLA caches are then page pools indexed through the slot block
+    tables (``block_tables["full"]`` / ``["ring"]``); recurrent state is a
+    dense passthrough either way.  ``live`` (B,) bool: rows flagged False
+    (free / mid-prefill serve lanes) leave the cache untouched.
+    """
     kind = cfg.block_kind(layer)
     cross = {k: cache.pop(k) for k in ("cross_k", "cross_v")
              if k in cache} if cfg.is_encdec else {}
 
     if kind in ("attn", "local_attn"):
-        if cfg.mla:
-            delta, cache_new = mla.mla_decode(p, cfg, x, cache, pos)
+        local = kind == "local_attn"
+        if paged is not None:
+            block_tables, _, max_len = paged
+            # MLA latents always span the full horizon (no ring bound)
+            bt = block_tables["ring" if local and not cfg.mla else "full"]
+            if cfg.mla:
+                delta, cache_new = mla.mla_decode_paged(
+                    p, cfg, x, cache, pos, bt, max_len=max_len, live=live)
+            else:
+                delta, cache_new = attention.attn_decode_paged(
+                    p, cfg, x, cache, pos, bt, local=local, max_len=max_len,
+                    live=live)
+        elif cfg.mla:
+            delta, cache_new = mla.mla_decode(p, cfg, x, cache, pos,
+                                              live=live)
         else:
             delta, cache_new = attention.attn_decode(
-                p, cfg, x, cache, pos, local=(kind == "local_attn"))
+                p, cfg, x, cache, pos, local=local, live=live)
         x = x + delta
     elif kind == "rglru":
         delta, cache_new = rglru.rglru_decode(p, cfg, x, cache, pos)
+        cache_new = _select_live(cache_new, cache, live)
         x = x + delta
     elif kind == "mlstm":
         delta, cache_new = xlstm.mlstm_decode(p, cfg, x, cache, pos)
-        return x + delta, cache_new
+        return x + delta, _select_live(cache_new, cache, live)
     elif kind == "slstm":
         delta, cache_new = xlstm.slstm_decode(p, cfg, x, cache, pos)
-        return x + delta, cache_new
+        return x + delta, _select_live(cache_new, cache, live)
     else:
         raise ValueError(kind)
 
@@ -184,6 +217,113 @@ def prefill_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
         h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
         x = x + ffn_apply(p, h)
     return x, cache
+
+
+def prefill_chunk_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
+                        cache: dict, positions: jax.Array, start: jax.Array,
+                        chunk_len: jax.Array, *, max_len: int, paged=None):
+    """One prefill chunk through one layer against the pooled cache.
+
+    x: (B, C, D) right-padded per row; ``chunk_len`` (B,) counts valid
+    tokens (0 = inactive row).  Returns (x, new_layer_cache).  Same
+    ``paged`` contract as :func:`decode_layer`.
+    """
+    kind = cfg.block_kind(layer)
+    if cfg.is_encdec:
+        raise ValueError("chunked prefill does not support encoder-decoder "
+                         "architectures (no cross-attention cache build)")
+
+    if kind in ("attn", "local_attn"):
+        local = kind == "local_attn"
+        bt = None
+        if paged is not None:
+            block_tables, _, _ = paged
+            # MLA latents always span the full horizon (no ring bound)
+            bt = block_tables["ring" if local and not cfg.mla else "full"]
+        if cfg.mla:
+            delta, cache_new = mla.mla_prefill_chunk(
+                p, cfg, x, cache, positions, start, chunk_len,
+                max_len=max_len, block_table=bt)
+        else:
+            delta, cache_new = attention.attn_prefill_chunk(
+                p, cfg, x, cache, positions, start, chunk_len, local=local,
+                max_len=max_len, block_table=bt)
+        x = x + delta
+    elif kind == "rglru":
+        delta, cache_new = rglru.rglru_prefill_chunk(
+            p, cfg, x, cache, start, chunk_len)
+        x = x + delta
+    elif kind == "mlstm":
+        delta, cache_new = xlstm.mlstm_prefill_chunk(
+            p, cfg, x, cache, start, chunk_len)
+        return x + delta, cache_new
+    elif kind == "slstm":
+        delta, cache_new = xlstm.slstm_prefill_chunk(
+            p, cfg, x, cache, start, chunk_len)
+        return x + delta, cache_new
+    else:
+        raise ValueError(kind)
+
+    if cfg.d_ff == 0 and not cfg.is_moe:
+        return x, cache_new
+
+    if cfg.moe_layer(layer):
+        h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+        y, _ = moe.moe_apply(p, cfg, h)
+        if cfg.dense_residual:
+            from .spec import subview
+            rp = subview(p, "res")
+            hr = rms_norm(x, rp["ffn_norm"], cfg.norm_eps)
+            y = y + ffn_apply(rp, hr)
+        x = x + y
+    else:
+        h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+        x = x + ffn_apply(p, h)
+    return x, cache_new
+
+
+def init_layer_cache_paged(cfg: ModelConfig, layer: int, num_pages: int,
+                           page_size: int, slots: int,
+                           dtype=jnp.bfloat16) -> dict:
+    """Paged layer cache: attention/MLA leaves become page pools; recurrent
+    state stays a dense ``(slots, ...)`` passthrough (O(1) per slot)."""
+    kind = cfg.block_kind(layer)
+    if cfg.is_encdec:
+        raise ValueError("paged caches do not support encoder-decoder "
+                         "architectures")
+    if kind in ("attn", "local_attn"):
+        if cfg.mla:
+            return mla.init_paged_mla_cache(cfg, num_pages, page_size, dtype)
+        return attention.init_paged_attn_cache(cfg, num_pages, page_size,
+                                               dtype)
+    if kind == "rglru":
+        return rglru.init_rglru_cache(cfg, slots, dtype)
+    if kind == "mlstm":
+        return xlstm.init_mlstm_cache(cfg, slots, dtype)
+    if kind == "slstm":
+        return xlstm.init_slstm_cache(cfg, slots, dtype)
+    raise ValueError(kind)
+
+
+def layer_cache_specs_paged(cfg: ModelConfig, layer: int, num_pages: int,
+                            page_size: int, slots: int,
+                            dtype=jnp.bfloat16) -> dict:
+    kind = cfg.block_kind(layer)
+    if cfg.is_encdec:
+        raise ValueError("paged caches do not support encoder-decoder "
+                         "architectures")
+    if kind in ("attn", "local_attn"):
+        if cfg.mla:
+            return mla.paged_mla_cache_specs(cfg, num_pages, page_size, dtype)
+        return attention.paged_attn_cache_specs(cfg, num_pages, page_size,
+                                                dtype)
+    if kind == "rglru":
+        return rglru.rglru_cache_specs(cfg, slots, dtype)
+    if kind == "mlstm":
+        return xlstm.mlstm_cache_specs(cfg, slots, dtype)
+    if kind == "slstm":
+        return xlstm.slstm_cache_specs(cfg, slots, dtype)
+    raise ValueError(kind)
 
 
 def init_layer_cache(cfg: ModelConfig, layer: int, batch: int, max_len: int,

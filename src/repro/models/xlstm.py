@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .common import as_array, linear, rms_norm
-from .rglru import _block_diag, _conv1d
+from .rglru import _block_diag, _conv1d, _conv1d_chunk
 
 CHUNK = 256
 
@@ -146,6 +146,44 @@ def mlstm_prefill(p: dict, cfg: ModelConfig, x: jax.Array,
     y = hs * jax.nn.silu(gate_z.astype(jnp.float32)).astype(x.dtype)
     out = linear(p["down"], y)
     return out, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+def mlstm_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                        start: jax.Array, chunk_len: jax.Array,
+                        ) -> tuple[jax.Array, dict]:
+    """One prefill chunk carrying the (C, n, m) matrix-memory state.
+
+    Padded steps are masked through the gates (``i = -inf``, ``log f = 0``:
+    no write, no decay), which leaves the carried state exact for partial
+    chunks; rows with ``chunk_len == 0`` pass through untouched.  Rows
+    starting at position 0 reset their state first.
+    """
+    inner, nh, hd = _mlstm_dims(cfg)
+    b, c, _ = x.shape
+    assert c <= CHUNK or c % CHUNK == 0, (
+        f"prefill chunk {c} must be <= {CHUNK} or a multiple of it")
+    fresh = (start == 0) & (chunk_len > 0)
+    C0 = jnp.where(fresh[:, None, None, None], 0.0, cache["C"])
+    n0 = jnp.where(fresh[:, None, None], 0.0, cache["n"])
+    m0 = jnp.where(fresh[:, None], -1e30, cache["m"])
+    conv0 = jnp.where(fresh[:, None, None], 0.0, cache["conv"])
+
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    up = linear(p["up"], h)
+    cell_in, gate_z = jnp.split(up, 2, axis=-1)
+    xc, conv_state = _conv1d_chunk(p["conv"], cell_in, conv0, chunk_len)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q, k, v = _mlstm_qkv(p, xc, nh, hd)
+    i_pre, log_f = _mlstm_gates(p, xc, nh)
+    valid = (jnp.arange(c)[None, :] < chunk_len[:, None])[..., None]
+    i_pre = jnp.where(valid, i_pre, -1e30)
+    log_f = jnp.where(valid, log_f, 0.0)
+    hs, (Cn, nn, mn) = mlstm_chunked(q, k, v, i_pre, log_f,
+                                     state=(C0, n0, m0))
+    hs = hs.reshape(*x.shape[:-1], inner).astype(x.dtype)
+    y = hs * jax.nn.silu(gate_z.astype(jnp.float32)).astype(x.dtype)
+    out = linear(p["down"], y)
+    return out, {"C": Cn, "n": nn, "m": mn, "conv": conv_state}
 
 
 def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
@@ -279,6 +317,43 @@ def slstm_prefill(p: dict, cfg: ModelConfig, x: jax.Array,
         p["ff_up"], rms_norm(mid, p["ffn_norm"], cfg.norm_eps)
     ).astype(jnp.float32)).astype(x.dtype))
     return y + ff, {"c": c, "n": n, "h": hn, "m": m, "conv": conv_state}
+
+
+def slstm_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                        start: jax.Array, chunk_len: jax.Array,
+                        ) -> tuple[jax.Array, dict]:
+    """One prefill chunk carrying the scalar-memory state; the state tuple
+    is frozen elementwise on padded steps, so partial chunks are exact and
+    ``chunk_len == 0`` rows pass through untouched."""
+    b, c, d = x.shape
+    nh = cfg.n_heads
+    fresh = (start == 0) & (chunk_len > 0)
+    fz = fresh[:, None]
+    state0 = (jnp.where(fz, 0.0, cache["c"]), jnp.where(fz, 0.0, cache["n"]),
+              jnp.where(fz, 0.0, cache["h"]),
+              jnp.where(fz, -1e30, cache["m"]))
+    conv0 = jnp.where(fresh[:, None, None], 0.0, cache["conv"])
+
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xc, conv_state = _conv1d_chunk(p["conv"], h, conv0, chunk_len)
+    w_pre = linear(p["w_gates"], xc)
+    valid = jnp.arange(c)[None, :] < chunk_len[:, None]            # (B, C)
+
+    def step(state, inp):
+        wt, vt = inp                                       # (B, 4D), (B,)
+        new = _slstm_cell(wt, p["r_gates"], state, nh)
+        sel = tuple(jnp.where(vt[:, None], nw, old)
+                    for nw, old in zip(new, state))
+        return sel, sel[2]
+
+    (cs, ns, hn, ms), hs = jax.lax.scan(
+        step, state0, (jnp.moveaxis(w_pre, 1, 0), jnp.moveaxis(valid, 1, 0)))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    mid = x + y
+    ff = linear(p["ff_down"], jax.nn.gelu(linear(
+        p["ff_up"], rms_norm(mid, p["ffn_norm"], cfg.norm_eps)
+    ).astype(jnp.float32)).astype(x.dtype))
+    return y + ff, {"c": cs, "n": ns, "h": hn, "m": ms, "conv": conv_state}
 
 
 def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:

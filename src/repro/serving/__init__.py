@@ -1,2 +1,2 @@
-from .engine import Engine, EngineStats, Request, RequestStats
-from .sampler import SamplerConfig, sample
+from .engine import Engine, EngineStats, PagePool, Request, RequestStats
+from .sampler import SamplerConfig, sample, sample_per_slot

@@ -1,4 +1,5 @@
-"""Continuous-batching serving engine (slot scheduler over one pooled cache).
+"""Continuous-batching serving engine: paged pooled KV cache + chunked
+prefill admission over a slot scheduler.
 
 Architecture
 ------------
@@ -6,36 +7,53 @@ Architecture
 ``Engine.serve`` runs a genuine continuous-batching loop, the single-machine
 deployment driver for the paper's scenario (DQ3_K_M weights, 32k context):
 
-  * **Slots.**  A fixed pool of ``slots`` decode lanes shares ONE pooled,
-    slot-indexed decode cache of batch size ``slots`` (every cache leaf —
-    attention K/V rings, MLA latents, recurrent states — has a leading batch
-    dimension, so a slot is row ``s`` of every leaf).
-  * **Decode.**  Each iteration issues a SINGLE jit'd batched
-    ``model.decode_step`` over all ``slots`` rows — live slots advance one
-    token, free slots compute throwaway rows that are overwritten at the next
-    admission.  This is what makes the hot path measurable: per-iteration
-    cost is one batched step, not one step per request.
-  * **Admission.**  When a slot is free and the queue is non-empty, the next
-    request is prefilled alone (batch 1, exact length — so recurrent-state
-    archs are exact too), its first token is sampled from the prefill
-    logits, and its fresh cache rows are written into the slot's rows of the
-    pooled cache.  Admission happens *mid-stream*: new requests join while
-    others are still decoding.
-  * **Retirement.**  A slot frees when its request hits ``eos_id``, produces
-    ``max_new`` tokens, or reaches the ``max_len`` cache horizon; the freed
-    slot is re-admitted into on the same iteration.
-  * **Stats.**  Per-request queue wait / prefill time / decode tokens-per-
-    second plus per-iteration live-slot occupancy are collected into an
-    :class:`EngineStats` report (``engine.last_stats``; also attached to each
-    request as ``req.stats``).
+  * **Slots.**  A fixed pool of ``slots`` decode lanes shares ONE pooled
+    decode cache.  A lane is FREE, PREFILLING (its prompt is streaming in,
+    chunk by chunk), or LIVE (decoding).
+  * **Paged KV cache.**  With ``page_size > 0`` the positional cache leaves
+    (attention K/V rings, MLA latents) are stored as shared page pools —
+    ``(num_pages, page_size, ...)`` — and each lane owns a *block table*
+    mapping its logical pages to physical pages, so cache memory scales
+    with **live tokens** instead of ``slots x max_len``.  Pages come from a
+    host-side free-list allocator (:class:`PagePool`); two physical pages
+    are reserved (NULL for unallocated reads, GARBAGE as a write sink for
+    free lanes).  Recurrent state (RG-LRU / xLSTM) is O(1) per slot and
+    stays a dense passthrough.  With ``page_size == 0`` the same loop runs
+    over the contiguous slot-indexed layout — the two are bitwise
+    identical (tests/test_paged_cache.py).
+  * **Chunked prefill admission.**  Queued prompts are admitted in fixed
+    ``prefill_chunk``-token chunks through ONE batched
+    ``model.prefill_chunk`` call per iteration (all currently-admitting
+    lanes share the call), interleaved with decode: a long prompt never
+    stalls live lanes for more than one chunk's worth of compute, and
+    multiple queued admissions batch into the same prefill call instead of
+    one batch-1 call per request.  A lane's first token is sampled from
+    the logits at its final prompt position.
+  * **Decode.**  Each iteration issues a SINGLE jit'd batched decode step
+    over all ``slots`` rows — live lanes advance one token; free lanes
+    compute throwaway rows whose cache writes are routed to the garbage
+    page (paged) or overwritten on admission (dense).
+  * **Retirement.**  A lane frees when its request hits ``eos_id``,
+    produces ``max_new`` tokens, or reaches the ``max_len`` cache horizon;
+    its pages return to the pool the same iteration (the stress tests
+    assert zero leaked pages after every serve call).
+  * **Sampling.**  Every request samples from its own PRNG stream,
+    ``fold_in(fold_in(PRNGKey(seed), rid), token_index)``, applied per slot
+    via a vmap'd sampler — a request's stochastic output is identical
+    whether it runs alone or interleaved with any other batch mix.
+  * **Stats.**  Per-request queue wait / prefill time / decode tok/s plus
+    per-iteration live-slot occupancy, live-token counts and
+    page-pool occupancy land in :class:`EngineStats`
+    (``engine.last_stats``), including bytes-per-live-token against the
+    dense ``slots x max_len`` layout.
 
 ``Engine.generate`` is the one-shot batched path (used for parity testing
 and as the sequential-serving baseline).  Mixed-length prompts are exact:
 prefill gathers logits at ``lengths - 1`` per row rather than the last
-*padded* position (``Model.prefill(..., lengths=...)``).  Note that for
-recurrent archs (RG-LRU / xLSTM) right-padded batched prefill contaminates
-the recurrent state, so one-shot ``generate`` requires equal lengths there —
-``serve`` prefills per-request and is exact for every arch.
+*padded* position (``Model.prefill(..., lengths=...)``).  Recurrent archs
+(RG-LRU / xLSTM) reject mixed-length one-shot generate (right-padded
+prefill contaminates the state); ``serve`` streams every prompt through
+per-row masked chunks and is exact for every arch.
 
 The multi-pod variant shards the same functions via ``parallel.sharding``
 (see launch/serve.py).
@@ -46,16 +64,60 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
+from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..models import paged, xlstm
+from ..models.attention import cache_len
 from ..models.model import Model
-from .sampler import SamplerConfig, sample
+from .sampler import (SamplerConfig, request_key, sample, sample_per_slot,
+                      stream_key)
 
 _RECURRENT_KINDS = ("rglru", "mlstm", "slstm")
+
+
+class PagePool:
+    """Host-side free-list allocator over physical page ids
+    ``[RESERVED_PAGES, num_pages)`` of one shared page pool."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < paged.RESERVED_PAGES:
+            raise ValueError(f"num_pages={num_pages} < the "
+                             f"{paged.RESERVED_PAGES} reserved pages")
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, paged.RESERVED_PAGES - 1, -1))
+        self._held: set[int] = set()
+        self.peak_in_use = 0
+
+    @property
+    def capacity(self) -> int:
+        return self.num_pages - paged.RESERVED_PAGES
+
+    @property
+    def in_use(self) -> int:
+        return len(self._held)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                f"page pool exhausted ({self.capacity} pages in use); size "
+                f"the pool for the worst-case live-token load or admit "
+                f"fewer concurrent requests")
+        pid = self._free.pop()
+        self._held.add(pid)
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pid
+
+    def free(self, pages) -> None:
+        for pid in pages:
+            if pid not in self._held:
+                raise ValueError(f"double/foreign free of page {pid}")
+            self._held.remove(pid)
+            self._free.append(pid)
 
 
 @dataclasses.dataclass
@@ -71,6 +133,13 @@ class RequestStats:
     @property
     def decode_tok_s(self) -> float:
         return self.decode_tokens / self.decode_s if self.decode_s > 0 else 0.0
+
+    @property
+    def admission_s(self) -> float:
+        """Time from submit to first token: queue wait + prefill wall time
+        (the latter includes decode iterations interleaved between a long
+        prompt's chunks — it is the TTFT the requester experiences)."""
+        return self.queue_wait_s + self.prefill_s
 
 
 @dataclasses.dataclass
@@ -89,9 +158,22 @@ class EngineStats:
 
     requests: list[RequestStats] = dataclasses.field(default_factory=list)
     decode_iterations: int = 0
+    prefill_iterations: int = 0
+    overlap_iterations: int = 0          # chunk prefill + live decode together
     live_per_iteration: list[int] = dataclasses.field(default_factory=list)
+    live_tokens_per_iteration: list[int] = dataclasses.field(
+        default_factory=list)
+    pages_in_use_per_iteration: list[int] = dataclasses.field(
+        default_factory=list)
     total_tokens: int = 0
     wall_s: float = 0.0
+    # paged-cache geometry (0 when serving the dense contiguous layout)
+    page_size: int = 0
+    num_pages: int = 0
+    page_bytes: int = 0                  # bytes per page across all leaves
+    peak_pages: int = 0
+    pages_leaked: int = 0                # pages still held after the call
+    dense_cache_bytes: int = 0           # slots x max_len layout, for compare
 
     @property
     def max_concurrency(self) -> int:
@@ -107,14 +189,50 @@ class EngineStats:
     def throughput_tok_s(self) -> float:
         return self.total_tokens / self.wall_s if self.wall_s > 0 else 0.0
 
+    @property
+    def mean_live_tokens(self) -> float:
+        if not self.live_tokens_per_iteration:
+            return 0.0
+        return (sum(self.live_tokens_per_iteration)
+                / len(self.live_tokens_per_iteration))
+
+    @property
+    def mean_admission_s(self) -> float:
+        if not self.requests:
+            return 0.0
+        return sum(r.admission_s for r in self.requests) / len(self.requests)
+
+    @property
+    def cache_bytes_mean(self) -> float:
+        """Mean positional-cache footprint over the serve call."""
+        if self.page_size and self.pages_in_use_per_iteration:
+            mean_pages = (sum(self.pages_in_use_per_iteration)
+                          / len(self.pages_in_use_per_iteration))
+            return mean_pages * self.page_bytes
+        return float(self.dense_cache_bytes)
+
+    @property
+    def bytes_per_live_token(self) -> float:
+        return self.cache_bytes_mean / max(self.mean_live_tokens, 1e-9)
+
     def report(self) -> str:
         lines = [
             f"{len(self.requests)} requests, {self.total_tokens} tokens in "
             f"{self.wall_s:.2f}s ({self.throughput_tok_s:.1f} tok/s)",
             f"decode iterations: {self.decode_iterations}  "
+            f"prefill chunks: {self.prefill_iterations} "
+            f"({self.overlap_iterations} overlapping decode)  "
             f"concurrency max/mean: {self.max_concurrency}/"
             f"{self.mean_concurrency:.2f}",
         ]
+        if self.page_size:
+            lines.append(
+                f"pages: {self.peak_pages}/"
+                f"{self.num_pages - paged.RESERVED_PAGES} peak "
+                f"({self.page_size} tok/page, {self.page_bytes} B/page, "
+                f"leaked {self.pages_leaked})  cache "
+                f"{self.bytes_per_live_token:.0f} B/live-token vs dense "
+                f"{self.dense_cache_bytes / max(self.mean_live_tokens, 1e-9):.0f}")
         for r in sorted(self.requests, key=lambda r: r.rid):
             lines.append(
                 f"  req {r.rid}: wait {r.queue_wait_s * 1e3:.1f}ms  "
@@ -123,50 +241,95 @@ class EngineStats:
         return "\n".join(lines)
 
 
+_FREE, _PREFILL, _LIVE = 0, 1, 2
+
+
 class _Slot:
     """Host-side bookkeeping for one decode lane."""
 
-    __slots__ = ("req", "tok", "pos", "n_out")
+    __slots__ = ("req", "tok", "pos", "n_out", "state", "prefill_pos",
+                 "req_key", "pages_full", "pages_ring", "reserve_remaining")
 
     def __init__(self):
         self.req: Request | None = None
+        self.state = _FREE
         self.tok = 0     # last sampled token (input to the next decode step)
         self.pos = 0     # absolute position of ``tok``
         self.n_out = 0   # tokens emitted so far
+        self.prefill_pos = 0   # prompt tokens already streamed into the cache
+        self.req_key = None    # per-request PRNG root
+        self.pages_full: list[int] = []
+        self.pages_ring: list[int] = []
+        self.reserve_remaining = 0  # worst-case pages not yet allocated
 
     @property
     def live(self) -> bool:
-        return self.req is not None
+        return self.state == _LIVE
 
 
 class Engine:
-    """Single-host engine (tests/examples run it on CPU eagerly)."""
+    """Single-host engine (tests/examples run it on CPU eagerly).
+
+    ``page_size > 0`` turns on the paged KV cache (``num_pages`` caps the
+    pool; default sizes it for the worst case).  ``prefill_chunk`` sets the
+    admission chunk length in tokens (default: whole prompts, one chunk).
+    """
 
     def __init__(self, model: Model, params: Any, *, max_len: int = 512,
                  eos_id: int = -1, sampler: SamplerConfig = SamplerConfig(),
-                 jit: bool = True):
+                 jit: bool = True, page_size: int = 0, num_pages: int = 0,
+                 prefill_chunk: int = 0):
         self.model = model
         self.params = params
         self.max_len = max_len
         self.eos_id = eos_id
         self.sampler = sampler
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.prefill_chunk = min(prefill_chunk, max_len) or max_len
         self.last_stats: EngineStats | None = None
-        self._decode = jax.jit(model.decode_step) if jit else model.decode_step
-        if jit:
-            self._prefill = jax.jit(
-                lambda p, batch, lengths: model.prefill(
-                    p, batch, max_len, lengths=lengths))
-        else:
-            self._prefill = lambda p, batch, lengths: model.prefill(
-                p, batch, max_len, lengths=lengths)
-        # Padding a prompt corrupts recurrent states (no positional cache to
-        # mask), so length-bucketed prefill (which bounds jit recompiles)
-        # and mixed-length one-shot generate are positional-cache-arch only.
         cfg = model.cfg
-        self._recurrent = any(
-            cfg.block_kind(layer) in _RECURRENT_KINDS
-            for layer in range(cfg.n_layers))
-        self._pad_prompts = jit and not self._recurrent
+        kinds = [cfg.block_kind(layer) for layer in range(cfg.n_layers)]
+        if "mlstm" in kinds and self.prefill_chunk > xlstm.CHUNK:
+            # mlstm's chunkwise-parallel prefill needs T <= CHUNK or a
+            # multiple of it; clamp down (admission chunking is exact for
+            # any size, so this only changes granularity)
+            self.prefill_chunk = (self.prefill_chunk // xlstm.CHUNK
+                                  ) * xlstm.CHUNK
+        self._recurrent = any(k in _RECURRENT_KINDS for k in kinds)
+        self._has_full = any(k == "attn" for k in kinds) or (
+            cfg.mla and any(k in ("attn", "local_attn") for k in kinds))
+        self._has_ring = (not cfg.mla) and any(k == "local_attn"
+                                               for k in kinds)
+        self._ring_len = cache_len(cfg, max_len, local=True)
+        pool_axis = 1 if model.scan else 0
+
+        def scrub(pos_leaves, ids):
+            """Reset the ``pos`` pool entries of freed pages to -1, so a
+            recycled page can never leak a previous owner's positions into
+            the validity mask of its next owner (free pages always read as
+            unwritten).  Takes only the ``/pos`` subtree — the K/V pools
+            are untouched and must not ride through the jit round-trip."""
+            return {k: (v.at[:, ids].set(-1) if pool_axis
+                        else v.at[ids].set(-1))
+                    for k, v in pos_leaves.items()}
+
+        if jit:
+            self._decode = jax.jit(model.decode_step)
+            self._decode_paged = jax.jit(
+                partial(model.decode_step_paged, page_size=page_size,
+                        max_len=max_len))
+            self._chunk = jax.jit(
+                partial(model.prefill_chunk, max_len=max_len,
+                        page_size=page_size))
+            self._scrub = jax.jit(scrub)
+        else:
+            self._decode = model.decode_step
+            self._decode_paged = partial(
+                model.decode_step_paged, page_size=page_size, max_len=max_len)
+            self._chunk = partial(model.prefill_chunk, max_len=max_len,
+                                  page_size=page_size)
+            self._scrub = scrub
 
     # -- one-shot batch generation ------------------------------------------
     def generate(self, prompts: list[list[int]], max_new: int,
@@ -175,8 +338,8 @@ class Engine:
         positional-cache archs (the first token of each row is sampled from
         the logits at ``length - 1``, not the last padded position).
         Recurrent archs carry pad tokens into their state, so unequal
-        lengths are rejected there — use :meth:`serve`, which prefills each
-        request alone and is exact for every arch."""
+        lengths are rejected there — use :meth:`serve`, which streams each
+        prompt through per-row masked chunks and is exact for every arch."""
         b = len(prompts)
         tmax = max(len(p) for p in prompts)
         if self._recurrent and any(len(p) != tmax for p in prompts):
@@ -216,18 +379,96 @@ class Engine:
     # -- continuous batching -------------------------------------------------
     def serve(self, requests: list[Request], slots: int = 4,
               seed: int = 0) -> list[Request]:
-        """Continuous-batching loop: admit → batched decode → retire.
-
-        Returns the requests in completion order; ``self.last_stats`` holds
-        the :class:`EngineStats` for the call.
+        """Continuous-batching loop: admit (chunked) → batched decode →
+        retire.  Returns the requests in completion order;
+        ``self.last_stats`` holds the :class:`EngineStats` for the call.
         """
         t_start = time.perf_counter()
         stats = EngineStats()
         queue: deque[Request] = deque(requests)
         lanes = [_Slot() for _ in range(slots)]
-        pooled: dict | None = None
-        key = jax.random.PRNGKey(seed)
         done: list[Request] = []
+        use_paged = self.page_size > 0
+        P = self.page_size
+        model, dtype = self.model, self.model.dtype
+
+        n_full = paged.pages_for(self.max_len, P) if (use_paged
+                                                      and self._has_full) else 0
+        n_ring = paged.pages_for(self._ring_len, P) if (use_paged
+                                                        and self._has_ring) else 0
+        if use_paged:
+            num_pages = self.num_pages or (
+                paged.RESERVED_PAGES + slots * (n_full + n_ring))
+            pool = PagePool(num_pages)
+            cache = model.init_paged_cache(num_pages, P, slots, dtype=dtype)
+            bt_full = np.full((slots, max(n_full, 1)), paged.GARBAGE_PAGE,
+                              np.int32)
+            bt_ring = np.full((slots, max(n_ring, 1)), paged.GARBAGE_PAGE,
+                              np.int32)
+            stats.page_size, stats.num_pages = P, num_pages
+            stats.page_bytes = self._page_bytes(slots)
+        else:
+            pool = None
+            cache = model.init_cache(slots, self.max_len, dtype=dtype)
+        stats.dense_cache_bytes = self._dense_cache_bytes(slots)
+
+        def tables():
+            return {"full": jnp.asarray(bt_full), "ring": jnp.asarray(bt_ring)}
+
+        def worst_pages(plen: int, max_new: int) -> int:
+            """Worst-case pages one request can ever hold: admission
+            reserves this much headroom, so ``pool.alloc`` can never fail
+            mid-serve — queued requests wait for retirements instead."""
+            if not use_paged:
+                return 0
+            horizon = plen + min(max_new, self.max_len - plen)
+            wf = paged.pages_for(horizon, P) if n_full else 0
+            wr = 0
+            if n_ring:
+                wr = (n_ring if horizon >= self._ring_len
+                      else paged.pages_for(horizon, P))
+            return wf + wr
+
+        def ensure_pages(lane: _Slot, s: int, lo: int, hi: int) -> None:
+            """Allocate pages covering logical positions [lo, hi)."""
+            if not use_paged or hi <= lo:
+                return
+            if n_full:
+                for lp in range(lo // P, (hi - 1) // P + 1):
+                    if bt_full[s, lp] < paged.RESERVED_PAGES:
+                        bt_full[s, lp] = pool.alloc()
+                        lane.pages_full.append(bt_full[s, lp])
+                        lane.reserve_remaining -= 1
+            if n_ring:
+                ring_pages = {(i % self._ring_len) // P
+                              for i in range(lo, hi)}
+                for lp in ring_pages:
+                    if bt_ring[s, lp] < paged.RESERVED_PAGES:
+                        bt_ring[s, lp] = pool.alloc()
+                        lane.pages_ring.append(bt_ring[s, lp])
+                        lane.reserve_remaining -= 1
+
+        def release(lane: _Slot, s: int) -> None:
+            nonlocal cache
+            if use_paged:
+                pages = lane.pages_full + lane.pages_ring
+                if pages:
+                    ids = np.full(max(n_full + n_ring, 1),
+                                  paged.GARBAGE_PAGE, np.int32)
+                    ids[:len(pages)] = pages
+                    pos_leaves = {k: v for k, v in cache.items()
+                                  if k.endswith("/pos")}
+                    if pos_leaves:
+                        cache = dict(
+                            cache, **self._scrub(pos_leaves,
+                                                 jnp.asarray(ids)))
+                pool.free(lane.pages_full)
+                pool.free(lane.pages_ring)
+                bt_full[s, :] = paged.GARBAGE_PAGE
+                bt_ring[s, :] = paged.GARBAGE_PAGE
+            lane.pages_full, lane.pages_ring = [], []
+            lane.reserve_remaining = 0
+            lane.req, lane.state = None, _FREE
 
         def finish(req: Request, rst: RequestStats):
             req.done = True
@@ -236,41 +477,134 @@ class Engine:
             stats.total_tokens += len(req.out)
             done.append(req)
 
-        while queue or any(s.live for s in lanes):
-            # -- admission: prefill queued requests into free slots ----------
+        C = self.prefill_chunk
+        while queue or any(s.state != _FREE for s in lanes):
+            # -- admission: claim free slots for queued requests -------------
             for s, lane in enumerate(lanes):
-                if lane.live or not queue:
+                if lane.state != _FREE or not queue:
                     continue
+                n = len(queue[0].prompt)
+                if n + 1 > self.max_len:
+                    raise ValueError(
+                        f"prompt of {n} tokens leaves no room to decode "
+                        f"within max_len={self.max_len}")
+                need = worst_pages(n, queue[0].max_new)
+                if use_paged:
+                    if need > pool.capacity:
+                        raise ValueError(
+                            f"request needs up to {need} pages but the pool "
+                            f"holds {pool.capacity}; raise num_pages or "
+                            f"max_len/page_size")
+                    outstanding = sum(l.reserve_remaining for l in lanes)
+                    if (pool.capacity - pool.in_use - outstanding) < need:
+                        break  # wait for retirements to free pages
                 req = queue.popleft()
-                t0 = time.perf_counter()
-                rst = RequestStats(rid=req.rid, queue_wait_s=t0 - t_start)
-                first, fresh = self._prefill_one(req.prompt)
-                key, kp = jax.random.split(key)
-                tok = int(sample(first[:, -1], kp, self.sampler)[0])
-                rst.prefill_s = time.perf_counter() - t0
-                req.out = [tok]  # rebind: serving a request restarts its output
-                budget = min(req.max_new, self.max_len - len(req.prompt))
-                if tok == self.eos_id or len(req.out) >= budget:
-                    finish(req, rst)  # completed on the prefill token alone
-                    continue
-                pooled = self._install(pooled, fresh, s, slots)
-                lane.req, lane.tok, lane.n_out = req, tok, 1
-                lane.pos = len(req.prompt)
-                lane.req.stats = rst
+                lane.reserve_remaining = need
+                req.out = []  # rebind: serving a request restarts its output
+                req.stats = RequestStats(
+                    rid=req.rid,
+                    queue_wait_s=time.perf_counter() - t_start)
+                if use_paged:
+                    # unallocated logical pages read the (never written)
+                    # NULL page: pos = -1, masked like unwritten entries
+                    bt_full[s, :] = paged.NULL_PAGE
+                    bt_ring[s, :] = paged.NULL_PAGE
+                lane.req, lane.state = req, _PREFILL
+                lane.prefill_pos, lane.n_out = 0, 0
+                lane.req_key = (None if self.sampler.greedy
+                                else request_key(seed, req.rid))
+
+            # -- one batched prefill chunk over all admitting lanes ----------
+            prefilling = [s for s, l in enumerate(lanes)
+                          if l.state == _PREFILL]
+            if prefilling:
+                toks = np.zeros((slots, C), np.int32)
+                start = np.zeros(slots, np.int32)
+                clen = np.zeros(slots, np.int32)
+                for s in prefilling:
+                    lane = lanes[s]
+                    prompt = lane.req.prompt
+                    n = min(C, len(prompt) - lane.prefill_pos)
+                    toks[s, :n] = prompt[lane.prefill_pos:lane.prefill_pos + n]
+                    start[s] = lane.prefill_pos
+                    clen[s] = n
+                    ensure_pages(lane, s, lane.prefill_pos,
+                                 lane.prefill_pos + n)
+                kwargs = {"block_tables": tables()} if use_paged else {}
+                logits, cache = self._chunk(
+                    self.params, cache, jnp.asarray(toks), jnp.asarray(start),
+                    jnp.asarray(clen), **kwargs)
+                stats.prefill_iterations += 1
+                first_toks = None
+                for s in prefilling:
+                    lane = lanes[s]
+                    lane.prefill_pos += int(clen[s])
+                    if lane.prefill_pos < len(lane.req.prompt):
+                        continue  # more chunks to stream
+                    if first_toks is None:
+                        if self.sampler.greedy:
+                            first_toks = np.asarray(
+                                jnp.argmax(logits, axis=-1))
+                        else:
+                            keys = jnp.stack(
+                                [stream_key(l.req_key, 0)
+                                 if l.req_key is not None
+                                 else jnp.zeros(2, jnp.uint32) for l in lanes])
+                            first_toks = np.asarray(
+                                sample_per_slot(logits, keys, self.sampler))
+                    tok = int(first_toks[s])
+                    req = lane.req
+                    # prefill wall time = admission -> first token (chunk
+                    # compute + any decode iterations interleaved between
+                    # this prompt's chunks); first_toks forced the device
+                    req.stats.prefill_s = (time.perf_counter() - t_start
+                                           - req.stats.queue_wait_s)
+                    req.out.append(tok)
+                    budget = min(req.max_new, self.max_len - len(req.prompt))
+                    if tok == self.eos_id or len(req.out) >= budget:
+                        rst = req.stats
+                        finish(req, rst)   # completed on the prefill token
+                        release(lane, s)
+                        continue
+                    lane.state = _LIVE
+                    lane.tok, lane.pos, lane.n_out = tok, len(req.prompt), 1
 
             live = [s for s in lanes if s.live]
             if not live:
                 continue
+            if prefilling:
+                stats.overlap_iterations += 1
 
             # -- one jit'd batched decode step over ALL slots ----------------
             stats.decode_iterations += 1
             stats.live_per_iteration.append(len(live))
+            stats.live_tokens_per_iteration.append(
+                sum(l.pos + 1 for l in lanes if l.live)
+                + sum(l.prefill_pos for l in lanes if l.state == _PREFILL))
+            for s, lane in enumerate(lanes):
+                if lane.live:
+                    ensure_pages(lane, s, lane.pos, lane.pos + 1)
+            if use_paged:
+                stats.pages_in_use_per_iteration.append(pool.in_use)
             toks = jnp.asarray([s.tok for s in lanes], jnp.int32)
-            pos = jnp.asarray([s.pos for s in lanes], jnp.int32)
+            pos = jnp.asarray([s.pos if s.live else 0 for s in lanes],
+                              jnp.int32)
+            live_mask = jnp.asarray([s.live for s in lanes])
             t0 = time.perf_counter()
-            logits, pooled = self._decode(self.params, pooled, toks, pos)
-            key, ks = jax.random.split(key)
-            next_tok = sample(logits, ks, self.sampler)
+            if use_paged:
+                logits, cache = self._decode_paged(
+                    self.params, cache, toks, pos, tables(), live=live_mask)
+            else:
+                logits, cache = self._decode(self.params, cache, toks, pos,
+                                             live=live_mask)
+            if self.sampler.greedy:
+                next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                keys = jnp.stack(
+                    [stream_key(l.req_key, l.n_out) if l.live
+                     else jnp.zeros(2, jnp.uint32) for l in lanes])
+                next_tok = sample_per_slot(logits, keys, self.sampler)
+            next_tok = jax.block_until_ready(next_tok)  # honest step timing
             dt = time.perf_counter() - t0
 
             # -- emit + retire ----------------------------------------------
@@ -289,8 +623,11 @@ class Engine:
                 if (tok == self.eos_id or lane.n_out >= budget
                         or lane.pos + 1 >= self.max_len):
                     finish(req, rst)
-                    lane.req = None
+                    release(lane, s)
 
+        if use_paged:
+            stats.peak_pages = pool.peak_in_use
+            stats.pages_leaked = pool.in_use
         stats.wall_s = time.perf_counter() - t_start
         self.last_stats = stats
         return done
@@ -299,14 +636,17 @@ class Engine:
                          seed: int = 0) -> list[Request]:
         """Baseline: one request at a time through one-shot ``generate``
         (what the engine did before continuous batching; kept for the
-        throughput comparison in benchmarks/engine_bench.py)."""
+        throughput comparison in benchmarks/engine_bench.py).  Generation
+        is clamped to the ``max_len`` cache horizon exactly like
+        :meth:`serve` retires lanes there."""
         t_start = time.perf_counter()
         stats = EngineStats()
         done = []
         for req in requests:
             t0 = time.perf_counter()
             rst = RequestStats(rid=req.rid, queue_wait_s=t0 - t_start)
-            req.out = self.generate([req.prompt], req.max_new,
+            budget = min(req.max_new, self.max_len - len(req.prompt))
+            req.out = self.generate([req.prompt], budget,
                                     seed=seed + req.rid)[0]
             rst.decode_s = time.perf_counter() - t0
             rst.decode_tokens = max(len(req.out) - 1, 0)
@@ -322,41 +662,19 @@ class Engine:
         return done
 
     # -- internals -----------------------------------------------------------
-    def _prefill_one(self, prompt: list[int]):
-        """Prefill a single request (batch 1).  Returns (last_logits (1,1,V),
-        fresh cache with batch dim 1)."""
-        n = len(prompt)
-        if n + 1 > self.max_len:
-            raise ValueError(f"prompt of {n} tokens leaves no room to "
-                             f"decode within max_len={self.max_len}")
-        padded = n
-        if self._pad_prompts:
-            padded = 8
-            while padded < n:
-                padded *= 2
-            padded = min(padded, self.max_len)
-        toks = np.zeros((1, padded), np.int32)
-        toks[0, :n] = prompt
-        lengths = jnp.asarray([n], jnp.int32)
-        return self._prefill(self.params, {"tokens": jnp.asarray(toks)},
-                             lengths)
+    def _spec_bytes(self, specs: dict) -> int:
+        return sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                   for s in jax.tree_util.tree_leaves(specs))
 
-    def _install(self, pooled, fresh, slot: int, slots: int):
-        """Write a batch-1 prefill cache into row ``slot`` of the pooled
-        cache (axis 1 under ``scan=True``, where leaves are stacked with a
-        leading repeat dimension)."""
-        axis = 1 if self.model.scan else 0
-        if pooled is None:
-            def expand(v):
-                shape = list(v.shape)
-                shape[axis] = slots
-                return jnp.zeros(shape, v.dtype)
-            pooled = jax.tree_util.tree_map(expand, fresh)
-            # attention caches mask validity via pos >= 0
-            pooled = {k: (jnp.full_like(v, -1) if k.endswith("/pos") else v)
-                      for k, v in pooled.items()}
-        def put(pv, fv):
-            if axis == 1:
-                return pv.at[:, slot].set(fv[:, 0].astype(pv.dtype))
-            return pv.at[slot].set(fv[0].astype(pv.dtype))
-        return jax.tree_util.tree_map(put, pooled, fresh)
+    def _page_bytes(self, slots: int) -> int:
+        """Bytes one physical page costs across every paged cache leaf."""
+        r = paged.RESERVED_PAGES
+        lo = self._spec_bytes(self.model.paged_cache_specs(
+            r, self.page_size, slots, dtype=self.model.dtype))
+        hi = self._spec_bytes(self.model.paged_cache_specs(
+            r + 1, self.page_size, slots, dtype=self.model.dtype))
+        return hi - lo
+
+    def _dense_cache_bytes(self, slots: int) -> int:
+        return self._spec_bytes(self.model.cache_specs(
+            slots, self.max_len, dtype=self.model.dtype))

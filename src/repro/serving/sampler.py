@@ -31,3 +31,24 @@ def sample(logits: jax.Array, key: jax.Array,
         cutoff = jnp.take_along_axis(sorted_l, cutoff_idx, axis=-1)
         lf = jnp.where(lf < cutoff, -jnp.inf, lf)
     return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+
+
+def request_key(seed: int, rid: int) -> jax.Array:
+    """Per-request PRNG root: a function of (seed, rid) only, so a
+    request's sampled stream never depends on batch composition."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), rid)
+
+
+def stream_key(req_key: jax.Array, index: int) -> jax.Array:
+    """Key for the ``index``-th sampled token of one request's stream."""
+    return jax.random.fold_in(req_key, index)
+
+
+def sample_per_slot(logits: jax.Array, keys: jax.Array,
+                    cfg: SamplerConfig = SamplerConfig()) -> jax.Array:
+    """Row-independent sampling: logits (B, V), keys (B, 2) — one PRNG key
+    per decode slot, vmap'd so each request consumes only its own stream
+    (greedy ignores the keys)."""
+    if cfg.greedy or cfg.temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.vmap(lambda lg, kk: sample(lg[None], kk, cfg)[0])(logits, keys)

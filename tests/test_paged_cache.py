@@ -1,0 +1,234 @@
+"""Paged vs contiguous KV-cache parity.
+
+The paged path gathers the exact dense layout from its page pools before
+running the (shared) dense decode/prefill-chunk math, so dense and paged
+caches must produce **bitwise-identical** logits for every cache kind —
+full attention, local ring (incl. wraparound), MLA latents, and the
+recurrent dense passthrough — across random prefill chunkings, page sizes
+and decode steps, including writes that straddle page boundaries.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypo_compat import given, settings, st
+
+from repro.configs import CONFIGS
+from repro.models import paged
+from repro.models.model import Model
+from repro.models.spec import init_params
+from repro.serving.engine import PagePool
+
+# arch -> (window override, exercises)
+ARCHS = {
+    "qwen2-1.5b": None,            # full attention
+    "gemma2-9b": 8,                # local ring (tiny window => wraparound)
+    "deepseek-v3-671b": None,      # MLA latents
+    "recurrentgemma-2b": 8,        # rglru passthrough + local ring
+    "xlstm-1.3b": None,            # mlstm/slstm passthrough only
+}
+
+_MODELS: dict = {}
+
+
+def _setup(arch):
+    if arch not in _MODELS:
+        cfg = CONFIGS[arch].reduced()
+        if ARCHS[arch] is not None:
+            cfg = dataclasses.replace(cfg, window=ARCHS[arch])
+        params = init_params(cfg, seed=0, dtype=jnp.float32)
+        _MODELS[arch] = (cfg, params, Model(cfg, dtype=jnp.float32))
+    return _MODELS[arch]
+
+
+class _Tables:
+    """Minimal engine-side page bookkeeping for the parity tests."""
+
+    def __init__(self, cfg, slots, max_len, page_size):
+        kinds = [cfg.block_kind(layer) for layer in range(cfg.n_layers)]
+        has_full = any(k == "attn" for k in kinds) or (
+            cfg.mla and any(k in ("attn", "local_attn") for k in kinds))
+        has_ring = (not cfg.mla) and any(k == "local_attn" for k in kinds)
+        self.ring_len = min(max_len, cfg.window) if cfg.window else max_len
+        self.p = page_size
+        self.n_full = paged.pages_for(max_len, page_size) if has_full else 0
+        self.n_ring = (paged.pages_for(self.ring_len, page_size)
+                       if has_ring else 0)
+        self.pool = PagePool(paged.RESERVED_PAGES
+                             + slots * (self.n_full + self.n_ring))
+        self.full = np.full((slots, max(self.n_full, 1)), paged.NULL_PAGE,
+                            np.int32)
+        self.ring = np.full((slots, max(self.n_ring, 1)), paged.NULL_PAGE,
+                            np.int32)
+
+    def ensure(self, s, lo, hi):
+        if self.n_full:
+            for lp in range(lo // self.p, (hi - 1) // self.p + 1):
+                if self.full[s, lp] < paged.RESERVED_PAGES:
+                    self.full[s, lp] = self.pool.alloc()
+        if self.n_ring:
+            for lp in {(i % self.ring_len) // self.p for i in range(lo, hi)}:
+                if self.ring[s, lp] < paged.RESERVED_PAGES:
+                    self.ring[s, lp] = self.pool.alloc()
+
+    def asdict(self):
+        return {"full": jnp.asarray(self.full), "ring": jnp.asarray(self.ring)}
+
+
+def _run_parity(arch, page_size, chunk, plens, steps, max_len=32):
+    cfg, params, model = _setup(arch)
+    rng = np.random.default_rng(hash((arch, page_size, chunk, *plens)) % 2**31)
+    b = len(plens)
+    prompts = [list(rng.integers(4, cfg.vocab_size, n)) for n in plens]
+    tbl = _Tables(cfg, b, max_len, page_size)
+
+    cache_d = model.init_cache(b, max_len, dtype=jnp.float32)
+    cache_p = model.init_paged_cache(tbl.pool.num_pages, page_size, b,
+                                     dtype=jnp.float32)
+
+    pos = [0] * b
+    final_d, final_p = [None] * b, [None] * b
+    while any(pos[s] < plens[s] for s in range(b)):
+        toks = np.zeros((b, chunk), np.int32)
+        start = np.zeros(b, np.int32)
+        clen = np.zeros(b, np.int32)
+        fin = []
+        for s in range(b):
+            n = min(chunk, plens[s] - pos[s])
+            if n <= 0:
+                continue
+            toks[s, :n] = prompts[s][pos[s]:pos[s] + n]
+            start[s], clen[s] = pos[s], n
+            tbl.ensure(s, pos[s], pos[s] + n)
+            pos[s] += n
+            if pos[s] == plens[s]:
+                fin.append(s)
+        ld, cache_d = model.prefill_chunk(
+            params, cache_d, jnp.asarray(toks), jnp.asarray(start),
+            jnp.asarray(clen), max_len=max_len)
+        lp, cache_p = model.prefill_chunk(
+            params, cache_p, jnp.asarray(toks), jnp.asarray(start),
+            jnp.asarray(clen), max_len=max_len, block_tables=tbl.asdict(),
+            page_size=page_size)
+        assert np.array_equal(np.asarray(ld), np.asarray(lp)), \
+            (arch, "chunk logits diverge", page_size, chunk, plens)
+        for s in fin:
+            final_d[s], final_p[s] = ld[s], lp[s]
+
+    tok_d = jnp.argmax(jnp.stack(final_d), -1).astype(jnp.int32)
+    tok_p = jnp.argmax(jnp.stack(final_p), -1).astype(jnp.int32)
+    assert np.array_equal(np.asarray(tok_d), np.asarray(tok_p))
+    pos_arr = jnp.asarray(plens, jnp.int32)
+    live = jnp.ones(b, bool)
+    for i in range(steps):
+        for s in range(b):
+            tbl.ensure(s, plens[s] + i, plens[s] + i + 1)
+        ld, cache_d = model.decode_step(params, cache_d, tok_d, pos_arr,
+                                        live=live)
+        lp, cache_p = model.decode_step_paged(
+            params, cache_p, tok_p, pos_arr, tbl.asdict(),
+            page_size=page_size, max_len=max_len, live=live)
+        assert np.array_equal(np.asarray(ld), np.asarray(lp)), \
+            (arch, "decode logits diverge", i, page_size, chunk, plens)
+        tok_d = jnp.argmax(ld, -1).astype(jnp.int32)
+        tok_p = jnp.argmax(lp, -1).astype(jnp.int32)
+        pos_arr = pos_arr + 1
+    return tbl
+
+
+@given(st.sampled_from(list(ARCHS)), st.integers(2, 8), st.integers(2, 7),
+       st.integers(1, 20), st.integers(1, 20), st.integers(1, 4))
+@settings(max_examples=12, deadline=None)
+def test_paged_parity_property(arch, page_size, chunk, plen_a, plen_b, steps):
+    """Random page sizes, chunkings, prompt lengths and decode steps:
+    dense and paged logits must agree bitwise for every cache kind."""
+    _run_parity(arch, page_size, chunk, (plen_a, plen_b), steps)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "recurrentgemma-2b"])
+def test_paged_parity_ring_wraparound(arch):
+    """Prompts longer than the (shrunk, 8-entry) window force the ring to
+    wrap; page size 3 keeps writes straddling page boundaries."""
+    _run_parity(arch, page_size=3, chunk=5, plens=(21, 13), steps=4)
+
+
+def test_paged_parity_page_boundary_exact():
+    """Chunk edges landing exactly on page edges and one past them."""
+    _run_parity("qwen2-1.5b", page_size=4, chunk=4, plens=(8, 9), steps=2)
+    _run_parity("qwen2-1.5b", page_size=4, chunk=5, plens=(12, 4), steps=2)
+
+
+def test_chunked_prefill_matches_whole_prompt_prefill():
+    """The chunked admission path reproduces Model.prefill's final logits
+    (tight f32 tolerance; not bitwise — softmax accumulation differs)."""
+    max_len = 32
+    for arch in ARCHS:
+        cfg, params, model = _setup(arch)
+        rng = np.random.default_rng(7)
+        plens = (11, 6)
+        prompts = [list(rng.integers(4, cfg.vocab_size, n)) for n in plens]
+        cache = model.init_cache(2, max_len, dtype=jnp.float32)
+        pos, final = [0, 0], [None, None]
+        while any(pos[s] < plens[s] for s in range(2)):
+            toks = np.zeros((2, 4), np.int32)
+            start = np.zeros(2, np.int32)
+            clen = np.zeros(2, np.int32)
+            for s in range(2):
+                n = min(4, plens[s] - pos[s])
+                if n <= 0:
+                    continue
+                toks[s, :n] = prompts[s][pos[s]:pos[s] + n]
+                start[s], clen[s] = pos[s], n
+                pos[s] += n
+                if pos[s] == plens[s]:
+                    final[s] = True
+            lg, cache = model.prefill_chunk(
+                params, cache, jnp.asarray(toks), jnp.asarray(start),
+                jnp.asarray(clen), max_len=max_len)
+            for s in range(2):
+                if final[s] is True:
+                    final[s] = lg[s]
+        for s in range(2):
+            t = jnp.asarray(np.array(prompts[s], np.int32)[None])
+            ref, _ = model.prefill(params, {"tokens": t}, max_len,
+                                   lengths=jnp.asarray([plens[s]]))
+            err = float(jnp.max(jnp.abs(ref[0, -1] - final[s])))
+            scale = float(jnp.max(jnp.abs(ref))) + 1e-6
+            assert err / scale < 1e-4, (arch, s, err, scale)
+
+
+def test_page_pool_alloc_free_invariants():
+    pool = PagePool(paged.RESERVED_PAGES + 3)
+    assert pool.capacity == 3 and pool.in_use == 0
+    a, b_, c = pool.alloc(), pool.alloc(), pool.alloc()
+    assert {a, b_, c} & {paged.NULL_PAGE, paged.GARBAGE_PAGE} == set()
+    assert pool.in_use == 3 and pool.peak_in_use == 3
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc()
+    pool.free([b_])
+    assert pool.in_use == 2
+    with pytest.raises(ValueError, match="free"):
+        pool.free([b_])          # double free
+    d = pool.alloc()
+    assert d == b_               # recycled
+    pool.free([a, c, d])
+    assert pool.in_use == 0 and pool.peak_in_use == 3
+
+
+def test_page_pool_rejects_reserved_underflow():
+    with pytest.raises(ValueError):
+        PagePool(paged.RESERVED_PAGES - 1)
+    assert PagePool(paged.RESERVED_PAGES).capacity == 0
+
+
+def test_chunk_write_plan_last_writer_wins():
+    # two revolutions over a 4-entry ring in one 8-token chunk
+    idx = jnp.asarray([[0, 1, 2, 3, 0, 1, 2, 3]])
+    valid = jnp.asarray([[True] * 6 + [False] * 2])
+    ok = paged.chunk_write_plan(idx, valid, 4)
+    # tokens 4,5 supersede 0,1; 2,3 keep their slots; 6,7 are padding
+    assert np.asarray(ok).tolist() == [
+        [False, False, True, True, True, True, False, False]]

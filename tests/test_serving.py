@@ -1,10 +1,13 @@
 """Serving correctness: prefill/decode parity, ring buffers, MLA absorption,
-engine generation, quantized decode."""
+engine generation, quantized decode, paged-cache serving, chunked-prefill
+admission and the per-request sampling streams."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from hypo_compat import given, settings, st
 
 from repro.configs import CONFIGS
 from repro.core import get_policy, quantize_params
@@ -218,6 +221,189 @@ def test_serve_sequential_baseline_matches():
     cont = {r.rid: r.out for r in eng.serve(mk(), slots=2)}
     seq = {r.rid: r.out for r in eng.serve_sequential(mk())}
     assert cont == seq
+
+
+_STRESS = {}
+
+
+def _stress_engines(**kw):
+    """One cached engine per (mode) so the fuzz examples share params."""
+    key = tuple(sorted(kw.items()))
+    if key not in _STRESS:
+        cfg = CONFIGS["qwen2-1.5b"].reduced()
+        params = init_params(cfg, seed=0, dtype=jnp.float32)
+        _STRESS[key] = (cfg, Engine(
+            Model(cfg, dtype=jnp.float32), params, max_len=48, jit=False,
+            sampler=SamplerConfig(greedy=True), **kw))
+    return _STRESS[key]
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3),
+       st.sampled_from([0, 8]))
+@settings(max_examples=4, deadline=None)
+def test_serve_stress_fuzz_matches_sequential(seed, slots, page_size):
+    """Fuzzed request mixes — prompt lengths spanning several prefill
+    chunks, more requests than slots, mixed generation budgets, prompts
+    flirting with the max_len horizon — must match the sequential greedy
+    baseline token-for-token, in both dense and paged cache modes, and the
+    page allocator must end with zero pages held."""
+    from repro.serving import Request
+    cfg, eng = _stress_engines(page_size=page_size, prefill_chunk=6)
+    rng = np.random.default_rng(seed)
+    n_req = int(rng.integers(slots + 1, slots + 5))  # more reqs than slots
+    mk = lambda: [
+        Request(rid=i,
+                prompt=list(rng2.integers(4, cfg.vocab_size,
+                                          int(rng2.integers(1, 45)))),
+                max_new=int(rng2.integers(1, 8)))
+        for rng2 in [np.random.default_rng(seed + 1)] for i in range(n_req)]
+    served = eng.serve(mk(), slots=slots)
+    cont = {r.rid: list(r.out) for r in served}
+    stats = eng.last_stats
+    seq = {r.rid: list(r.out) for r in eng.serve_sequential(mk())}
+    assert cont == seq
+    assert stats.pages_leaked == 0
+    if page_size:
+        # falsifiable occupancy bound: at most `slots` requests are ever
+        # concurrent, so peak pages cannot exceed the sum of the `slots`
+        # largest per-request worst-case footprints
+        worst = sorted(
+            (-(-min(len(r.prompt) + r.max_new, 48) // page_size)
+             for r in served), reverse=True)
+        assert stats.peak_pages <= sum(worst[:slots])
+
+
+def test_serve_early_eos_and_max_len_retirement_paged():
+    """eos mid-stream and the max_len horizon free their pages exactly."""
+    from repro.serving import Request
+    cfg, eng = _stress_engines(page_size=8, prefill_chunk=6)
+    base = [Request(rid=0, prompt=[5, 6, 7, 8], max_new=12)]
+    out = list(eng.serve(base, slots=1)[0].out)
+    assert len(out) > 3
+    eng.eos_id = out[2]
+    try:
+        mk = lambda: [Request(rid=i, prompt=[5, 6, 7, 8], max_new=12)
+                      for i in range(3)]
+        done = {r.rid: r.out for r in eng.serve(mk(), slots=2)}
+        seq = {r.rid: r.out for r in eng.serve_sequential(mk())}
+        assert done == seq
+        assert all(o[-1] == eng.eos_id and len(o) == 3
+                   for o in done.values())
+        assert eng.last_stats.pages_leaked == 0
+        # max_len horizon: prompt of 46 in a 48-cache leaves room for 2
+        eng.eos_id = -1
+        long = [Request(rid=0, prompt=list(range(4, 50)), max_new=99)]
+        r = eng.serve(long, slots=1)[0]
+        assert len(r.prompt) + len(r.out) <= 48
+        assert eng.last_stats.pages_leaked == 0
+    finally:
+        eng.eos_id = -1
+
+
+def test_serve_paged_matches_dense_serve():
+    """Dense pooled and paged caches produce identical greedy streams under
+    the same chunked admission schedule (bitwise logits parity end-to-end,
+    page boundaries and slot recycling included)."""
+    from repro.serving import Request
+    _, dense = _stress_engines(page_size=0, prefill_chunk=5)
+    cfg, pag = _stress_engines(page_size=4, prefill_chunk=5)
+    rng = np.random.default_rng(11)
+    mk = lambda: [Request(rid=i,
+                          prompt=list(rng2.integers(4, cfg.vocab_size,
+                                                    6 + 7 * (i % 3))),
+                          max_new=3 + i)
+                  for rng2 in [np.random.default_rng(3)] for i in range(6)]
+    a = {r.rid: r.out for r in dense.serve(mk(), slots=3)}
+    b = {r.rid: r.out for r in pag.serve(mk(), slots=3)}
+    assert a == b
+    st_ = pag.last_stats
+    assert st_.pages_leaked == 0 and st_.peak_pages > 0
+    # paged cache footprint beats the dense slots x max_len layout
+    assert st_.bytes_per_live_token <= (
+        st_.dense_cache_bytes / max(st_.mean_live_tokens, 1e-9))
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """A long multi-chunk admission must not stall live lanes: decode
+    iterations keep running while the newcomer's prompt streams in, and the
+    newcomer joins after at most one chunk per iteration."""
+    from repro.serving import Request
+    cfg, eng = _stress_engines(page_size=0, prefill_chunk=4)
+    reqs = [Request(rid=0, prompt=[5, 6, 7], max_new=20),
+            Request(rid=1, prompt=list(range(4, 36)), max_new=4)]
+    done = {r.rid: r for r in eng.serve(reqs, slots=2)}
+    stats = eng.last_stats
+    # rid 1's 32-token prompt takes 8 chunks; rid 0 decodes throughout
+    assert stats.prefill_iterations >= 8
+    assert stats.overlap_iterations >= 7
+    assert done[0].out == eng.generate([[5, 6, 7]], 20)[0]
+    assert done[1].out == eng.generate([list(range(4, 36))], 4)[0]
+
+
+def test_per_request_sampling_stream_is_batch_independent():
+    """Stochastic sampling: a request's stream must be identical whether it
+    runs alone or interleaved with other requests (per-slot keys folded
+    from (seed, rid, token_index), not from batch-wide iteration state)."""
+    from repro.serving import Request
+    cfg = CONFIGS["qwen2-1.5b"].reduced()
+    params = init_params(cfg, seed=0, dtype=jnp.float32)
+    eng = Engine(Model(cfg, dtype=jnp.float32), params, max_len=48,
+                 jit=False, prefill_chunk=6,
+                 sampler=SamplerConfig(temperature=0.8, top_p=0.95))
+    target = Request(rid=7, prompt=[9, 10, 11, 12], max_new=6)
+    alone = list(eng.serve([target], slots=1, seed=3)[0].out)
+    rng = np.random.default_rng(5)
+    others = [Request(rid=i, prompt=list(rng.integers(4, cfg.vocab_size,
+                                                      3 + 4 * i)),
+                      max_new=2 + i) for i in range(3)]
+    mixed = eng.serve(
+        others[:1] + [Request(rid=7, prompt=[9, 10, 11, 12], max_new=6)]
+        + others[1:], slots=2, seed=3)
+    got = next(r.out for r in mixed if r.rid == 7)
+    assert got == alone
+    # and the whole serve call is reproducible
+    mixed2 = eng.serve(
+        others[:1] + [Request(rid=7, prompt=[9, 10, 11, 12], max_new=6)]
+        + others[1:], slots=2, seed=3)
+    assert {r.rid: r.out for r in mixed} == {r.rid: r.out for r in mixed2}
+
+
+def test_capped_page_pool_defers_admission():
+    """A pool too small for full concurrency serialises admissions (worst
+    case reserved up front) instead of exhausting mid-serve; a request that
+    can never fit raises up front."""
+    from repro.serving import Request
+    cfg = CONFIGS["qwen2-1.5b"].reduced()
+    params = init_params(cfg, seed=0, dtype=jnp.float32)
+    # 8 data pages; one worst-case request needs <= 6 -> pairs can't overlap
+    eng = Engine(Model(cfg, dtype=jnp.float32), params, max_len=48,
+                 jit=False, sampler=SamplerConfig(greedy=True),
+                 page_size=8, num_pages=10, prefill_chunk=6)
+    mk = lambda: [Request(rid=i, prompt=[4 + i, 5, 6, 7], max_new=40)
+                  for i in range(3)]
+    done = {r.rid: r.out for r in eng.serve(mk(), slots=2)}
+    stats = eng.last_stats
+    assert done == {r.rid: r.out for r in eng.serve_sequential(mk())}
+    assert stats.pages_leaked == 0
+    assert stats.max_concurrency == 1  # reservations force serialisation
+    with pytest.raises(ValueError, match="pages"):
+        eng.num_pages = 4  # 2 data pages < one request's worst case
+        eng.serve([Request(rid=0, prompt=[5, 6, 7], max_new=40)], slots=1)
+    eng.num_pages = 10
+
+
+def test_engine_stats_page_occupancy_report():
+    from repro.serving import Request
+    cfg, eng = _stress_engines(page_size=8, prefill_chunk=6)
+    eng.serve([Request(rid=i, prompt=[4 + i, 5, 6, 7, 8, 9], max_new=5)
+               for i in range(4)], slots=2)
+    stats = eng.last_stats
+    assert stats.page_size == 8 and stats.page_bytes > 0
+    assert stats.peak_pages > 0 and stats.pages_leaked == 0
+    assert len(stats.pages_in_use_per_iteration) == stats.decode_iterations
+    assert stats.mean_live_tokens > 0 and stats.bytes_per_live_token > 0
+    rep = stats.report()
+    assert "pages" in rep and "B/live-token" in rep
 
 
 def test_sampler_top_p_support():
