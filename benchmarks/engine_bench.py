@@ -1,33 +1,39 @@
 """Serving-engine throughput + memory: sequential vs continuous vs paged.
 
-Serves the same batch of mixed-length requests three ways on a reduced
+Serves the same batch of mixed-length requests four ways on a reduced
 model:
 
   * **sequential** — one request at a time through one-shot ``generate``
     (what ``Engine.serve`` did before continuous batching),
   * **continuous** — the slot scheduler over the dense contiguous pooled
-    cache (``slots x max_len`` rows reserved up front), and
+    cache (``slots x max_len`` rows reserved up front),
   * **paged** — the same scheduler over the paged KV cache with chunked
-    prefill admission, where cache memory scales with live tokens.
+    prefill admission and the **fused Pallas decode kernels** reading the
+    pages in place (bandwidth follows live tokens), and
+  * **paged-gather** — the paged cache with the dense-view gather
+    reference decode (what the engine did before the fused kernels; kept
+    as the kernel baseline).
 
 Reported per mode: tokens/s over the full serve call (prefill + decode),
-decode iterations, mean concurrency, mean admission latency (queue wait +
-prefill, the time-to-first-token component the chunked admission path
-optimises) and the positional-cache footprint in bytes per live token —
-for the paged mode this must come in at or below the dense layout's.  Runs
-fp32 plus the paper's quantization policies through the policy layer
+decode iterations, mean concurrency, mean admission latency, the
+positional-cache footprint in bytes per live token, and — the column the
+fused kernels drive down — the KV bytes the decode path reads per emitted
+token (``kvB/tok``): the gather path re-materialises every
+``slots x max_len`` entry each step, the fused path touches only the
+bucketed live pages.  Runs fp32 plus the paper's quantization policies
 (Q4_K_M, DQ3_K_M), so the comparison reflects the quantized deployment
 path.
 
   PYTHONPATH=src python -m benchmarks.engine_bench [--requests 8 --slots 4]
-      [--page-size 16 --prefill-chunk 32] [--json BENCH_engine.json]
-      [--gate]
+      [--max-len 1024 --page-size 16 --prefill-chunk 32]
+      [--json BENCH_engine.json] [--gate]
 
 ``--json`` writes the table as a machine-readable artifact (CI uploads it
 as BENCH_engine.json); ``--gate`` exits non-zero if continuous batching
-fails to reach sequential throughput or the paged cache fails to beat the
-dense layout's bytes/live-token — the CI step treats this as a *soft*
-gate (warning, not failure) until CI timing stabilises.
+fails to reach sequential throughput, the paged cache fails to beat the
+dense layout's bytes/live-token, or the fused decode falls behind the
+gather baseline on throughput / decode traffic — the CI step treats this
+as a *soft* gate (warning, not failure) until runner timing stabilises.
 """
 
 from __future__ import annotations
@@ -57,7 +63,7 @@ def _requests(n: int, vocab: int, seed: int = 0) -> list[Request]:
 
 def run(requests: int = 8, slots: int = 4, jit: bool = True,
         arch: str = "qwen2-1.5b", page_size: int = 16,
-        prefill_chunk: int = 32,
+        prefill_chunk: int = 32, max_len: int = 1024,
         results_out: dict | None = None) -> list[tuple[str, float, str]]:
     """Returns CSV rows; when ``results_out`` is given it is filled with
     ``{policy: {mode: EngineStats}}`` for :func:`gate`."""
@@ -68,42 +74,51 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
     rows = []
     print(f"\n# engine bench: {requests} mixed-length requests, "
           f"{slots} slots, {arch} (reduced), jit={jit}, "
-          f"page={page_size} chunk={prefill_chunk}")
-    print(f"{'policy':9s} {'mode':11s} {'tok':>5s} {'tok/s':>8s} "
+          f"max_len={max_len} page={page_size} chunk={prefill_chunk}")
+    print(f"{'policy':9s} {'mode':12s} {'tok':>5s} {'tok/s':>8s} "
           f"{'iters':>6s} {'conc':>5s} {'admit_ms':>9s} {'B/livetok':>10s} "
-          f"{'speedup':>8s}")
+          f"{'kvB/tok':>9s} {'speedup':>8s}")
     for pol in POLICIES:
         p = (params if pol == "fp32"
              else quantize_params(cfg, params, get_policy(pol)))
         # sequential + continuous share one engine (and its jit traces);
-        # only the paged mode needs a differently-configured instance
-        dense = Engine(model, p, max_len=128,
+        # the paged modes need differently-configured instances
+        dense = Engine(model, p, max_len=max_len,
                        sampler=SamplerConfig(greedy=True), jit=jit)
+        paged_kw = dict(max_len=max_len, sampler=SamplerConfig(greedy=True),
+                        jit=jit, page_size=page_size,
+                        prefill_chunk=prefill_chunk)
         engines = {
             "sequential": dense,
             "continuous": dense,
-            "paged": Engine(model, p, max_len=128,
-                            sampler=SamplerConfig(greedy=True), jit=jit,
-                            page_size=page_size,
-                            prefill_chunk=prefill_chunk),
+            "paged": Engine(model, p, kernel="fused", **paged_kw),
+            "paged-gather": Engine(model, p, kernel="gather", **paged_kw),
         }
         results = {}
         for mode, eng in engines.items():
+            # warmup pass with the full prompt-length mix so every jit
+            # trace (incl. the sequential mode's per-length prefill shapes
+            # and the fused kernels' live-horizon buckets) is compiled
+            # before the timed serve
+            warm = _requests(requests, cfg.vocab_size, seed=1)
             reqs = _requests(requests, cfg.vocab_size)
             if mode == "sequential":
+                eng.serve_sequential(warm)
                 eng.serve_sequential(reqs)
             else:
+                eng.serve(warm, slots=slots)
                 eng.serve(reqs, slots=slots)
             results[mode] = eng.last_stats
         for mode, st in results.items():
             speedup = (st.throughput_tok_s /
                        max(results["sequential"].throughput_tok_s, 1e-9))
             blt = st.bytes_per_live_token if mode != "sequential" else 0.0
-            print(f"{pol:9s} {mode:11s} {st.total_tokens:5d} "
+            kvt = st.kv_bytes_per_decoded_token
+            print(f"{pol:9s} {mode:12s} {st.total_tokens:5d} "
                   f"{st.throughput_tok_s:8.1f} {st.decode_iterations:6d} "
                   f"{st.mean_concurrency:5.2f} "
                   f"{st.mean_admission_s * 1e3:9.1f} {blt:10.0f} "
-                  f"{speedup:7.2f}x")
+                  f"{kvt:9.0f} {speedup:7.2f}x")
             rows.append((f"engine/{pol}/{mode}",
                          1e6 / max(st.throughput_tok_s, 1e-9),
                          f"{st.throughput_tok_s:.1f}tok/s"))
@@ -113,6 +128,8 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
             if mode != "sequential":
                 rows.append((f"engine/{pol}/{mode}/mem",
                              blt, f"{blt:.0f}B/livetok"))
+                rows.append((f"engine/{pol}/{mode}/kvtraffic",
+                             kvt, f"{kvt:.0f}B/dectok"))
         if results_out is not None:
             results_out[pol] = dict(results)
     return rows
@@ -137,6 +154,22 @@ def gate(results: dict, requests: int = 8) -> list[str]:
             failures.append(
                 f"{pol}: paged cache {pg.bytes_per_live_token:.0f} "
                 f"B/live-token exceeds dense layout {dense_blt:.0f}")
+        gather = res["paged-gather"]
+        if pg.throughput_tok_s < gather.throughput_tok_s:
+            failures.append(
+                f"{pol}: fused paged decode {pg.throughput_tok_s:.1f} "
+                f"tok/s < gather reference {gather.throughput_tok_s:.1f}")
+        # equality is legitimate when the live horizon fills the whole
+        # table (bucket == n_pages); only MORE traffic than gather is a
+        # regression
+        if (pg.kv_bytes_per_decoded_token
+                > gather.kv_bytes_per_decoded_token):
+            failures.append(
+                f"{pol}: fused decode reads "
+                f"{pg.kv_bytes_per_decoded_token:.0f} KV-B/token, above "
+                f"the gather path's "
+                f"{gather.kv_bytes_per_decoded_token:.0f} (live-token "
+                f"scaling lost)")
     return failures
 
 
@@ -145,19 +178,25 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--max-len", type=int, default=1024,
+                    help="decode cache horizon; the fused-vs-gather gap "
+                         "grows with it (gather re-materialises "
+                         "slots x max_len per step)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--no-jit", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write rows as a JSON artifact")
     ap.add_argument("--gate", action="store_true",
-                    help="exit 1 if continuous < sequential throughput or "
-                         "paged > dense bytes/live-token (CI soft gate)")
+                    help="exit 3 if continuous < sequential throughput, "
+                         "paged > dense bytes/live-token, or fused < "
+                         "gather decode (CI soft gate)")
     args = ap.parse_args()
     results: dict = {}
     rows = run(args.requests, args.slots, jit=not args.no_jit,
                arch=args.arch, page_size=args.page_size,
-               prefill_chunk=args.prefill_chunk, results_out=results)
+               prefill_chunk=args.prefill_chunk, max_len=args.max_len,
+               results_out=results)
     if args.json:
         from .run import write_rows_json
         write_rows_json(rows, args.json)
@@ -170,7 +209,7 @@ def main():
             # other non-zero exit (crash, import error) stays hard-red
             raise SystemExit(3)
         print("perf gate OK: continuous >= sequential, paged <= dense "
-              "bytes/live-token")
+              "bytes/live-token, fused >= gather decode")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,27 @@
-"""Dequant-matmul micro-benchmarks.
+"""Kernel micro-benchmarks: dequant-matmul and paged-attention decode.
 
-Wall-clock on CPU measures the XLA (fused-dequant) path; Pallas kernels are
-validated in interpret mode (not timed — interpret wall-clock is
-meaningless).  The 'derived' column projects the TPU-v5e roofline time from
-the packed HBM bytes + flops of each (format, shape) — the number the §Perf
-iterations drive down.
+Wall-clock on CPU measures the XLA paths; Pallas kernels are validated in
+interpret mode (not timed — interpret wall-clock is meaningless).  The
+'derived' column projects the TPU-v5e roofline time from the packed HBM
+bytes + flops of each (format, shape) — the number the §Perf iterations
+drive down.
+
+The paged-attention suite (:func:`run_paged`) compares one decode step of
+the gather-based reference (re-materialises the ``slots x max_len`` dense
+view every step) against the fused page-bounded path
+(kernels/paged_attn.py, XLA twin timed on CPU) and its q8_0
+quantized-pool variant, at several live-token loads.  Its 'derived'
+column is the KV bytes each implementation touches per decoded token —
+constant ``max_len``-proportional for gather, live-token-proportional for
+fused, and a further ~4x down for q8 pools.
+
+  PYTHONPATH=src python -m benchmarks.kernel_bench \
+      [--json BENCH_kernels.json] [--only matmul,paged]
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -17,7 +30,8 @@ import numpy as np
 
 from repro.core import quantize
 from repro.core.formats import FORMATS
-from repro.kernels import ops
+from repro.kernels import ops, paged_attn
+from repro.models import paged
 from repro.roofline import hw
 
 SHAPES = [(8, 4096, 4096), (128, 4096, 14336)]
@@ -53,3 +67,89 @@ def run() -> list[tuple[str, float, str]]:
             print(f"{fmt:6s} {f'{m},{k},{n}':>18s} {us:10.1f} {tpu_us:12.2f}")
             rows.append((f"kernel/{fmt}/{m}x{k}x{n}", us, f"{tpu_us:.2f}"))
     return rows
+
+
+def run_paged(slots: int = 4, n_heads: int = 8, n_kv: int = 2,
+              head_dim: int = 64, page_size: int = 16,
+              max_len: int = 1024) -> list[tuple[str, float, str]]:
+    """Paged-attention decode microbench: fused vs gather vs q8 pools."""
+    rows = []
+    n_lp = paged.pages_for(max_len, page_size)
+    num_pages = paged.RESERVED_PAGES + slots * n_lp
+    rng = np.random.default_rng(0)
+    k_pool = jnp.asarray(rng.normal(
+        size=(num_pages, page_size, n_kv, head_dim)).astype(np.float32))
+    v_pool = jnp.asarray(rng.normal(
+        size=(num_pages, page_size, n_kv, head_dim)).astype(np.float32))
+    kq, kd = paged_attn.quantize_kv_page_pool(k_pool)
+    vq, vd = paged_attn.quantize_kv_page_pool(v_pool)
+    row_bytes = 2 * n_kv * head_dim * 4 + 4          # K+V f32 rows + pos
+    row_bytes_q8 = 2 * (n_kv * head_dim + n_kv * 4) + 4
+
+    print(f"\n# paged-attention decode microbench: {slots} slots, "
+          f"H={n_heads}/{n_kv} hd={head_dim}, page={page_size}, "
+          f"max_len={max_len} (bytes = KV read per decoded token)")
+    print(f"{'impl':14s} {'live_tok':>9s} {'cpu_us':>10s} {'B/tok':>10s}")
+    for live in (64, 256, 1024):
+        live = min(live, max_len)
+        pos_np = np.full(slots, live - 1, np.int32)
+        pos_pool = np.full((num_pages, page_size), -1, np.int32)
+        bt = np.full((slots, n_lp), paged.NULL_PAGE, np.int32)
+        nxt = paged.RESERVED_PAGES
+        for s in range(slots):
+            for lp in range(paged.pages_for(live, page_size)):
+                bt[s, lp] = nxt
+                for o in range(page_size):
+                    if lp * page_size + o < live:
+                        pos_pool[nxt, o] = lp * page_size + o
+                nxt += 1
+        bt, pos_pool = jnp.asarray(bt), jnp.asarray(pos_pool)
+        pos = jnp.asarray(pos_np)
+        q = jnp.asarray(rng.normal(
+            size=(slots, n_heads, head_dim)).astype(np.float32))
+        active = paged.pages_for(live, page_size)
+        cases = {
+            # no active_pages bound = touch every logical page, the
+            # pre-fused behaviour (same code path, so the comparison
+            # isolates exactly the live-horizon bound)
+            "gather": (lambda: paged_attn.paged_attn_decode(
+                q, k_pool, v_pool, pos_pool, bt, pos, impl="xla"),
+                       max_len * row_bytes),
+            "fused": (lambda: paged_attn.paged_attn_decode(
+                q, k_pool, v_pool, pos_pool, bt, pos, active_pages=active,
+                impl="xla"), active * page_size * row_bytes),
+            "fused-q8": (lambda: paged_attn.paged_attn_decode_q8(
+                q, kq, kd, vq, vd, pos_pool, bt, pos, active_pages=active,
+                impl="xla"), active * page_size * row_bytes_q8),
+        }
+        for name, (fn, btok) in cases.items():
+            us = _time(fn, iters=20)
+            print(f"{name:14s} {live:9d} {us:10.1f} {btok:10d}")
+            rows.append((f"paged_attn/{name}/live{live}", us, f"{btok}B/tok"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="matmul,paged",
+                    help="comma-separated subset of matmul,paged")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows as a JSON artifact (CI uploads the "
+                         "paged suite's as BENCH_kernels.json)")
+    args = ap.parse_args()
+    only = set(args.only.split(","))
+    rows = []
+    if "matmul" in only:
+        rows += run()
+    if "paged" in only:
+        rows += run_paged()
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        from .run import write_rows_json
+        write_rows_json(rows, args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -46,6 +46,7 @@ def main() -> None:
     if "kernels" in only:
         from . import kernel_bench
         rows += kernel_bench.run()
+        rows += kernel_bench.run_paged()
     if "engine" in only:
         from . import engine_bench
         rows += engine_bench.run()

@@ -2,7 +2,9 @@
 
 Importing this package registers every fused dequant-matmul with
 ``ops.PALLAS_MATMULS``.  ``ops.qmatmul`` is the jit'd dispatch wrapper;
-``ref.qmatmul_ref`` the pure-jnp oracle.
+``ref.qmatmul_ref`` the pure-jnp oracle.  :mod:`.paged_attn` holds the
+fused paged-attention decode kernels (flash-decode over KV page pools)
+used by the models/serving decode hot path.
 """
 
 from . import ops, ref

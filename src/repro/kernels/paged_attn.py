@@ -1,0 +1,470 @@
+"""Fused Pallas paged-attention decode kernels (flash-decode over pages).
+
+One decode step attends a single query row per slot against that slot's KV
+pages **in place**: the grid runs over ``(slot, logical_page)`` with the
+page dimension innermost, the slot's block table rides in as a
+scalar-prefetch operand so each grid step DMAs exactly one physical page
+(``BlockSpec`` index map ``block_table[slot, page]``), and a running
+(max, sum-exp, accumulator) online softmax folds the page tiles together —
+no ``(B, max_len, ...)`` dense view is ever materialised.  Unallocated
+logical pages all map to the NULL page, so consecutive trailing grid steps
+revisit one resident block instead of streaming fresh memory: decode
+bandwidth scales with *live* pages, not ``slots x max_len``.
+
+Three kernel families share the scaffold:
+
+  * :func:`paged_attn_decode` — GQA/MHA over K/V/pos pools, full horizon or
+    sliding window (``window > 0``); the validity mask comes from the
+    page's ``pos`` entries, so ring wraparound needs no special casing.
+  * :func:`paged_mla_decode` — absorbed MLA over latent/rope pools; scores
+    and the output both live in latent space (the ``kv_b`` projection is
+    folded in by the caller), validity is positional (``idx <= pos``).
+  * :func:`paged_attn_decode_q8` — q8_0-style quantized K/V pools
+    (int8 values + one f32 scale per (token, head) row, block =
+    ``head_dim``) dequantised on the VPU inside the same online-softmax
+    loop: the stretch building block behind quantized KV pages (ROADMAP),
+    cutting page traffic ~4x vs f32 pools.
+
+``active_pages`` bounds the page loop: the serving engine knows the
+largest live horizon across its lanes each iteration and passes a bucketed
+page count, so a 4-token batch in a 32k-context pool touches one page per
+slot, not 2048.  Callers must guarantee every live key sits inside the
+first ``active_pages`` logical pages (the engine buckets
+``pages_for(max_pos + 1)`` up to a power of two).
+
+Each family has two implementations of the *same* page-bounded algorithm,
+selected by ``impl`` (or the ``REPRO_PAGED_IMPL`` env: auto | pallas |
+xla):
+
+  * ``"pallas"`` — the fused kernel above; the deployment target on TPU,
+    validated on CPU in interpret mode by tests/test_paged_attn_kernel.py
+    (kernels/common.py semantics).  Interpret execution pays ~ms per grid
+    step, so it is a correctness mode, not a performance mode.
+  * ``"xla"`` — gathers **only the first ``active_pages`` logical pages**
+    (``pool[block_table[:, :n]]``, a bounded gather) and runs one masked
+    softmax over them.  Bytes touched still scale with live tokens — this
+    is the fast path on hosts without Mosaic, and what ``"auto"`` picks
+    whenever the Pallas default would be interpret mode.
+
+For full MXU/VPU utilisation on TPU, ``page_size`` should be a multiple of
+128 and head counts multiples of 8; the tests intentionally use tiny odd
+pages, which interpret mode accepts.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import _interpret_default
+
+NEG_INF = -2.0e38
+_LANES = 128          # VPU lane width: scratch minor dim
+
+PAGED_IMPL_ENV = "REPRO_PAGED_IMPL"
+
+
+def _resolve_impl(impl: str | None) -> str:
+    impl = impl or os.environ.get(PAGED_IMPL_ENV, "auto")
+    if impl == "auto":
+        # interpret-mode Pallas is a validation harness (ms per grid
+        # step); hosts that would interpret get the bounded-gather XLA
+        # twin of the same algorithm instead
+        return "xla" if _interpret_default() else "pallas"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown paged-attention impl {impl!r}")
+    return impl
+
+
+def _n_active(block_table: jax.Array, active_pages: int | None) -> int:
+    n_pages = block_table.shape[1]
+    if active_pages is None:
+        return n_pages
+    return max(1, min(int(active_pages), n_pages))
+
+
+def _finish(o_ref, acc_ref, l_ref, nj: int):
+    """Write the normalised accumulator on the last page step."""
+
+    @pl.when(pl.program_id(1) == nj - 1)
+    def _():
+        l = jnp.maximum(l_ref[:, 0:1], 1e-30)
+        o_ref[0] = acc_ref[...] / l
+
+
+def _online_update(s, valid, v_tile, m_ref, l_ref, acc_ref):
+    """One page tile of the running softmax.  s: (H, P) f32 masked scores
+    (NEG_INF where invalid); valid: (P,) bool; v_tile(p) -> (H, Dv) given
+    the probability tile."""
+    m_prev = m_ref[:, 0:1]
+    l_prev = l_ref[:, 0:1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    # NEG_INF is a finite sentinel: exp(s - m_new) is 1, not 0, for fully
+    # masked tiles — mask the probabilities explicitly instead
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = jnp.broadcast_to(l_prev * corr + p.sum(1, keepdims=True),
+                                  l_ref.shape)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    acc_ref[...] = acc_ref[...] * corr + v_tile(p)
+
+
+def _init_accumulators(m_ref, l_ref, acc_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MHA over K/V/pos page pools
+# ---------------------------------------------------------------------------
+
+def paged_attn_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                      pos_pool: jax.Array, block_table: jax.Array,
+                      pos: jax.Array, *, window: int = 0,
+                      softcap: float = 0.0, scale: float | None = None,
+                      active_pages: int | None = None,
+                      impl: str | None = None,
+                      interpret: bool | None = None) -> jax.Array:
+    """Fused one-token paged GQA decode.
+
+    q: (B, H, D) query row per slot (RoPE already applied, unscaled);
+    k_pool/v_pool: (num_pages, P, Hkv, D[v]); pos_pool: (num_pages, P)
+    int32 absolute positions (-1 = unwritten); block_table: (B, n_pages)
+    int32; pos: (B,) int32 current absolute position.  A key at stored
+    position ``t`` is attendable iff ``0 <= t <= pos`` and, when
+    ``window > 0``, ``t > pos - window``.  Returns (B, H, Dv) f32.
+    """
+    return _attn_core(
+        q, k_pool, v_pool, pos_pool, block_table, pos, window=window,
+        softcap=softcap,
+        scale=(q.shape[-1] ** -0.5 if scale is None else scale),
+        nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
+        interpret=(_interpret_default() if interpret is None else interpret))
+
+
+def _xla_attn(q, k_pool, v_pool, pos_pool, block_table, pos, *, window,
+              softcap, scale, nj):
+    """Bounded-gather XLA twin: read the first ``nj`` logical pages only,
+    one masked softmax over them (grouped einsum — KV stays in its
+    (Hkv,) layout)."""
+    b, h, d = q.shape
+    tp, hkv = k_pool.shape[1], k_pool.shape[2]
+    dv = v_pool.shape[-1]
+    rep = h // hkv
+    btj = block_table[:, :nj]
+    ks = k_pool[btj].reshape(b, nj * tp, hkv, d).astype(jnp.float32)
+    vs = v_pool[btj].reshape(b, nj * tp, hkv, dv).astype(jnp.float32)
+    ps = pos_pool[btj].reshape(b, nj * tp)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, hkv, rep, d)
+    s = jnp.einsum("bkrd,blkd->bkrl", qg, ks,
+                   preferred_element_type=jnp.float32)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (ps >= 0) & (ps <= pos[:, None])
+    if window:
+        valid &= ps > pos[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrl,blkd->bkrd", w, vs,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, dv)
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "scale", "nj",
+                                   "impl", "interpret"))
+def _attn_core(q, k_pool, v_pool, pos_pool, block_table, pos, *,
+               window: int, softcap: float, scale: float, nj: int,
+               impl: str, interpret: bool) -> jax.Array:
+    if impl == "xla":
+        return _xla_attn(q, k_pool, v_pool, pos_pool, block_table, pos,
+                         window=window, softcap=softcap, scale=scale, nj=nj)
+    b, h, d = q.shape
+    tp, hkv = k_pool.shape[1], k_pool.shape[2]
+    dv = v_pool.shape[-1]
+    rep = h // hkv
+
+    def kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, pp_ref, o_ref,
+               m_ref, l_ref, acc_ref):
+        del bt_ref
+        _init_accumulators(m_ref, l_ref, acc_ref)
+        qv = q_ref[0].astype(jnp.float32) * scale            # (H, D)
+        kt = k_ref[0].astype(jnp.float32)                    # (P, Hkv, D)
+        q2 = qv.reshape(hkv, rep, d)
+        s = jax.lax.dot_general(                             # (Hkv, rep, P)
+            q2, kt, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32).reshape(h, tp)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        pt = pp_ref[0]                                       # (P,) int32
+        pb = pos_ref[pl.program_id(0)]
+        valid = (pt >= 0) & (pt <= pb)
+        if window:
+            valid &= pt > pb - window
+        s = jnp.where(valid[None, :], s, NEG_INF)
+
+        def v_tile(p):
+            p3 = p.reshape(hkv, rep, tp)
+            return jax.lax.dot_general(                      # (Hkv, rep, Dv)
+                p3, v_ref[0].astype(jnp.float32),
+                (((2,), (0,)), ((0,), (1,))),
+                preferred_element_type=jnp.float32).reshape(h, dv)
+
+        _online_update(s, valid, v_tile, m_ref, l_ref, acc_ref)
+        _finish(o_ref, acc_ref, l_ref, nj)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nj),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j, bt, ps: (i, 0, 0)),
+            pl.BlockSpec((1, tp, hkv, d),
+                         lambda i, j, bt, ps: (bt[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, tp, hkv, dv),
+                         lambda i, j, bt, ps: (bt[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, tp), lambda i, j, bt, ps: (bt[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dv), lambda i, j, bt, ps: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, _LANES), jnp.float32),
+            pltpu.VMEM((h, _LANES), jnp.float32),
+            pltpu.VMEM((h, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), jnp.float32),
+        interpret=interpret,
+    )(block_table, pos, q, k_pool, v_pool, pos_pool)
+
+
+# ---------------------------------------------------------------------------
+# MLA: absorbed latent attention over c_kv / k_rope page pools
+# ---------------------------------------------------------------------------
+
+def paged_mla_decode(q_eff: jax.Array, q_rope: jax.Array,
+                     ckv_pool: jax.Array, krope_pool: jax.Array,
+                     block_table: jax.Array, pos: jax.Array, *,
+                     scale: float, active_pages: int | None = None,
+                     impl: str | None = None,
+                     interpret: bool | None = None) -> jax.Array:
+    """Fused one-token paged MLA decode, absorbed form.
+
+    q_eff: (B, H, R) query pre-multiplied by the absorbed ``kv_b`` key
+    projection; q_rope: (B, H, Dr) decoupled-RoPE query; ckv_pool:
+    (num_pages, P, R); krope_pool: (num_pages, P, Dr).  Latent pools carry
+    no positions: entry ``j * P + o`` is valid iff its logical index is
+    ``<= pos`` (matching :func:`repro.models.mla.mla_decode`).  Returns the
+    attended latents (B, H, R) f32 — the caller projects out with ``w_vb``.
+    """
+    return _mla_core(
+        q_eff, q_rope, ckv_pool, krope_pool, block_table, pos, scale=scale,
+        nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
+        interpret=(_interpret_default() if interpret is None else interpret))
+
+
+def _xla_mla(q_eff, q_rope, ckv_pool, krope_pool, block_table, pos, *,
+             scale, nj):
+    """Bounded-gather XLA twin of the MLA kernel."""
+    b, h, r = q_eff.shape
+    tp = ckv_pool.shape[1]
+    btj = block_table[:, :nj]
+    cs = ckv_pool[btj].reshape(b, nj * tp, r).astype(jnp.float32)
+    ks = krope_pool[btj].reshape(b, nj * tp, -1).astype(jnp.float32)
+    s = (jnp.einsum("bhr,blr->bhl", q_eff.astype(jnp.float32), cs,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhd,bld->bhl", q_rope.astype(jnp.float32), ks,
+                      preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(nj * tp)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhl,blr->bhr", w, cs,
+                      preferred_element_type=jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("scale", "nj", "impl", "interpret"))
+def _mla_core(q_eff, q_rope, ckv_pool, krope_pool, block_table, pos, *,
+              scale: float, nj: int, impl: str,
+              interpret: bool) -> jax.Array:
+    if impl == "xla":
+        return _xla_mla(q_eff, q_rope, ckv_pool, krope_pool, block_table,
+                        pos, scale=scale, nj=nj)
+    b, h, r = q_eff.shape
+    dr = q_rope.shape[-1]
+    tp = ckv_pool.shape[1]
+
+    def kernel(bt_ref, pos_ref, qe_ref, qr_ref, ckv_ref, kr_ref, o_ref,
+               m_ref, l_ref, acc_ref):
+        del bt_ref
+        _init_accumulators(m_ref, l_ref, acc_ref)
+        ckv = ckv_ref[0].astype(jnp.float32)                 # (P, R)
+        krope = kr_ref[0].astype(jnp.float32)                # (P, Dr)
+        s = (jnp.dot(qe_ref[0].astype(jnp.float32), ckv.T,
+                     preferred_element_type=jnp.float32)
+             + jnp.dot(qr_ref[0].astype(jnp.float32), krope.T,
+                       preferred_element_type=jnp.float32)) * scale
+        kidx = (pl.program_id(1) * tp
+                + jax.lax.broadcasted_iota(jnp.int32, (tp, 1), 0)[:, 0])
+        valid = kidx <= pos_ref[pl.program_id(0)]
+        s = jnp.where(valid[None, :], s, NEG_INF)
+        _online_update(s, valid, lambda p: jnp.dot(
+            p, ckv, preferred_element_type=jnp.float32),
+            m_ref, l_ref, acc_ref)
+        _finish(o_ref, acc_ref, l_ref, nj)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nj),
+        in_specs=[
+            pl.BlockSpec((1, h, r), lambda i, j, bt, ps: (i, 0, 0)),
+            pl.BlockSpec((1, h, dr), lambda i, j, bt, ps: (i, 0, 0)),
+            pl.BlockSpec((1, tp, r), lambda i, j, bt, ps: (bt[i, j], 0, 0)),
+            pl.BlockSpec((1, tp, dr), lambda i, j, bt, ps: (bt[i, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, r), lambda i, j, bt, ps: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, _LANES), jnp.float32),
+            pltpu.VMEM((h, _LANES), jnp.float32),
+            pltpu.VMEM((h, r), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
+        interpret=interpret,
+    )(block_table, pos, q_eff, q_rope, ckv_pool, krope_pool)
+
+
+# ---------------------------------------------------------------------------
+# q8_0 quantized K/V page pools (stretch: quantized KV pages)
+# ---------------------------------------------------------------------------
+
+def quantize_kv_page_pool(pool: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """q8_0-style quantization of a K or V page pool, block = head_dim.
+
+    pool: (num_pages, P, Hkv, D) float -> (qs int8 same shape,
+    d (num_pages, P, Hkv) f32) with ``x ~ qs * d``, ``d = max|x| / 127``
+    per (page, token, head) row — the layout a quantized-KV-pages cache
+    would store (~4x less page traffic than f32 pools).
+    """
+    x = pool.astype(jnp.float32)
+    d = jnp.max(jnp.abs(x), axis=-1) / 127.0
+    safe = jnp.maximum(d, 1e-30)
+    qs = jnp.clip(jnp.round(x / safe[..., None]), -127, 127).astype(jnp.int8)
+    return qs, d
+
+
+def paged_attn_decode_q8(q: jax.Array, k_qs: jax.Array, k_d: jax.Array,
+                         v_qs: jax.Array, v_d: jax.Array,
+                         pos_pool: jax.Array, block_table: jax.Array,
+                         pos: jax.Array, *, window: int = 0,
+                         softcap: float = 0.0, scale: float | None = None,
+                         active_pages: int | None = None,
+                         impl: str | None = None,
+                         interpret: bool | None = None) -> jax.Array:
+    """:func:`paged_attn_decode` over q8_0 page pools.
+
+    ``k_qs``/``v_qs``: int8 value pools, ``k_d``/``v_d``: their per-row
+    scales (see :func:`quantize_kv_page_pool`).  Pages stream in packed;
+    dequantisation happens inside the online-softmax loop (VPU), so the
+    HBM traffic per page is ~1/4 of the f32 pools'.  Numerically exact
+    w.r.t. attending the dequantised pools.
+    """
+    return _attn_q8_core(
+        q, k_qs, k_d, v_qs, v_d, pos_pool, block_table, pos, window=window,
+        softcap=softcap,
+        scale=(q.shape[-1] ** -0.5 if scale is None else scale),
+        nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
+        interpret=(_interpret_default() if interpret is None else interpret))
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "scale", "nj",
+                                   "impl", "interpret"))
+def _attn_q8_core(q, k_qs, k_d, v_qs, v_d, pos_pool, block_table, pos, *,
+                  window: int, softcap: float, scale: float, nj: int,
+                  impl: str, interpret: bool) -> jax.Array:
+    b, h, d = q.shape
+    tp, hkv = k_qs.shape[1], k_qs.shape[2]
+    dv = v_qs.shape[-1]
+    rep = h // hkv
+    if impl == "xla":
+        btj = block_table[:, :nj]
+        kf = (k_qs[btj].astype(jnp.float32)
+              * k_d[btj].astype(jnp.float32)[..., None])
+        vf = (v_qs[btj].astype(jnp.float32)
+              * v_d[btj].astype(jnp.float32)[..., None])
+        # reuse the bounded-gather twin on pre-dequantised *gathered* pages
+        # (gather first so only nj pages are ever dequantised)
+        return _xla_attn(
+            q, kf.reshape(b * nj, tp, hkv, d), vf.reshape(b * nj, tp, hkv,
+                                                          dv),
+            pos_pool[btj].reshape(b * nj, tp),
+            jnp.arange(b * nj, dtype=jnp.int32).reshape(b, nj), pos,
+            window=window, softcap=softcap, scale=scale, nj=nj)
+
+    def kernel(bt_ref, pos_ref, q_ref, kq_ref, kd_ref, vq_ref, vd_ref,
+               pp_ref, o_ref, m_ref, l_ref, acc_ref):
+        del bt_ref
+        _init_accumulators(m_ref, l_ref, acc_ref)
+        qv = q_ref[0].astype(jnp.float32) * scale
+        kt = kq_ref[0].astype(jnp.float32) * kd_ref[0][..., None]
+        q2 = qv.reshape(hkv, rep, d)
+        s = jax.lax.dot_general(
+            q2, kt, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32).reshape(h, tp)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        pt = pp_ref[0]
+        pb = pos_ref[pl.program_id(0)]
+        valid = (pt >= 0) & (pt <= pb)
+        if window:
+            valid &= pt > pb - window
+        s = jnp.where(valid[None, :], s, NEG_INF)
+
+        def v_tile(p):
+            vt = vq_ref[0].astype(jnp.float32) * vd_ref[0][..., None]
+            p3 = p.reshape(hkv, rep, tp)
+            return jax.lax.dot_general(
+                p3, vt, (((2,), (0,)), ((0,), (1,))),
+                preferred_element_type=jnp.float32).reshape(h, dv)
+
+        _online_update(s, valid, v_tile, m_ref, l_ref, acc_ref)
+        _finish(o_ref, acc_ref, l_ref, nj)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nj),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j, bt, ps: (i, 0, 0)),
+            pl.BlockSpec((1, tp, hkv, d),
+                         lambda i, j, bt, ps: (bt[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, tp, hkv),
+                         lambda i, j, bt, ps: (bt[i, j], 0, 0)),
+            pl.BlockSpec((1, tp, hkv, dv),
+                         lambda i, j, bt, ps: (bt[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, tp, hkv),
+                         lambda i, j, bt, ps: (bt[i, j], 0, 0)),
+            pl.BlockSpec((1, tp), lambda i, j, bt, ps: (bt[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dv), lambda i, j, bt, ps: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, _LANES), jnp.float32),
+            pltpu.VMEM((h, _LANES), jnp.float32),
+            pltpu.VMEM((h, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), jnp.float32),
+        interpret=interpret,
+    )(block_table, pos, q, k_qs, k_d, v_qs, v_d, pos_pool)

@@ -49,6 +49,15 @@ def main(argv=None):
                     help="admission chunk length in tokens; long prompts "
                          "stream in chunk-by-chunk interleaved with decode "
                          "(default: whole prompt in one chunk)")
+    ap.add_argument("--kernel", default=None,
+                    choices=("fused", "gather"),
+                    help="paged decode implementation: 'fused' attends KV "
+                         "pages in place via the Pallas flash-decode "
+                         "kernels (decode bandwidth scales with live "
+                         "tokens), 'gather' re-materialises the dense "
+                         "slots x max-len view each step (reference). "
+                         "Default: REPRO_PAGED_KERNEL env, else fused. "
+                         "Only meaningful with --page-size > 0")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.6)
@@ -82,7 +91,7 @@ def main(argv=None):
     engine = Engine(model, qparams, max_len=args.max_len,
                     sampler=SamplerConfig(args.temperature, args.top_p),
                     page_size=args.page_size, num_pages=args.num_pages,
-                    prefill_chunk=args.prefill_chunk)
+                    prefill_chunk=args.prefill_chunk, kernel=args.kernel)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,

@@ -19,10 +19,20 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..kernels import paged_attn
 from . import paged
 from .common import apply_rope, linear, rms_norm, softcap
 
 NEG_INF = -2.0e38
+
+# Paged decode kernel selection: "fused" (Pallas flash-decode over pages,
+# the fast path) or "gather" (materialise the exact dense view first — the
+# reference implementation the parity suite checks the kernel against).
+PAGED_KERNEL_ENV = "REPRO_PAGED_KERNEL"
+
+
+def default_paged_kernel() -> str:
+    return os.environ.get(PAGED_KERNEL_ENV, "fused")
 
 # PERF B1 (EXPERIMENTS.md §Perf): grouped-query attention without
 # materialising jnp.repeat(kv, rep) — the repeat forces the SPMD partitioner
@@ -229,25 +239,58 @@ def paged_attn_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
 def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                       pos: jax.Array, block_table: jax.Array, *, local: bool,
                       max_len: int, live: jax.Array | None = None,
+                      kernel: str | None = None,
+                      active_pages: int | None = None,
                       ) -> tuple[jax.Array, dict]:
     """One-token decode against a paged cache.
 
-    Gathers the exact dense view from the page pools, runs the unchanged
-    dense :func:`attn_decode` on it (bitwise-identical logits by
-    construction), then scatters the one newly written row back into the
-    pages.
+    ``kernel`` selects the implementation (default: ``REPRO_PAGED_KERNEL``
+    env, else "fused"):
+
+      * ``"fused"`` — scatter the new K/V/pos row into its page, then run
+        the flash-decode Pallas kernel that reads the pages **in place**
+        through the block table (no dense view; decode bandwidth scales
+        with live pages — see kernels/paged_attn.py).  ``active_pages``
+        optionally bounds the page loop to the batch's live horizon.
+      * ``"gather"`` — reference implementation: gather the exact dense
+        view, run the unchanged dense :func:`attn_decode` on it
+        (bitwise-identical logits to the contiguous layout), scatter the
+        newly written row back.
     """
+    kernel = kernel or default_paged_kernel()
     length = cache_len(cfg, max_len, local)
-    dense = {k: paged.gather_pages(cache[k], block_table, length)
-             for k in ("k", "v", "pos")}
-    delta, dnew = attn_decode(p, cfg, x, dense, pos, local=local, live=live)
     b = x.shape[0]
-    bidx = jnp.arange(b)
+    if kernel == "gather":
+        dense = {k: paged.gather_pages(cache[k], block_table, length)
+                 for k in ("k", "v", "pos")}
+        delta, dnew = attn_decode(p, cfg, x, dense, pos, local=local,
+                                  live=live)
+        bidx = jnp.arange(b)
+        slot = (pos % length).astype(jnp.int32)
+        new = {key: paged.scatter_token(cache[key], block_table, slot,
+                                        dnew[key][bidx, slot], ok=live)
+               for key in ("k", "v", "pos")}
+        return delta, new
+    if kernel != "fused":
+        raise ValueError(f"unknown paged decode kernel {kernel!r}")
+
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, h, pos[:, None])
     slot = (pos % length).astype(jnp.int32)
-    new = {key: paged.scatter_token(cache[key], block_table, slot,
-                                    dnew[key][bidx, slot], ok=live)
-           for key in ("k", "v", "pos")}
-    return delta, new
+    new = {
+        "k": paged.scatter_token(cache["k"], block_table, slot, k[:, 0],
+                                 ok=live),
+        "v": paged.scatter_token(cache["v"], block_table, slot, v[:, 0],
+                                 ok=live),
+        "pos": paged.scatter_token(cache["pos"], block_table, slot,
+                                   pos.astype(jnp.int32), ok=live),
+    }
+    o = paged_attn.paged_attn_decode(
+        q[:, 0], new["k"], new["v"], new["pos"], block_table, pos,
+        window=(cfg.window if local else 0), softcap=cfg.attn_softcap,
+        scale=cfg.head_dim ** -0.5, active_pages=active_pages)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    return linear(p["o_proj"], o), new
 
 
 def chunk_key_positions(old_pos: jax.Array, positions: jax.Array,

@@ -15,9 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..kernels import paged_attn
 from . import paged
 from .attention import (_chunk_attn, causal_mask_fn, chunk_key_positions,
-                        chunk_mask_fn, NEG_INF)
+                        chunk_mask_fn, default_paged_kernel, NEG_INF)
 from .common import apply_rope, linear, rms_norm
 
 from ..core.qtensor import QTensor
@@ -132,17 +133,58 @@ def paged_mla_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
 def mla_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                      pos: jax.Array, block_table: jax.Array, *,
                      max_len: int, live: jax.Array | None = None,
+                     kernel: str | None = None,
+                     active_pages: int | None = None,
                      ) -> tuple[jax.Array, dict]:
-    """Absorbed decode against paged latents: gather the exact dense view,
-    run the unchanged :func:`mla_decode`, scatter the new row back."""
-    dense = {k: paged.gather_pages(cache[k], block_table, max_len)
-             for k in ("c_kv", "k_rope")}
-    delta, dnew = mla_decode(p, cfg, x, dense, pos, live=live)
-    bidx = jnp.arange(x.shape[0])
-    new = {k: paged.scatter_token(cache[k], block_table, pos,
-                                  dnew[k][bidx, pos], ok=live)
-           for k in ("c_kv", "k_rope")}
-    return delta, new
+    """Absorbed decode against paged latents.
+
+    ``kernel="fused"`` (default) scatters the new latent row into its page
+    and attends the pages in place with the flash-decode Pallas kernel —
+    scores and accumulation stay in the compressed latent space, the
+    absorbed ``kv_b`` projections are applied outside the kernel.
+    ``kernel="gather"`` is the reference: gather the exact dense view, run
+    the unchanged :func:`mla_decode`, scatter the new row back.
+    """
+    kernel = kernel or default_paged_kernel()
+    if kernel == "gather":
+        dense = {k: paged.gather_pages(cache[k], block_table, max_len)
+                 for k in ("c_kv", "k_rope")}
+        delta, dnew = mla_decode(p, cfg, x, dense, pos, live=live)
+        bidx = jnp.arange(x.shape[0])
+        new = {k: paged.scatter_token(cache[k], block_table, pos,
+                                      dnew[k][bidx, pos], ok=live)
+               for k in ("c_kv", "k_rope")}
+        return delta, new
+    if kernel != "fused":
+        raise ValueError(f"unknown paged decode kernel {kernel!r}")
+
+    b = x.shape[0]
+    nh = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    rank = cfg.kv_lora_rank
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q_nope, q_rope = _project_q(p, cfg, h, pos[:, None])      # (B,1,H,*)
+    c_new, kr_new = _latents(p, cfg, h, pos[:, None])         # (B,1,rank)
+    idx = pos.astype(jnp.int32)
+    new = {
+        "c_kv": paged.scatter_token(cache["c_kv"], block_table, idx,
+                                    c_new[:, 0], ok=live),
+        "k_rope": paged.scatter_token(cache["k_rope"], block_table, idx,
+                                      kr_new[:, 0], ok=live),
+    }
+    dt = x.dtype
+    w_kvb = _maybe_dequant(p["kv_b"], dt).reshape(rank, nh, dn + dv)
+    w_kb, w_vb = w_kvb[..., :dn], w_kvb[..., dn:]
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_kb.astype(jnp.float32))              # (B,H,rank)
+    lat = paged_attn.paged_mla_decode(
+        q_eff.astype(dt), q_rope[:, 0], new["c_kv"], new["k_rope"],
+        block_table, pos, scale=(dn + dr) ** -0.5,
+        active_pages=active_pages)
+    o = jnp.einsum("bhr,rhd->bhd", lat.astype(dt), w_vb,
+                   preferred_element_type=jnp.float32)        # (B,H,dv)
+    o = o.reshape(b, 1, nh * dv).astype(x.dtype)
+    return linear(p["o_proj"], o), new
 
 
 def mla_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,

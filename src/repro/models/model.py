@@ -313,18 +313,27 @@ class Model:
         return flat
 
     def decode_step_paged(self, params, cache, tokens, pos, block_tables,
-                          *, page_size: int, max_len: int, live=None):
+                          *, page_size: int, max_len: int, live=None,
+                          kernel: str | None = None,
+                          active_pages: tuple[int, int] | None = None):
         """One decode step against a paged cache.
 
         ``block_tables``: {"full": (B, n) int32, "ring": (B, n') int32}
         mapping each slot's logical pages to pool pages (see
-        models/paged.py).  Bitwise-identical to :meth:`decode_step` on the
-        equivalent dense cache: the paged path gathers the exact dense view
-        and runs the same per-layer decode on it.
+        models/paged.py).  ``kernel`` selects the per-layer paged decode:
+        ``"fused"`` (default via ``REPRO_PAGED_KERNEL``) runs the Pallas
+        flash-decode kernels that read pages in place;  ``"gather"`` is the
+        reference path, bitwise-identical to :meth:`decode_step` on the
+        equivalent dense cache (gathers the exact dense view and runs the
+        same per-layer decode on it).  ``active_pages``: optional static
+        ``(n_full_pages, n_ring_pages)`` bound on the fused kernels' page
+        loops — the serve loop passes the batch's bucketed live horizon so
+        decode bandwidth scales with live tokens.
         """
-        return self.decode_step(params, cache, tokens, pos,
-                                paged=(block_tables, page_size, max_len),
-                                live=live)
+        return self.decode_step(
+            params, cache, tokens, pos,
+            paged=(block_tables, page_size, max_len, kernel, active_pages),
+            live=live)
 
     def prefill_chunk(self, params, cache, tokens, start, chunk_len, *,
                       max_len: int, block_tables=None, page_size: int = 0):

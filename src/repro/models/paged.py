@@ -16,10 +16,24 @@ Two physical pages are reserved:
     tokens are routed here.  It is never mapped into a live block table,
     so its contents are never read.
 
-The gather path reconstructs the *exact* dense layout (``gather_pages`` +
-slice), so the dense decode/prefill math can run unchanged on the gathered
-view — paged and contiguous paths are bitwise identical by construction
-(see tests/test_paged_cache.py).
+Two decode paths read these pools (``kernel=`` on the decode APIs /
+``REPRO_PAGED_KERNEL`` env):
+
+  * **fused** (the fast path, default) — the flash-decode Pallas kernels
+    in kernels/paged_attn.py attend the pages *in place* through the
+    block table with an online softmax; nothing dense is materialised and
+    decode bandwidth scales with live pages (the serve loop additionally
+    bounds the page loop to the batch's bucketed live horizon).
+  * **gather** (the reference implementation) — ``gather_pages`` + slice
+    reconstructs the *exact* dense layout so the dense decode/prefill
+    math runs unchanged on the gathered view; paged and contiguous are
+    bitwise identical by construction (tests/test_paged_cache.py), and
+    the fused kernels are checked against this reference to f32 tolerance
+    (tests/test_paged_attn_kernel.py).
+
+Chunked prefill still uses the gather path (one gather per admitted
+chunk, amortised over the whole chunk — decode was the per-step hot
+loop).
 """
 
 from __future__ import annotations

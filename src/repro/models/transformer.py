@@ -82,11 +82,14 @@ def decode_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
                  cache: dict, pos: jax.Array, *, paged=None, live=None):
     """One-token decode through one layer.  Returns (x, new_cache).
 
-    ``paged``: optional ``(block_tables, page_size, max_len)`` — attention
-    and MLA caches are then page pools indexed through the slot block
-    tables (``block_tables["full"]`` / ``["ring"]``); recurrent state is a
-    dense passthrough either way.  ``live`` (B,) bool: rows flagged False
-    (free / mid-prefill serve lanes) leave the cache untouched.
+    ``paged``: optional ``(block_tables, page_size, max_len, kernel,
+    active_pages)`` — attention and MLA caches are then page pools indexed
+    through the slot block tables (``block_tables["full"]`` / ``["ring"]``);
+    recurrent state is a dense passthrough either way.  ``kernel`` picks
+    fused-Pallas vs gather-reference decode (None = env default);
+    ``active_pages`` is an optional ``(n_full, n_ring)`` static bound on
+    the page loop for the fused kernel.  ``live`` (B,) bool: rows flagged
+    False (free / mid-prefill serve lanes) leave the cache untouched.
     """
     kind = cfg.block_kind(layer)
     cross = {k: cache.pop(k) for k in ("cross_k", "cross_v")
@@ -95,16 +98,22 @@ def decode_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
     if kind in ("attn", "local_attn"):
         local = kind == "local_attn"
         if paged is not None:
-            block_tables, _, max_len = paged
+            block_tables, _, max_len, kernel, active = paged
             # MLA latents always span the full horizon (no ring bound)
-            bt = block_tables["ring" if local and not cfg.mla else "full"]
+            use_ring = local and not cfg.mla
+            bt = block_tables["ring" if use_ring else "full"]
+            ap = None
+            if active is not None:
+                ap = active[1] if use_ring else active[0]
+                ap = ap or None
             if cfg.mla:
                 delta, cache_new = mla.mla_decode_paged(
-                    p, cfg, x, cache, pos, bt, max_len=max_len, live=live)
+                    p, cfg, x, cache, pos, bt, max_len=max_len, live=live,
+                    kernel=kernel, active_pages=ap)
             else:
                 delta, cache_new = attention.attn_decode_paged(
                     p, cfg, x, cache, pos, bt, local=local, max_len=max_len,
-                    live=live)
+                    live=live, kernel=kernel, active_pages=ap)
         elif cfg.mla:
             delta, cache_new = mla.mla_decode(p, cfg, x, cache, pos,
                                               live=live)

@@ -32,7 +32,14 @@ deployment driver for the paper's scenario (DQ3_K_M weights, 32k context):
   * **Decode.**  Each iteration issues a SINGLE jit'd batched decode step
     over all ``slots`` rows — live lanes advance one token; free lanes
     compute throwaway rows whose cache writes are routed to the garbage
-    page (paged) or overwritten on admission (dense).
+    page (paged) or overwritten on admission (dense).  On the paged cache
+    the default ``kernel="fused"`` runs the Pallas flash-decode kernels
+    (kernels/paged_attn.py) that attend the KV pages **in place** through
+    the block tables, with the page loop bounded by the batch's bucketed
+    live horizon — decode reads scale with live tokens, not
+    ``slots x max_len``.  ``kernel="gather"`` keeps the dense-view
+    reference path.  New pages for lanes crossing a page boundary are
+    claimed with one batched allocator call per iteration.
   * **Retirement.**  A lane frees when its request hits ``eos_id``,
     produces ``max_new`` tokens, or reaches the ``max_len`` cache horizon;
     its pages return to the pool the same iteration (the stress tests
@@ -72,12 +79,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import paged, xlstm
-from ..models.attention import cache_len
+from ..models.attention import cache_len, default_paged_kernel
 from ..models.model import Model
 from .sampler import (SamplerConfig, request_key, sample, sample_per_slot,
                       stream_key)
 
 _RECURRENT_KINDS = ("rglru", "mlstm", "slstm")
+
+
+def _bucket_pages(n: int, cap: int) -> int:
+    """Round a live page count up to a power of two, clamped to the block
+    table width — the static page-loop bound handed to the fused kernels
+    (power-of-two buckets keep the jit trace count logarithmic)."""
+    if cap <= 0:
+        return 0
+    n = max(1, min(n, cap))
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
 
 
 class PagePool:
@@ -102,15 +122,20 @@ class PagePool:
         return len(self._held)
 
     def alloc(self) -> int:
-        if not self._free:
+        return self.alloc_many(1)[0]
+
+    def alloc_many(self, n: int) -> list[int]:
+        """One allocator call for ``n`` pages (the decode loop batches all
+        lanes crossing a page boundary into a single call per step)."""
+        if n > len(self._free):
             raise RuntimeError(
-                f"page pool exhausted ({self.capacity} pages in use); size "
-                f"the pool for the worst-case live-token load or admit "
-                f"fewer concurrent requests")
-        pid = self._free.pop()
-        self._held.add(pid)
+                f"page pool exhausted ({self.capacity} pages in use, "
+                f"{n} requested); size the pool for the worst-case "
+                f"live-token load or admit fewer concurrent requests")
+        pids = [self._free.pop() for _ in range(n)]
+        self._held.update(pids)
         self.peak_in_use = max(self.peak_in_use, self.in_use)
-        return pid
+        return pids
 
     def free(self, pages) -> None:
         for pid in pages:
@@ -174,6 +199,11 @@ class EngineStats:
     peak_pages: int = 0
     pages_leaked: int = 0                # pages still held after the call
     dense_cache_bytes: int = 0           # slots x max_len layout, for compare
+    # decode-read traffic: KV-cache bytes the decode attention touches,
+    # summed over iterations ("fused" reads the bucketed live pages;
+    # "gather" re-materialises every logical page each step)
+    decode_kv_bytes: int = 0
+    decoded_tokens: int = 0              # live-lane tokens over all iterations
 
     @property
     def max_concurrency(self) -> int:
@@ -215,6 +245,12 @@ class EngineStats:
     def bytes_per_live_token(self) -> float:
         return self.cache_bytes_mean / max(self.mean_live_tokens, 1e-9)
 
+    @property
+    def kv_bytes_per_decoded_token(self) -> float:
+        """Mean KV-cache bytes the decode path reads per emitted token —
+        the memory-traffic figure the fused paged kernels drive down."""
+        return self.decode_kv_bytes / max(self.decoded_tokens, 1)
+
     def report(self) -> str:
         lines = [
             f"{len(self.requests)} requests, {self.total_tokens} tokens in "
@@ -233,6 +269,10 @@ class EngineStats:
                 f"leaked {self.pages_leaked})  cache "
                 f"{self.bytes_per_live_token:.0f} B/live-token vs dense "
                 f"{self.dense_cache_bytes / max(self.mean_live_tokens, 1e-9):.0f}")
+        if self.decoded_tokens:
+            lines.append(
+                f"decode reads {self.kv_bytes_per_decoded_token:.0f} "
+                f"KV-B/decoded-token over {self.decoded_tokens} tokens")
         for r in sorted(self.requests, key=lambda r: r.rid):
             lines.append(
                 f"  req {r.rid}: wait {r.queue_wait_s * 1e3:.1f}ms  "
@@ -273,12 +313,16 @@ class Engine:
     ``page_size > 0`` turns on the paged KV cache (``num_pages`` caps the
     pool; default sizes it for the worst case).  ``prefill_chunk`` sets the
     admission chunk length in tokens (default: whole prompts, one chunk).
+    ``kernel`` selects the paged decode implementation: ``"fused"`` (Pallas
+    flash-decode over the pages in place, bandwidth scales with live
+    tokens) or ``"gather"`` (dense-view reference); default from the
+    ``REPRO_PAGED_KERNEL`` env, else fused.
     """
 
     def __init__(self, model: Model, params: Any, *, max_len: int = 512,
                  eos_id: int = -1, sampler: SamplerConfig = SamplerConfig(),
                  jit: bool = True, page_size: int = 0, num_pages: int = 0,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, kernel: str | None = None):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -286,6 +330,9 @@ class Engine:
         self.sampler = sampler
         self.page_size = page_size
         self.num_pages = num_pages
+        self.kernel = kernel or default_paged_kernel()
+        if self.kernel not in ("fused", "gather"):
+            raise ValueError(f"unknown paged decode kernel {self.kernel!r}")
         self.prefill_chunk = min(prefill_chunk, max_len) or max_len
         self.last_stats: EngineStats | None = None
         cfg = model.cfg
@@ -302,6 +349,8 @@ class Engine:
         self._has_ring = (not cfg.mla) and any(k == "local_attn"
                                                for k in kinds)
         self._ring_len = cache_len(cfg, max_len, local=True)
+        self._full_page_bytes, self._ring_page_bytes = (
+            self._kind_page_bytes() if page_size else (0, 0))
         pool_axis = 1 if model.scan else 0
 
         def scrub(pos_leaves, ids):
@@ -314,19 +363,22 @@ class Engine:
                         else v.at[ids].set(-1))
                     for k, v in pos_leaves.items()}
 
+        decode_paged = partial(model.decode_step_paged, page_size=page_size,
+                               max_len=max_len, kernel=self.kernel)
         if jit:
             self._decode = jax.jit(model.decode_step)
-            self._decode_paged = jax.jit(
-                partial(model.decode_step_paged, page_size=page_size,
-                        max_len=max_len))
+            # active_pages is a static (n_full, n_ring) page bound for the
+            # fused kernels' grids; bucketing below keeps the number of
+            # distinct traces logarithmic in max_len/page_size
+            self._decode_paged = jax.jit(decode_paged,
+                                         static_argnames=("active_pages",))
             self._chunk = jax.jit(
                 partial(model.prefill_chunk, max_len=max_len,
                         page_size=page_size))
             self._scrub = jax.jit(scrub)
         else:
             self._decode = model.decode_step
-            self._decode_paged = partial(
-                model.decode_step_paged, page_size=page_size, max_len=max_len)
+            self._decode_paged = decode_paged
             self._chunk = partial(model.prefill_chunk, max_len=max_len,
                                   page_size=page_size)
             self._scrub = scrub
@@ -430,7 +482,8 @@ class Engine:
             return wf + wr
 
         def ensure_pages(lane: _Slot, s: int, lo: int, hi: int) -> None:
-            """Allocate pages covering logical positions [lo, hi)."""
+            """Allocate pages covering logical positions [lo, hi)
+            (admission path: chunk spans are per-lane anyway)."""
             if not use_paged or hi <= lo:
                 return
             if n_full:
@@ -447,6 +500,33 @@ class Engine:
                         bt_ring[s, lp] = pool.alloc()
                         lane.pages_ring.append(bt_ring[s, lp])
                         lane.reserve_remaining -= 1
+
+        def alloc_decode_pages(live_s: np.ndarray) -> None:
+            """Decode-time allocation, batched: each live lane writes one
+            token this step, so it needs at most one new full + one new
+            ring page.  The boundary-crossing masks are computed vectorized
+            over all lanes and ONE allocator call covers the whole step
+            (ROADMAP follow-up: cut the per-lane host loop)."""
+            if not use_paged or live_s.size == 0:
+                return
+            posv = np.array([lanes[s].pos for s in live_s], np.int32)
+            want: list[tuple[np.ndarray, int, int, bool]] = []
+            if n_full:
+                lp = posv // P
+                need = bt_full[live_s, lp] < paged.RESERVED_PAGES
+                want += [(bt_full, s, l, True)
+                         for s, l in zip(live_s[need], lp[need])]
+            if n_ring:
+                lp = (posv % self._ring_len) // P
+                need = bt_ring[live_s, lp] < paged.RESERVED_PAGES
+                want += [(bt_ring, s, l, False)
+                         for s, l in zip(live_s[need], lp[need])]
+            for (table, s, lp, is_full), pid in zip(
+                    want, pool.alloc_many(len(want))):
+                table[s, lp] = pid
+                lane = lanes[s]
+                (lane.pages_full if is_full else lane.pages_ring).append(pid)
+                lane.reserve_remaining -= 1
 
         def release(lane: _Slot, s: int) -> None:
             nonlocal cache
@@ -581,9 +661,8 @@ class Engine:
             stats.live_tokens_per_iteration.append(
                 sum(l.pos + 1 for l in lanes if l.live)
                 + sum(l.prefill_pos for l in lanes if l.state == _PREFILL))
-            for s, lane in enumerate(lanes):
-                if lane.live:
-                    ensure_pages(lane, s, lane.pos, lane.pos + 1)
+            alloc_decode_pages(np.array(
+                [s for s, l in enumerate(lanes) if l.live], np.int32))
             if use_paged:
                 stats.pages_in_use_per_iteration.append(pool.in_use)
             toks = jnp.asarray([s.tok for s in lanes], jnp.int32)
@@ -592,11 +671,30 @@ class Engine:
             live_mask = jnp.asarray([s.live for s in lanes])
             t0 = time.perf_counter()
             if use_paged:
+                active = None
+                if self.kernel == "fused":
+                    # bucketed live horizon: the fused kernels' page loops
+                    # (and hence decode bandwidth) follow live tokens, and
+                    # power-of-two buckets bound the number of jit traces
+                    horizon = max(l.pos + 1 for l in lanes if l.live)
+                    active = (
+                        _bucket_pages(paged.pages_for(horizon, P), n_full),
+                        _bucket_pages(
+                            paged.pages_for(min(horizon, self._ring_len), P),
+                            n_ring))
+                nf_read = active[0] if active else n_full
+                nr_read = active[1] if active else n_ring
+                stats.decode_kv_bytes += slots * (
+                    nf_read * self._full_page_bytes
+                    + nr_read * self._ring_page_bytes)
                 logits, cache = self._decode_paged(
-                    self.params, cache, toks, pos, tables(), live=live_mask)
+                    self.params, cache, toks, pos, tables(), live=live_mask,
+                    active_pages=active)
             else:
+                stats.decode_kv_bytes += stats.dense_cache_bytes
                 logits, cache = self._decode(self.params, cache, toks, pos,
                                              live=live_mask)
+            stats.decoded_tokens += len(live)
             if self.sampler.greedy:
                 next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             else:
@@ -662,6 +760,29 @@ class Engine:
         return done
 
     # -- internals -----------------------------------------------------------
+    def _kind_page_bytes(self) -> tuple[int, int]:
+        """Bytes one physical page holds across all layers, split by block
+        table kind (full-horizon vs ring) — the per-page unit of the
+        decode-read traffic stats.  Summed from the authoritative cache
+        specs (one-page pools) so layout changes can't drift from the
+        accounting."""
+        from ..models import transformer
+        cfg = self.model.cfg
+        full = ring = 0
+        for layer in range(cfg.n_layers):
+            kind = cfg.block_kind(layer)
+            if kind not in ("attn", "local_attn"):
+                continue
+            nbytes = self._spec_bytes(transformer.layer_cache_specs_paged(
+                cfg, layer, 1, self.page_size, 1, dtype=self.model.dtype))
+            # same table split as transformer.decode_layer: MLA latents
+            # always ride the full-horizon table
+            if kind == "local_attn" and not cfg.mla:
+                ring += nbytes
+            else:
+                full += nbytes
+        return full, ring
+
     def _spec_bytes(self, specs: dict) -> int:
         return sum(int(np.prod(s.shape)) * s.dtype.itemsize
                    for s in jax.tree_util.tree_leaves(specs))

@@ -1,11 +1,13 @@
-"""Paged vs contiguous KV-cache parity.
+"""Paged vs contiguous KV-cache parity (gather reference path).
 
-The paged path gathers the exact dense layout from its page pools before
-running the (shared) dense decode/prefill-chunk math, so dense and paged
-caches must produce **bitwise-identical** logits for every cache kind —
-full attention, local ring (incl. wraparound), MLA latents, and the
-recurrent dense passthrough — across random prefill chunkings, page sizes
-and decode steps, including writes that straddle page boundaries.
+The ``kernel="gather"`` paged path gathers the exact dense layout from its
+page pools before running the (shared) dense decode/prefill-chunk math, so
+dense and paged caches must produce **bitwise-identical** logits for every
+cache kind — full attention, local ring (incl. wraparound), MLA latents,
+and the recurrent dense passthrough — across random prefill chunkings,
+page sizes and decode steps, including writes that straddle page
+boundaries.  (The fused Pallas kernels are checked against this reference,
+to f32 tolerance, in tests/test_paged_attn_kernel.py.)
 """
 
 import dataclasses
@@ -130,7 +132,8 @@ def _run_parity(arch, page_size, chunk, plens, steps, max_len=32):
                                         live=live)
         lp, cache_p = model.decode_step_paged(
             params, cache_p, tok_p, pos_arr, tbl.asdict(),
-            page_size=page_size, max_len=max_len, live=live)
+            page_size=page_size, max_len=max_len, live=live,
+            kernel="gather")
         assert np.array_equal(np.asarray(ld), np.asarray(lp)), \
             (arch, "decode logits diverge", i, page_size, chunk, plens)
         tok_d = jnp.argmax(ld, -1).astype(jnp.int32)
