@@ -9,10 +9,14 @@ model:
     cache (``slots x max_len`` rows reserved up front),
   * **paged** — the same scheduler over the paged KV cache with chunked
     prefill admission and the **fused Pallas decode kernels** reading the
-    pages in place (bandwidth follows live tokens), and
+    pages in place (bandwidth follows live tokens),
   * **paged-gather** — the paged cache with the dense-view gather
     reference decode (what the engine did before the fused kernels; kept
-    as the kernel baseline).
+    as the kernel baseline), and
+  * **kv-quant** — the paged cache with q8_0-quantized pools
+    (``Engine(kv_quant="q8_0")``): int8 values + per-row f32 scales read
+    in place by the fused q8 kernels — the B/livetok and kvB/tok columns
+    should drop to ~0.27x the f32 paged mode's.
 
 Reported per mode: tokens/s over the full serve call (prefill + decode),
 decode iterations, mean concurrency, mean admission latency, the
@@ -93,6 +97,8 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
             "continuous": dense,
             "paged": Engine(model, p, kernel="fused", **paged_kw),
             "paged-gather": Engine(model, p, kernel="gather", **paged_kw),
+            "kv-quant": Engine(model, p, kernel="fused", kv_quant="q8_0",
+                               **paged_kw),
         }
         results = {}
         for mode, eng in engines.items():
@@ -170,6 +176,21 @@ def gate(results: dict, requests: int = 8) -> list[str]:
                 f"the gather path's "
                 f"{gather.kv_bytes_per_decoded_token:.0f} (live-token "
                 f"scaling lost)")
+        # q8_0 pools: int8 payload + per-row f32 scales must land at or
+        # below 0.30x the f32 pools, in both resident page bytes and
+        # decode read traffic per token
+        kvq = res["kv-quant"]
+        if kvq.page_bytes > 0.30 * pg.page_bytes:
+            failures.append(
+                f"{pol}: q8_0 page holds {kvq.page_bytes} B, above 0.30x "
+                f"the f32 page's {pg.page_bytes} B")
+        if (kvq.kv_bytes_per_decoded_token
+                > 0.30 * pg.kv_bytes_per_decoded_token):
+            failures.append(
+                f"{pol}: q8_0 decode reads "
+                f"{kvq.kv_bytes_per_decoded_token:.0f} KV-B/token, above "
+                f"0.30x the f32 paged mode's "
+                f"{pg.kv_bytes_per_decoded_token:.0f}")
     return failures
 
 
@@ -189,8 +210,9 @@ def main():
                     help="write rows as a JSON artifact")
     ap.add_argument("--gate", action="store_true",
                     help="exit 3 if continuous < sequential throughput, "
-                         "paged > dense bytes/live-token, or fused < "
-                         "gather decode (CI soft gate)")
+                         "paged > dense bytes/live-token, fused < gather "
+                         "decode, or q8_0 kvB/tok > 0.30x the f32 pools "
+                         "(CI soft gate)")
     args = ap.parse_args()
     results: dict = {}
     rows = run(args.requests, args.slots, jit=not args.no_jit,
@@ -209,7 +231,8 @@ def main():
             # other non-zero exit (crash, import error) stays hard-red
             raise SystemExit(3)
         print("perf gate OK: continuous >= sequential, paged <= dense "
-              "bytes/live-token, fused >= gather decode")
+              "bytes/live-token, fused >= gather decode, q8_0 <= 0.30x "
+              "f32 pool bytes")
 
 
 if __name__ == "__main__":

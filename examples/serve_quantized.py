@@ -2,6 +2,11 @@
 
 Trains briefly so generations are non-trivial, quantizes with the paper's
 policy, then serves a batch of requests comparing fp vs quantized outputs.
+A final section serves the same requests over the paged KV cache with
+fp32 pools vs q8_0-quantized pools (``Engine(kv_quant="q8_0")``, or
+``--kv-quant q8_0`` on ``repro.launch.serve``), printing the pool memory
+side by side — weight quantization (the paper's policies) and cache
+quantization compose.
 
   PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -74,6 +79,31 @@ def main():
           "models; the paper-scale criterion is task loss, see tests)")
     print("\nquantized engine stats (continuous batching):")
     print(stats_q.report())
+
+    # -- quantized KV pages: fp32 vs q8_0 pool memory side by side ----------
+    print("\nserving DQ3_K_M weights over the PAGED cache, fp32 vs q8_0 "
+          "KV pools (Engine(kv_quant='q8_0') / serve --kv-quant q8_0):")
+    kv_stats, kv_outs = {}, {}
+    for kv_quant in (None, "q8_0"):
+        eng = Engine(model, qparams, max_len=128, sampler=sampler,
+                     jit=False, page_size=16, prefill_chunk=16,
+                     kv_quant=kv_quant)
+        done = eng.serve(mk_requests(), slots=2)
+        kv_outs[kv_quant] = {r.rid: r.out for r in done}
+        kv_stats[kv_quant] = eng.last_stats
+    f32_s, q8_s = kv_stats[None], kv_stats["q8_0"]
+    print(f"  {'pool':6s} {'B/page':>8s} {'B/live-token':>13s} "
+          f"{'decode kvB/tok':>15s}")
+    for name, s in (("fp32", f32_s), ("q8_0", q8_s)):
+        print(f"  {name:6s} {s.page_bytes:8d} {s.bytes_per_live_token:13.0f} "
+              f"{s.kv_bytes_per_decoded_token:15.0f}")
+    print(f"  q8_0 pools cost {q8_s.page_bytes / f32_s.page_bytes:.2f}x the "
+          f"fp32 pools (int8 payload + per-row scales)")
+    kv_agree = np.mean([a == b
+                        for rid in kv_outs[None]
+                        for a, b in zip(kv_outs[None][rid],
+                                        kv_outs["q8_0"][rid])])
+    print(f"  greedy agreement fp32-vs-q8_0 pools: {kv_agree:.2f}")
 
 
 if __name__ == "__main__":

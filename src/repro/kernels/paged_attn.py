@@ -11,19 +11,24 @@ logical pages all map to the NULL page, so consecutive trailing grid steps
 revisit one resident block instead of streaming fresh memory: decode
 bandwidth scales with *live* pages, not ``slots x max_len``.
 
-Three kernel families share the scaffold:
+Two kernel scaffolds — GQA (:func:`_attn_core`) and absorbed MLA
+(:func:`_mla_core`) — are each parameterized over a K/V *tile loader*
+(plain f32 pages vs int8+per-row-scale pages dequantised on the VPU), so
+one score/mask/online-softmax body serves four public entry points:
 
   * :func:`paged_attn_decode` — GQA/MHA over K/V/pos pools, full horizon or
     sliding window (``window > 0``); the validity mask comes from the
     page's ``pos`` entries, so ring wraparound needs no special casing.
+  * :func:`paged_attn_decode_q8` — the same attention over q8_0 K/V pools
+    (int8 values + one f32 scale per (token, head) row, block =
+    ``head_dim``), the fast path behind ``Engine(kv_quant="q8_0")``:
+    pages stream in packed and dequantisation happens inside the
+    online-softmax loop, cutting decode page traffic ~4x vs f32 pools.
   * :func:`paged_mla_decode` — absorbed MLA over latent/rope pools; scores
     and the output both live in latent space (the ``kv_b`` projection is
     folded in by the caller), validity is positional (``idx <= pos``).
-  * :func:`paged_attn_decode_q8` — q8_0-style quantized K/V pools
-    (int8 values + one f32 scale per (token, head) row, block =
-    ``head_dim``) dequantised on the VPU inside the same online-softmax
-    loop: the stretch building block behind quantized KV pages (ROADMAP),
-    cutting page traffic ~4x vs f32 pools.
+  * :func:`paged_mla_decode_q8` — absorbed MLA over q8_0 latent/rope pools
+    (one scale per (token,) row, block = the latent/rope width).
 
 ``active_pages`` bounds the page loop: the serving engine knows the
 largest live horizon across its lanes each iteration and passes a bucketed
@@ -123,7 +128,7 @@ def _init_accumulators(m_ref, l_ref, acc_ref):
 
 
 # ---------------------------------------------------------------------------
-# GQA / MHA over K/V/pos page pools
+# GQA / MHA over K/V/pos page pools (f32 or q8_0 leaves)
 # ---------------------------------------------------------------------------
 
 def paged_attn_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
@@ -143,26 +148,33 @@ def paged_attn_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     ``window > 0``, ``t > pos - window``.  Returns (B, H, Dv) f32.
     """
     return _attn_core(
-        q, k_pool, v_pool, pos_pool, block_table, pos, window=window,
+        q, (k_pool, v_pool), pos_pool, block_table, pos, window=window,
         softcap=softcap,
         scale=(q.shape[-1] ** -0.5 if scale is None else scale),
         nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
-        interpret=(_interpret_default() if interpret is None else interpret))
+        interpret=(_interpret_default() if interpret is None else interpret),
+        quant=False)
 
 
-def _xla_attn(q, k_pool, v_pool, pos_pool, block_table, pos, *, window,
-              softcap, scale, nj):
-    """Bounded-gather XLA twin: read the first ``nj`` logical pages only,
-    one masked softmax over them (grouped einsum — KV stays in its
-    (Hkv,) layout)."""
+def _gathered_kv(kv: tuple, btj: jax.Array, quant: bool):
+    """Bounded gather of the K/V leaves through ``btj`` logical pages —
+    f32, dequantised in the gathered (page-bounded) layout when ``quant``
+    so only the live pages are ever expanded."""
+    if quant:
+        kq, kd, vq, vd = kv
+        k = kq[btj].astype(jnp.float32) * kd[btj].astype(jnp.float32)[..., None]
+        v = vq[btj].astype(jnp.float32) * vd[btj].astype(jnp.float32)[..., None]
+    else:
+        k, v = (x[btj].astype(jnp.float32) for x in kv)
+    return k, v
+
+
+def _xla_attn(q, ks, vs, ps, pos, *, window, softcap, scale):
+    """Bounded-gather XLA twin: one masked softmax over the gathered pages
+    (grouped einsum — KV stays in its (Hkv,) layout)."""
     b, h, d = q.shape
-    tp, hkv = k_pool.shape[1], k_pool.shape[2]
-    dv = v_pool.shape[-1]
+    hkv, dv = ks.shape[2], vs.shape[-1]
     rep = h // hkv
-    btj = block_table[:, :nj]
-    ks = k_pool[btj].reshape(b, nj * tp, hkv, d).astype(jnp.float32)
-    vs = v_pool[btj].reshape(b, nj * tp, hkv, dv).astype(jnp.float32)
-    ps = pos_pool[btj].reshape(b, nj * tp)
     qg = (q.astype(jnp.float32) * scale).reshape(b, hkv, rep, d)
     s = jnp.einsum("bkrd,blkd->bkrl", qg, ks,
                    preferred_element_type=jnp.float32)
@@ -179,24 +191,44 @@ def _xla_attn(q, k_pool, v_pool, pos_pool, block_table, pos, *, window,
 
 
 @partial(jax.jit, static_argnames=("window", "softcap", "scale", "nj",
-                                   "impl", "interpret"))
-def _attn_core(q, k_pool, v_pool, pos_pool, block_table, pos, *,
+                                   "impl", "interpret", "quant"))
+def _attn_core(q, kv, pos_pool, block_table, pos, *,
                window: int, softcap: float, scale: float, nj: int,
-               impl: str, interpret: bool) -> jax.Array:
-    if impl == "xla":
-        return _xla_attn(q, k_pool, v_pool, pos_pool, block_table, pos,
-                         window=window, softcap=softcap, scale=scale, nj=nj)
+               impl: str, interpret: bool, quant: bool) -> jax.Array:
+    """Shared GQA flash-decode scaffold.  ``kv`` is ``(k_pool, v_pool)``
+    (``quant=False``) or ``(k_qs, k_d, v_qs, v_d)`` (``quant=True``); the
+    score/mask/online-softmax body is identical — only the page tile
+    loader changes (f32 load vs int8 * per-row scale on the VPU)."""
     b, h, d = q.shape
-    tp, hkv = k_pool.shape[1], k_pool.shape[2]
-    dv = v_pool.shape[-1]
+    tp, hkv = kv[0].shape[1], kv[0].shape[2]
+    dv = (kv[2] if quant else kv[1]).shape[-1]
     rep = h // hkv
+    if impl == "xla":
+        btj = block_table[:, :nj]
+        ks, vs = _gathered_kv(kv, btj, quant)
+        return _xla_attn(
+            q, ks.reshape(b, nj * tp, hkv, d), vs.reshape(b, nj * tp, hkv, dv),
+            pos_pool[btj].reshape(b, nj * tp), pos,
+            window=window, softcap=softcap, scale=scale)
 
-    def kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, pp_ref, o_ref,
-               m_ref, l_ref, acc_ref):
+    def kernel(bt_ref, pos_ref, q_ref, *refs):
         del bt_ref
+        *kv_refs, pp_ref, o_ref, m_ref, l_ref, acc_ref = refs
         _init_accumulators(m_ref, l_ref, acc_ref)
+        if quant:
+            kq_ref, kd_ref, vq_ref, vd_ref = kv_refs
+            kt = kq_ref[0].astype(jnp.float32) * kd_ref[0][..., None]
+
+            def v_pages():
+                return vq_ref[0].astype(jnp.float32) * vd_ref[0][..., None]
+        else:
+            k_ref, v_ref = kv_refs
+            kt = k_ref[0].astype(jnp.float32)                # (P, Hkv, D)
+
+            def v_pages():
+                return v_ref[0].astype(jnp.float32)
+
         qv = q_ref[0].astype(jnp.float32) * scale            # (H, D)
-        kt = k_ref[0].astype(jnp.float32)                    # (P, Hkv, D)
         q2 = qv.reshape(hkv, rep, d)
         s = jax.lax.dot_general(                             # (Hkv, rep, P)
             q2, kt, (((2,), (2,)), ((0,), (1,))),
@@ -213,22 +245,32 @@ def _attn_core(q, k_pool, v_pool, pos_pool, block_table, pos, *,
         def v_tile(p):
             p3 = p.reshape(hkv, rep, tp)
             return jax.lax.dot_general(                      # (Hkv, rep, Dv)
-                p3, v_ref[0].astype(jnp.float32),
-                (((2,), (0,)), ((0,), (1,))),
+                p3, v_pages(), (((2,), (0,)), ((0,), (1,))),
                 preferred_element_type=jnp.float32).reshape(h, dv)
 
         _online_update(s, valid, v_tile, m_ref, l_ref, acc_ref)
         _finish(o_ref, acc_ref, l_ref, nj)
 
+    page4 = lambda i, j, bt, ps: (bt[i, j], 0, 0, 0)  # noqa: E731
+    page3 = lambda i, j, bt, ps: (bt[i, j], 0, 0)     # noqa: E731
+    if quant:
+        kv_specs = [
+            pl.BlockSpec((1, tp, hkv, d), page4),
+            pl.BlockSpec((1, tp, hkv), page3),
+            pl.BlockSpec((1, tp, hkv, dv), page4),
+            pl.BlockSpec((1, tp, hkv), page3),
+        ]
+    else:
+        kv_specs = [
+            pl.BlockSpec((1, tp, hkv, d), page4),
+            pl.BlockSpec((1, tp, hkv, dv), page4),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, nj),
         in_specs=[
             pl.BlockSpec((1, h, d), lambda i, j, bt, ps: (i, 0, 0)),
-            pl.BlockSpec((1, tp, hkv, d),
-                         lambda i, j, bt, ps: (bt[i, j], 0, 0, 0)),
-            pl.BlockSpec((1, tp, hkv, dv),
-                         lambda i, j, bt, ps: (bt[i, j], 0, 0, 0)),
+            *kv_specs,
             pl.BlockSpec((1, tp), lambda i, j, bt, ps: (bt[i, j], 0)),
         ],
         out_specs=pl.BlockSpec((1, h, dv), lambda i, j, bt, ps: (i, 0, 0)),
@@ -243,7 +285,7 @@ def _attn_core(q, k_pool, v_pool, pos_pool, block_table, pos, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, dv), jnp.float32),
         interpret=interpret,
-    )(block_table, pos, q, k_pool, v_pool, pos_pool)
+    )(block_table, pos, q, *kv, pos_pool)
 
 
 # ---------------------------------------------------------------------------
@@ -266,47 +308,77 @@ def paged_mla_decode(q_eff: jax.Array, q_rope: jax.Array,
     attended latents (B, H, R) f32 — the caller projects out with ``w_vb``.
     """
     return _mla_core(
-        q_eff, q_rope, ckv_pool, krope_pool, block_table, pos, scale=scale,
+        q_eff, q_rope, (ckv_pool, krope_pool), block_table, pos, scale=scale,
         nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
-        interpret=(_interpret_default() if interpret is None else interpret))
+        interpret=(_interpret_default() if interpret is None else interpret),
+        quant=False)
 
 
-def _xla_mla(q_eff, q_rope, ckv_pool, krope_pool, block_table, pos, *,
-             scale, nj):
-    """Bounded-gather XLA twin of the MLA kernel."""
-    b, h, r = q_eff.shape
-    tp = ckv_pool.shape[1]
-    btj = block_table[:, :nj]
-    cs = ckv_pool[btj].reshape(b, nj * tp, r).astype(jnp.float32)
-    ks = krope_pool[btj].reshape(b, nj * tp, -1).astype(jnp.float32)
+def paged_mla_decode_q8(q_eff: jax.Array, q_rope: jax.Array,
+                        ckv_qs: jax.Array, ckv_d: jax.Array,
+                        kr_qs: jax.Array, kr_d: jax.Array,
+                        block_table: jax.Array, pos: jax.Array, *,
+                        scale: float, active_pages: int | None = None,
+                        impl: str | None = None,
+                        interpret: bool | None = None) -> jax.Array:
+    """:func:`paged_mla_decode` over q8_0 latent/rope pools.
+
+    ``ckv_qs``/``kr_qs``: int8 value pools (num_pages, P, R[dr]);
+    ``ckv_d``/``kr_d``: per-(page, token) f32 scales (num_pages, P) —
+    block = the latent/rope width.  Dequantisation happens inside the
+    online-softmax loop; numerically exact w.r.t. attending the
+    dequantised pools.
+    """
+    return _mla_core(
+        q_eff, q_rope, (ckv_qs, ckv_d, kr_qs, kr_d), block_table, pos,
+        scale=scale, nj=_n_active(block_table, active_pages),
+        impl=_resolve_impl(impl),
+        interpret=(_interpret_default() if interpret is None else interpret),
+        quant=True)
+
+
+def _xla_mla(q_eff, q_rope, cs, ks, pos, *, scale):
+    """Bounded-gather XLA twin of the MLA kernel, over gathered latents."""
     s = (jnp.einsum("bhr,blr->bhl", q_eff.astype(jnp.float32), cs,
                     preferred_element_type=jnp.float32)
          + jnp.einsum("bhd,bld->bhl", q_rope.astype(jnp.float32), ks,
                       preferred_element_type=jnp.float32)) * scale
-    valid = jnp.arange(nj * tp)[None, :] <= pos[:, None]
+    valid = jnp.arange(cs.shape[1])[None, :] <= pos[:, None]
     s = jnp.where(valid[:, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhl,blr->bhr", w, cs,
                       preferred_element_type=jnp.float32)
 
 
-@partial(jax.jit, static_argnames=("scale", "nj", "impl", "interpret"))
-def _mla_core(q_eff, q_rope, ckv_pool, krope_pool, block_table, pos, *,
-              scale: float, nj: int, impl: str,
-              interpret: bool) -> jax.Array:
-    if impl == "xla":
-        return _xla_mla(q_eff, q_rope, ckv_pool, krope_pool, block_table,
-                        pos, scale=scale, nj=nj)
+@partial(jax.jit, static_argnames=("scale", "nj", "impl", "interpret",
+                                   "quant"))
+def _mla_core(q_eff, q_rope, kv, block_table, pos, *,
+              scale: float, nj: int, impl: str, interpret: bool,
+              quant: bool) -> jax.Array:
+    """Shared absorbed-MLA scaffold; ``kv`` is ``(ckv_pool, krope_pool)``
+    or the q8_0 quadruple ``(ckv_qs, ckv_d, kr_qs, kr_d)`` (see
+    :func:`_attn_core` for the tile-loader pattern)."""
     b, h, r = q_eff.shape
     dr = q_rope.shape[-1]
-    tp = ckv_pool.shape[1]
+    tp = kv[0].shape[1]
+    if impl == "xla":
+        btj = block_table[:, :nj]
+        cs, ks = _gathered_kv(kv, btj, quant)
+        return _xla_mla(q_eff, q_rope, cs.reshape(b, nj * tp, r),
+                        ks.reshape(b, nj * tp, dr), pos, scale=scale)
 
-    def kernel(bt_ref, pos_ref, qe_ref, qr_ref, ckv_ref, kr_ref, o_ref,
-               m_ref, l_ref, acc_ref):
+    def kernel(bt_ref, pos_ref, qe_ref, qr_ref, *refs):
         del bt_ref
+        *kv_refs, o_ref, m_ref, l_ref, acc_ref = refs
         _init_accumulators(m_ref, l_ref, acc_ref)
-        ckv = ckv_ref[0].astype(jnp.float32)                 # (P, R)
-        krope = kr_ref[0].astype(jnp.float32)                # (P, Dr)
+        if quant:
+            cq_ref, cd_ref, kq_ref, kd_ref = kv_refs
+            ckv = cq_ref[0].astype(jnp.float32) * cd_ref[0][..., None]
+            krope = kq_ref[0].astype(jnp.float32) * kd_ref[0][..., None]
+        else:
+            ckv_ref, kr_ref = kv_refs
+            ckv = ckv_ref[0].astype(jnp.float32)             # (P, R)
+            krope = kr_ref[0].astype(jnp.float32)            # (P, Dr)
         s = (jnp.dot(qe_ref[0].astype(jnp.float32), ckv.T,
                      preferred_element_type=jnp.float32)
              + jnp.dot(qr_ref[0].astype(jnp.float32), krope.T,
@@ -320,14 +392,27 @@ def _mla_core(q_eff, q_rope, ckv_pool, krope_pool, block_table, pos, *,
             m_ref, l_ref, acc_ref)
         _finish(o_ref, acc_ref, l_ref, nj)
 
+    page3 = lambda i, j, bt, ps: (bt[i, j], 0, 0)  # noqa: E731
+    page2 = lambda i, j, bt, ps: (bt[i, j], 0)     # noqa: E731
+    if quant:
+        kv_specs = [
+            pl.BlockSpec((1, tp, r), page3),
+            pl.BlockSpec((1, tp), page2),
+            pl.BlockSpec((1, tp, dr), page3),
+            pl.BlockSpec((1, tp), page2),
+        ]
+    else:
+        kv_specs = [
+            pl.BlockSpec((1, tp, r), page3),
+            pl.BlockSpec((1, tp, dr), page3),
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, nj),
         in_specs=[
             pl.BlockSpec((1, h, r), lambda i, j, bt, ps: (i, 0, 0)),
             pl.BlockSpec((1, h, dr), lambda i, j, bt, ps: (i, 0, 0)),
-            pl.BlockSpec((1, tp, r), lambda i, j, bt, ps: (bt[i, j], 0, 0)),
-            pl.BlockSpec((1, tp, dr), lambda i, j, bt, ps: (bt[i, j], 0, 0)),
+            *kv_specs,
         ],
         out_specs=pl.BlockSpec((1, h, r), lambda i, j, bt, ps: (i, 0, 0)),
         scratch_shapes=[
@@ -341,20 +426,25 @@ def _mla_core(q_eff, q_rope, ckv_pool, krope_pool, block_table, pos, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
         interpret=interpret,
-    )(block_table, pos, q_eff, q_rope, ckv_pool, krope_pool)
+    )(block_table, pos, q_eff, q_rope, *kv)
 
 
 # ---------------------------------------------------------------------------
-# q8_0 quantized K/V page pools (stretch: quantized KV pages)
+# q8_0 quantized K/V page pools (Engine(kv_quant="q8_0"))
 # ---------------------------------------------------------------------------
 
 def quantize_kv_page_pool(pool: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """q8_0-style quantization of a K or V page pool, block = head_dim.
+    """q8_0-style per-row quantization over the trailing axis.
 
-    pool: (num_pages, P, Hkv, D) float -> (qs int8 same shape,
-    d (num_pages, P, Hkv) f32) with ``x ~ qs * d``, ``d = max|x| / 127``
-    per (page, token, head) row — the layout a quantized-KV-pages cache
-    would store (~4x less page traffic than f32 pools).
+    pool: (..., D) float -> (qs int8 same shape, d (...) f32) with
+    ``x ~ qs * d``, ``d = max|x| / 127`` per row.  For K/V page pools
+    (num_pages, P, Hkv, D) the block is ``head_dim`` (one scale per
+    (page, token, head) row); for MLA latent pools (num_pages, P, R) the
+    block is the latent width (one scale per token row) — exactly the
+    layout the quantized cache leaves store (~4x less page traffic than
+    f32 pools).  models/paged.py quantizes new rows with this same
+    function on write, and tests/test_kv_quant.py pins it bitwise against
+    the numpy oracle.
     """
     x = pool.astype(jnp.float32)
     d = jnp.max(jnp.abs(x), axis=-1) / 127.0
@@ -379,92 +469,10 @@ def paged_attn_decode_q8(q: jax.Array, k_qs: jax.Array, k_d: jax.Array,
     HBM traffic per page is ~1/4 of the f32 pools'.  Numerically exact
     w.r.t. attending the dequantised pools.
     """
-    return _attn_q8_core(
-        q, k_qs, k_d, v_qs, v_d, pos_pool, block_table, pos, window=window,
-        softcap=softcap,
+    return _attn_core(
+        q, (k_qs, k_d, v_qs, v_d), pos_pool, block_table, pos,
+        window=window, softcap=softcap,
         scale=(q.shape[-1] ** -0.5 if scale is None else scale),
         nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
-        interpret=(_interpret_default() if interpret is None else interpret))
-
-
-@partial(jax.jit, static_argnames=("window", "softcap", "scale", "nj",
-                                   "impl", "interpret"))
-def _attn_q8_core(q, k_qs, k_d, v_qs, v_d, pos_pool, block_table, pos, *,
-                  window: int, softcap: float, scale: float, nj: int,
-                  impl: str, interpret: bool) -> jax.Array:
-    b, h, d = q.shape
-    tp, hkv = k_qs.shape[1], k_qs.shape[2]
-    dv = v_qs.shape[-1]
-    rep = h // hkv
-    if impl == "xla":
-        btj = block_table[:, :nj]
-        kf = (k_qs[btj].astype(jnp.float32)
-              * k_d[btj].astype(jnp.float32)[..., None])
-        vf = (v_qs[btj].astype(jnp.float32)
-              * v_d[btj].astype(jnp.float32)[..., None])
-        # reuse the bounded-gather twin on pre-dequantised *gathered* pages
-        # (gather first so only nj pages are ever dequantised)
-        return _xla_attn(
-            q, kf.reshape(b * nj, tp, hkv, d), vf.reshape(b * nj, tp, hkv,
-                                                          dv),
-            pos_pool[btj].reshape(b * nj, tp),
-            jnp.arange(b * nj, dtype=jnp.int32).reshape(b, nj), pos,
-            window=window, softcap=softcap, scale=scale, nj=nj)
-
-    def kernel(bt_ref, pos_ref, q_ref, kq_ref, kd_ref, vq_ref, vd_ref,
-               pp_ref, o_ref, m_ref, l_ref, acc_ref):
-        del bt_ref
-        _init_accumulators(m_ref, l_ref, acc_ref)
-        qv = q_ref[0].astype(jnp.float32) * scale
-        kt = kq_ref[0].astype(jnp.float32) * kd_ref[0][..., None]
-        q2 = qv.reshape(hkv, rep, d)
-        s = jax.lax.dot_general(
-            q2, kt, (((2,), (2,)), ((0,), (1,))),
-            preferred_element_type=jnp.float32).reshape(h, tp)
-        if softcap:
-            s = softcap * jnp.tanh(s / softcap)
-        pt = pp_ref[0]
-        pb = pos_ref[pl.program_id(0)]
-        valid = (pt >= 0) & (pt <= pb)
-        if window:
-            valid &= pt > pb - window
-        s = jnp.where(valid[None, :], s, NEG_INF)
-
-        def v_tile(p):
-            vt = vq_ref[0].astype(jnp.float32) * vd_ref[0][..., None]
-            p3 = p.reshape(hkv, rep, tp)
-            return jax.lax.dot_general(
-                p3, vt, (((2,), (0,)), ((0,), (1,))),
-                preferred_element_type=jnp.float32).reshape(h, dv)
-
-        _online_update(s, valid, v_tile, m_ref, l_ref, acc_ref)
-        _finish(o_ref, acc_ref, l_ref, nj)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(b, nj),
-        in_specs=[
-            pl.BlockSpec((1, h, d), lambda i, j, bt, ps: (i, 0, 0)),
-            pl.BlockSpec((1, tp, hkv, d),
-                         lambda i, j, bt, ps: (bt[i, j], 0, 0, 0)),
-            pl.BlockSpec((1, tp, hkv),
-                         lambda i, j, bt, ps: (bt[i, j], 0, 0)),
-            pl.BlockSpec((1, tp, hkv, dv),
-                         lambda i, j, bt, ps: (bt[i, j], 0, 0, 0)),
-            pl.BlockSpec((1, tp, hkv),
-                         lambda i, j, bt, ps: (bt[i, j], 0, 0)),
-            pl.BlockSpec((1, tp), lambda i, j, bt, ps: (bt[i, j], 0)),
-        ],
-        out_specs=pl.BlockSpec((1, h, dv), lambda i, j, bt, ps: (i, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((h, _LANES), jnp.float32),
-            pltpu.VMEM((h, _LANES), jnp.float32),
-            pltpu.VMEM((h, dv), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, dv), jnp.float32),
-        interpret=interpret,
-    )(block_table, pos, q, k_qs, k_d, v_qs, v_d, pos_pool)
+        interpret=(_interpret_default() if interpret is None else interpret),
+        quant=True)

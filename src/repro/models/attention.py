@@ -216,23 +216,52 @@ def cache_len(cfg: ModelConfig, max_len: int, local: bool) -> int:
 
 
 def init_paged_attn_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                          dtype=jnp.bfloat16) -> dict:
-    """Paged K/V/pos pools shared by every slot (see models/paged.py)."""
+                          dtype=jnp.bfloat16, kv_quant: str | None = None
+                          ) -> dict:
+    """Paged K/V/pos pools shared by every slot (see models/paged.py).
+
+    ``kv_quant="q8_0"`` stores K/V as int8 pools plus per-(token, head)
+    f32 scale pools — ~4x less cache memory and decode page traffic; the
+    ``pos`` pool is shared by both layouts.
+    """
     nkv, hd = cfg.n_kv_heads, cfg.head_dim
+    pos = jnp.full((num_pages, page_size), -1, jnp.int32)
+    if paged.check_kv_quant(kv_quant):
+        return {
+            "k_qs": jnp.zeros((num_pages, page_size, nkv, hd), jnp.int8),
+            "k_d": jnp.zeros((num_pages, page_size, nkv), jnp.float32),
+            "v_qs": jnp.zeros((num_pages, page_size, nkv, hd), jnp.int8),
+            "v_d": jnp.zeros((num_pages, page_size, nkv), jnp.float32),
+            "pos": pos,
+        }
     return {
         "k": jnp.zeros((num_pages, page_size, nkv, hd), dtype),
         "v": jnp.zeros((num_pages, page_size, nkv, hd), dtype),
-        "pos": jnp.full((num_pages, page_size), -1, jnp.int32),
+        "pos": pos,
     }
 
 
 def paged_attn_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
-                           dtype=jnp.bfloat16) -> dict:
+                           dtype=jnp.bfloat16, kv_quant: str | None = None
+                           ) -> dict:
     nkv, hd = cfg.n_kv_heads, cfg.head_dim
+    pos = jax.ShapeDtypeStruct((num_pages, page_size), jnp.int32)
+    if paged.check_kv_quant(kv_quant):
+        return {
+            "k_qs": jax.ShapeDtypeStruct((num_pages, page_size, nkv, hd),
+                                         jnp.int8),
+            "k_d": jax.ShapeDtypeStruct((num_pages, page_size, nkv),
+                                        jnp.float32),
+            "v_qs": jax.ShapeDtypeStruct((num_pages, page_size, nkv, hd),
+                                         jnp.int8),
+            "v_d": jax.ShapeDtypeStruct((num_pages, page_size, nkv),
+                                        jnp.float32),
+            "pos": pos,
+        }
     return {
         "k": jax.ShapeDtypeStruct((num_pages, page_size, nkv, hd), dtype),
         "v": jax.ShapeDtypeStruct((num_pages, page_size, nkv, hd), dtype),
-        "pos": jax.ShapeDtypeStruct((num_pages, page_size), jnp.int32),
+        "pos": pos,
     }
 
 
@@ -241,6 +270,7 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                       max_len: int, live: jax.Array | None = None,
                       kernel: str | None = None,
                       active_pages: int | None = None,
+                      kv_quant: str | None = None,
                       ) -> tuple[jax.Array, dict]:
     """One-token decode against a paged cache.
 
@@ -256,11 +286,19 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
         view, run the unchanged dense :func:`attn_decode` on it
         (bitwise-identical logits to the contiguous layout), scatter the
         newly written row back.
+
+    ``kv_quant="q8_0"`` expects the quantized pool layout of
+    :func:`init_paged_attn_cache`: the new K/V row is quantized *before*
+    the write, so both kernels attend the same round-tripped values — the
+    fused path dequantizes page tiles in the kernel, the gather reference
+    dequantizes the gathered dense view.
     """
     kernel = kernel or default_paged_kernel()
+    if kernel not in ("fused", "gather"):
+        raise ValueError(f"unknown paged decode kernel {kernel!r}")
     length = cache_len(cfg, max_len, local)
     b = x.shape[0]
-    if kernel == "gather":
+    if kernel == "gather" and not kv_quant:
         dense = {k: paged.gather_pages(cache[k], block_table, length)
                  for k in ("k", "v", "pos")}
         delta, dnew = attn_decode(p, cfg, x, dense, pos, local=local,
@@ -271,12 +309,36 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                                         dnew[key][bidx, slot], ok=live)
                for key in ("k", "v", "pos")}
         return delta, new
-    if kernel != "fused":
-        raise ValueError(f"unknown paged decode kernel {kernel!r}")
 
     h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
     q, k, v = _qkv(p, cfg, h, pos[:, None])
     slot = (pos % length).astype(jnp.int32)
+    if kv_quant:
+        kq, kd = paged.scatter_token_q8(cache["k_qs"], cache["k_d"],
+                                        block_table, slot, k[:, 0], ok=live)
+        vq, vd = paged.scatter_token_q8(cache["v_qs"], cache["v_d"],
+                                        block_table, slot, v[:, 0], ok=live)
+        new = {
+            "k_qs": kq, "k_d": kd, "v_qs": vq, "v_d": vd,
+            "pos": paged.scatter_token(cache["pos"], block_table, slot,
+                                       pos.astype(jnp.int32), ok=live),
+        }
+        if kernel == "gather":
+            # dequantizing gather reference: attend the dense view of the
+            # *updated* pools so the round-tripped new row matches fused
+            ck = paged.gather_pages_q8(kq, kd, block_table, length)
+            cv = paged.gather_pages_q8(vq, vd, block_table, length)
+            cpos = paged.gather_pages(new["pos"], block_table, length)
+            o = _attend_cache(cfg, q, ck, cv, cpos, pos,
+                              local=local).astype(x.dtype)
+            return linear(p["o_proj"], o), new
+        o = paged_attn.paged_attn_decode_q8(
+            q[:, 0], kq, kd, vq, vd, new["pos"], block_table, pos,
+            window=(cfg.window if local else 0), softcap=cfg.attn_softcap,
+            scale=cfg.head_dim ** -0.5, active_pages=active_pages)
+        o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+        return linear(p["o_proj"], o), new
+
     new = {
         "k": paged.scatter_token(cache["k"], block_table, slot, k[:, 0],
                                  ok=live),
@@ -334,6 +396,7 @@ def attn_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                        positions: jax.Array, start: jax.Array,
                        chunk_len: jax.Array, *, local: bool, max_len: int,
                        block_table: jax.Array | None = None,
+                       kv_quant: str | None = None,
                        ) -> tuple[jax.Array, dict]:
     """One prefill chunk against an existing (pooled) cache.
 
@@ -344,14 +407,25 @@ def attn_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     with ``cpos < start``, which also masks stale entries left by a
     previous occupant of the slot) plus the causal prefix of the chunk
     itself.  Works on a dense pooled cache, or a paged one when
-    ``block_table`` is given.
+    ``block_table`` is given; with ``kv_quant`` the paged pools are
+    quantized — earlier chunks are read through a dequantizing gather and
+    this chunk's K/V are quantized on write (the chunk's own keys attend
+    raw within the chunk; every later read sees the round-tripped
+    values).
     """
     b, c, _ = x.shape
     length = cache_len(cfg, max_len, local)
     h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
     q, k, v = _qkv(p, cfg, h, positions)
 
-    if block_table is not None:
+    if kv_quant:
+        assert block_table is not None, "kv_quant requires paged caches"
+        ck = paged.gather_pages_q8(cache["k_qs"], cache["k_d"], block_table,
+                                   length)
+        cv = paged.gather_pages_q8(cache["v_qs"], cache["v_d"], block_table,
+                                   length)
+        cpos = paged.gather_pages(cache["pos"], block_table, length)
+    elif block_table is not None:
         ck = paged.gather_pages(cache["k"], block_table, length)
         cv = paged.gather_pages(cache["v"], block_table, length)
         cpos = paged.gather_pages(cache["pos"], block_table, length)
@@ -375,7 +449,17 @@ def attn_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     idx = (positions % length).astype(jnp.int32)
     ok = paged.chunk_write_plan(idx, valid_tok, length)
     wpos = positions.astype(jnp.int32)
-    if block_table is not None:
+    if kv_quant:
+        kq, kd = paged.scatter_chunk_q8(cache["k_qs"], cache["k_d"],
+                                        block_table, idx, k, ok)
+        vq, vd = paged.scatter_chunk_q8(cache["v_qs"], cache["v_d"],
+                                        block_table, idx, v, ok)
+        new = {
+            "k_qs": kq, "k_d": kd, "v_qs": vq, "v_d": vd,
+            "pos": paged.scatter_chunk(cache["pos"], block_table, idx,
+                                       wpos, ok),
+        }
+    elif block_table is not None:
         new = {
             "k": paged.scatter_chunk(cache["k"], block_table, idx, k, ok),
             "v": paged.scatter_chunk(cache["v"], block_table, idx, v, ok),
@@ -393,29 +477,15 @@ def attn_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     return out, new
 
 
-def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
-                pos: jax.Array, *, local: bool,
-                live: jax.Array | None = None) -> tuple[jax.Array, dict]:
-    """One-token decode.  x: (B, 1, D); pos: (B,) absolute position.
-
-    ``live`` (B,) bool: rows flagged False (free / mid-prefill lanes in a
-    batched serve step) drop their cache write, so throwaway decode rows
-    can never corrupt a lane whose prompt is still streaming in.
-    """
-    b = x.shape[0]
-    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
-    q, k, v = _qkv(p, cfg, h, pos[:, None])
-    length = cache["k"].shape[1]
-    slot = (pos % length).astype(jnp.int32)
-    wslot = slot if live is None else jnp.where(live, slot, length)
-    bidx = jnp.arange(b)
-    ck = cache["k"].at[bidx, wslot].set(k[:, 0].astype(cache["k"].dtype),
-                                        mode="drop")
-    cv = cache["v"].at[bidx, wslot].set(v[:, 0].astype(cache["v"].dtype),
-                                        mode="drop")
-    cpos = cache["pos"].at[bidx, wslot].set(pos.astype(jnp.int32),
-                                            mode="drop")
-
+def _attend_cache(cfg: ModelConfig, q: jax.Array, ck: jax.Array,
+                  cv: jax.Array, cpos: jax.Array, pos: jax.Array, *,
+                  local: bool) -> jax.Array:
+    """One rotated query row against a dense cache view — the masked
+    softmax read path shared by :func:`attn_decode` and the quantized
+    gather reference.  q: (B, 1, H, D); ck/cv: (B, L, Hkv, D); cpos:
+    (B, L); returns (B, 1, H*D) attended output (pre-``o_proj``, f32
+    accumulated)."""
+    b = q.shape[0]
     rep = cfg.n_heads // cfg.n_kv_heads
     scale = cfg.head_dim ** -0.5
     valid = (cpos >= 0) & (cpos <= pos[:, None])
@@ -441,6 +511,31 @@ def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
         s = jnp.where(valid[:, None, :], s, NEG_INF)
         w = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bhl,blhd->bhd", w, vv)
-    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    return o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+
+
+def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                pos: jax.Array, *, local: bool,
+                live: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """One-token decode.  x: (B, 1, D); pos: (B,) absolute position.
+
+    ``live`` (B,) bool: rows flagged False (free / mid-prefill lanes in a
+    batched serve step) drop their cache write, so throwaway decode rows
+    can never corrupt a lane whose prompt is still streaming in.
+    """
+    b = x.shape[0]
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, h, pos[:, None])
+    length = cache["k"].shape[1]
+    slot = (pos % length).astype(jnp.int32)
+    wslot = slot if live is None else jnp.where(live, slot, length)
+    bidx = jnp.arange(b)
+    ck = cache["k"].at[bidx, wslot].set(k[:, 0].astype(cache["k"].dtype),
+                                        mode="drop")
+    cv = cache["v"].at[bidx, wslot].set(v[:, 0].astype(cache["v"].dtype),
+                                        mode="drop")
+    cpos = cache["pos"].at[bidx, wslot].set(pos.astype(jnp.int32),
+                                            mode="drop")
+    o = _attend_cache(cfg, q, ck, cv, cpos, pos, local=local).astype(x.dtype)
     out = linear(p["o_proj"], o)
     return out, {"k": ck, "v": cv, "pos": cpos}

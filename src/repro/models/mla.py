@@ -109,10 +109,22 @@ def mla_prefill(p: dict, cfg: ModelConfig, x: jax.Array,
 
 
 def init_paged_mla_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                         dtype=jnp.bfloat16) -> dict:
+                         dtype=jnp.bfloat16, kv_quant: str | None = None
+                         ) -> dict:
     """Paged latent pools; validity is positional (idx <= pos), so no pos
     pool is needed — unallocated logical pages gather NULL_PAGE zeros that
-    the mask never attends."""
+    the mask never attends.  ``kv_quant="q8_0"``: int8 latent/rope pools
+    plus one f32 scale per (page, token) row (block = the latent/rope
+    width); NULL-page zeros dequantize to the same never-written zeros."""
+    if paged.check_kv_quant(kv_quant):
+        return {
+            "c_kv_qs": jnp.zeros((num_pages, page_size, cfg.kv_lora_rank),
+                                 jnp.int8),
+            "c_kv_d": jnp.zeros((num_pages, page_size), jnp.float32),
+            "k_rope_qs": jnp.zeros(
+                (num_pages, page_size, cfg.qk_rope_head_dim), jnp.int8),
+            "k_rope_d": jnp.zeros((num_pages, page_size), jnp.float32),
+        }
     return {
         "c_kv": jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), dtype),
         "k_rope": jnp.zeros((num_pages, page_size, cfg.qk_rope_head_dim),
@@ -121,7 +133,19 @@ def init_paged_mla_cache(cfg: ModelConfig, num_pages: int, page_size: int,
 
 
 def paged_mla_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
-                          dtype=jnp.bfloat16) -> dict:
+                          dtype=jnp.bfloat16, kv_quant: str | None = None
+                          ) -> dict:
+    if paged.check_kv_quant(kv_quant):
+        return {
+            "c_kv_qs": jax.ShapeDtypeStruct(
+                (num_pages, page_size, cfg.kv_lora_rank), jnp.int8),
+            "c_kv_d": jax.ShapeDtypeStruct((num_pages, page_size),
+                                           jnp.float32),
+            "k_rope_qs": jax.ShapeDtypeStruct(
+                (num_pages, page_size, cfg.qk_rope_head_dim), jnp.int8),
+            "k_rope_d": jax.ShapeDtypeStruct((num_pages, page_size),
+                                             jnp.float32),
+        }
     return {
         "c_kv": jax.ShapeDtypeStruct(
             (num_pages, page_size, cfg.kv_lora_rank), dtype),
@@ -135,6 +159,7 @@ def mla_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                      max_len: int, live: jax.Array | None = None,
                      kernel: str | None = None,
                      active_pages: int | None = None,
+                     kv_quant: str | None = None,
                      ) -> tuple[jax.Array, dict]:
     """Absorbed decode against paged latents.
 
@@ -144,9 +169,17 @@ def mla_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     absorbed ``kv_b`` projections are applied outside the kernel.
     ``kernel="gather"`` is the reference: gather the exact dense view, run
     the unchanged :func:`mla_decode`, scatter the new row back.
+
+    ``kv_quant="q8_0"`` expects the quantized pool layout of
+    :func:`init_paged_mla_cache`: the new latent/rope row is quantized
+    before the write, so fused (in-kernel dequant) and gather
+    (dequantizing gather + :func:`_absorbed_attend`) see the same
+    round-tripped values.
     """
     kernel = kernel or default_paged_kernel()
-    if kernel == "gather":
+    if kernel not in ("fused", "gather"):
+        raise ValueError(f"unknown paged decode kernel {kernel!r}")
+    if kernel == "gather" and not kv_quant:
         dense = {k: paged.gather_pages(cache[k], block_table, max_len)
                  for k in ("c_kv", "k_rope")}
         delta, dnew = mla_decode(p, cfg, x, dense, pos, live=live)
@@ -155,8 +188,6 @@ def mla_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                                       dnew[k][bidx, pos], ok=live)
                for k in ("c_kv", "k_rope")}
         return delta, new
-    if kernel != "fused":
-        raise ValueError(f"unknown paged decode kernel {kernel!r}")
 
     b = x.shape[0]
     nh = cfg.n_heads
@@ -166,21 +197,44 @@ def mla_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     q_nope, q_rope = _project_q(p, cfg, h, pos[:, None])      # (B,1,H,*)
     c_new, kr_new = _latents(p, cfg, h, pos[:, None])         # (B,1,rank)
     idx = pos.astype(jnp.int32)
-    new = {
-        "c_kv": paged.scatter_token(cache["c_kv"], block_table, idx,
-                                    c_new[:, 0], ok=live),
-        "k_rope": paged.scatter_token(cache["k_rope"], block_table, idx,
-                                      kr_new[:, 0], ok=live),
-    }
+    if kv_quant:
+        cq, cd = paged.scatter_token_q8(cache["c_kv_qs"], cache["c_kv_d"],
+                                        block_table, idx, c_new[:, 0],
+                                        ok=live)
+        kq, kd = paged.scatter_token_q8(cache["k_rope_qs"],
+                                        cache["k_rope_d"], block_table, idx,
+                                        kr_new[:, 0], ok=live)
+        new = {"c_kv_qs": cq, "c_kv_d": cd, "k_rope_qs": kq, "k_rope_d": kd}
+        if kernel == "gather":
+            # keep the dequantized views in f32 — the fused kernel also
+            # dequantizes in f32, so the reference must not round through
+            # the model dtype on bf16 deployments
+            ckv = paged.gather_pages_q8(cq, cd, block_table, max_len)
+            krope = paged.gather_pages_q8(kq, kd, block_table, max_len)
+            return _absorbed_attend(p, cfg, x.dtype, q_nope, q_rope,
+                                    ckv, krope, pos), new
+    else:
+        new = {
+            "c_kv": paged.scatter_token(cache["c_kv"], block_table, idx,
+                                        c_new[:, 0], ok=live),
+            "k_rope": paged.scatter_token(cache["k_rope"], block_table, idx,
+                                          kr_new[:, 0], ok=live),
+        }
     dt = x.dtype
     w_kvb = _maybe_dequant(p["kv_b"], dt).reshape(rank, nh, dn + dv)
     w_kb, w_vb = w_kvb[..., :dn], w_kvb[..., dn:]
     q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
                        w_kb.astype(jnp.float32))              # (B,H,rank)
-    lat = paged_attn.paged_mla_decode(
-        q_eff.astype(dt), q_rope[:, 0], new["c_kv"], new["k_rope"],
-        block_table, pos, scale=(dn + dr) ** -0.5,
-        active_pages=active_pages)
+    if kv_quant:
+        lat = paged_attn.paged_mla_decode_q8(
+            q_eff.astype(dt), q_rope[:, 0], cq, cd, kq, kd,
+            block_table, pos, scale=(dn + dr) ** -0.5,
+            active_pages=active_pages)
+    else:
+        lat = paged_attn.paged_mla_decode(
+            q_eff.astype(dt), q_rope[:, 0], new["c_kv"], new["k_rope"],
+            block_table, pos, scale=(dn + dr) ** -0.5,
+            active_pages=active_pages)
     o = jnp.einsum("bhr,rhd->bhd", lat.astype(dt), w_vb,
                    preferred_element_type=jnp.float32)        # (B,H,dv)
     o = o.reshape(b, 1, nh * dv).astype(x.dtype)
@@ -191,13 +245,15 @@ def mla_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                       positions: jax.Array, start: jax.Array,
                       chunk_len: jax.Array, *, max_len: int,
                       block_table: jax.Array | None = None,
+                      kv_quant: str | None = None,
                       ) -> tuple[jax.Array, dict]:
     """One prefill chunk against the compressed-latent cache.
 
     Materialises per-head K/V from [cached latents | chunk latents] (the
     naive evaluation, as in :func:`mla_forward`) and attends the chunk
     queries over it with per-row positional masks; writes the chunk's
-    latents into the cache (dense rows or pages).
+    latents into the cache (dense rows or pages; quantized rows when
+    ``kv_quant`` — earlier chunks are read through a dequantizing gather).
     """
     b, c, _ = x.shape
     nh = cfg.n_heads
@@ -206,7 +262,13 @@ def mla_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     q_nope, q_rope = _project_q(p, cfg, h, positions)
     c_new, kr_new = _latents(p, cfg, h, positions)
 
-    if block_table is not None:
+    if kv_quant:
+        assert block_table is not None, "kv_quant requires paged caches"
+        ckv = paged.gather_pages_q8(cache["c_kv_qs"], cache["c_kv_d"],
+                                    block_table, max_len)
+        krope = paged.gather_pages_q8(cache["k_rope_qs"], cache["k_rope_d"],
+                                      block_table, max_len)
+    elif block_table is not None:
         ckv = paged.gather_pages(cache["c_kv"], block_table, max_len)
         krope = paged.gather_pages(cache["k_rope"], block_table, max_len)
     else:
@@ -234,7 +296,14 @@ def mla_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
 
     idx = positions.astype(jnp.int32)
     ok = valid_tok                          # full horizon: no ring collisions
-    if block_table is not None:
+    if kv_quant:
+        cq, cd = paged.scatter_chunk_q8(cache["c_kv_qs"], cache["c_kv_d"],
+                                        block_table, idx, c_new, ok)
+        kq, kd = paged.scatter_chunk_q8(cache["k_rope_qs"],
+                                        cache["k_rope_d"], block_table, idx,
+                                        kr_new, ok)
+        new = {"c_kv_qs": cq, "c_kv_d": cd, "k_rope_qs": kq, "k_rope_d": kd}
+    elif block_table is not None:
         new = {
             "c_kv": paged.scatter_chunk(cache["c_kv"], block_table, idx,
                                         c_new, ok),
@@ -253,32 +322,18 @@ def mla_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     return out, new
 
 
-def mla_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
-               pos: jax.Array,
-               live: jax.Array | None = None) -> tuple[jax.Array, dict]:
-    """Absorbed one-token decode.  x: (B, 1, D); pos: (B,).
-
-    ``live`` (B,) bool: rows flagged False drop their cache write (see
-    :func:`repro.models.attention.attn_decode`).
-    """
-    b = x.shape[0]
+def _absorbed_attend(p: dict, cfg: ModelConfig, dt, q_nope: jax.Array,
+                     q_rope: jax.Array, c_kv: jax.Array, k_rope: jax.Array,
+                     pos: jax.Array) -> jax.Array:
+    """Absorbed-form attention of one query row over dense latent views —
+    the read path shared by :func:`mla_decode` and the quantized gather
+    reference.  q_nope/q_rope: (B, 1, H, *); c_kv: (B, L, rank); k_rope:
+    (B, L, dr); returns the projected output (B, 1, H*dv) in ``dt``."""
+    b = q_nope.shape[0]
     nh = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     rank = cfg.kv_lora_rank
-    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
-    q_nope, q_rope = _project_q(p, cfg, h, pos[:, None])      # (B,1,H,*)
-    c_new, kr_new = _latents(p, cfg, h, pos[:, None])         # (B,1,rank)
-
-    length = cache["c_kv"].shape[1]
-    wpos = pos if live is None else jnp.where(live, pos, length)
-    bidx = jnp.arange(b)
-    c_kv = cache["c_kv"].at[bidx, wpos].set(
-        c_new[:, 0].astype(cache["c_kv"].dtype), mode="drop")
-    k_rope = cache["k_rope"].at[bidx, wpos].set(
-        kr_new[:, 0].astype(cache["k_rope"].dtype), mode="drop")
-
     # absorb kv_b: W_kb (rank, H, dn) for keys, W_vb (rank, H, dv) for values
-    dt = x.dtype
     w_kvb = _maybe_dequant(p["kv_b"], dt).reshape(rank, nh, dn + dv)
     w_kb, w_vb = w_kvb[..., :dn], w_kvb[..., dn:]
     # q_eff[h] = q_nope[h] @ W_kb[h]^T  -> compare directly against c_kv
@@ -297,6 +352,30 @@ def mla_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                      preferred_element_type=jnp.float32)      # (B,H,rank)
     o = jnp.einsum("bhr,rhd->bhd", lat.astype(dt), w_vb,
                    preferred_element_type=jnp.float32)        # (B,H,dv)
-    o = o.reshape(b, 1, nh * dv).astype(x.dtype)
-    out = linear(p["o_proj"], o)
+    o = o.reshape(b, 1, nh * dv).astype(dt)
+    return linear(p["o_proj"], o)
+
+
+def mla_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+               pos: jax.Array,
+               live: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """Absorbed one-token decode.  x: (B, 1, D); pos: (B,).
+
+    ``live`` (B,) bool: rows flagged False drop their cache write (see
+    :func:`repro.models.attention.attn_decode`).
+    """
+    b = x.shape[0]
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q_nope, q_rope = _project_q(p, cfg, h, pos[:, None])      # (B,1,H,*)
+    c_new, kr_new = _latents(p, cfg, h, pos[:, None])         # (B,1,rank)
+
+    length = cache["c_kv"].shape[1]
+    wpos = pos if live is None else jnp.where(live, pos, length)
+    bidx = jnp.arange(b)
+    c_kv = cache["c_kv"].at[bidx, wpos].set(
+        c_new[:, 0].astype(cache["c_kv"].dtype), mode="drop")
+    k_rope = cache["k_rope"].at[bidx, wpos].set(
+        kr_new[:, 0].astype(cache["k_rope"].dtype), mode="drop")
+    out = _absorbed_attend(p, cfg, x.dtype, q_nope, q_rope, c_kv, k_rope,
+                           pos)
     return out, {"c_kv": c_kv, "k_rope": k_rope}

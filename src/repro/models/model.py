@@ -286,14 +286,17 @@ class Model:
 
     # ---------------------------------------------------------------- paged
     def init_paged_cache(self, num_pages: int, page_size: int, slots: int,
-                         dtype=jnp.bfloat16):
+                         dtype=jnp.bfloat16, kv_quant: str | None = None):
         """Paged decode cache: attention K/V (+pos) and MLA latents become
         ``(num_pages, page_size, ...)`` pools shared by all slots via block
-        tables; recurrent state stays dense ``(slots, ...)`` (O(1)/slot)."""
+        tables; recurrent state stays dense ``(slots, ...)`` (O(1)/slot).
+        ``kv_quant="q8_0"`` stores the positional pools as int8 + per-row
+        f32 scales (~4x less cache memory; see models/paged.py)."""
         flat = {}
         for layer in range(self.cfg.n_layers):
             c = transformer.init_layer_cache_paged(
-                self.cfg, layer, num_pages, page_size, slots, dtype)
+                self.cfg, layer, num_pages, page_size, slots, dtype,
+                kv_quant=kv_quant)
             for k, v in c.items():
                 flat[f"{layer_prefix('dec', layer)}/{k}"] = v
         if self.scan:
@@ -301,11 +304,12 @@ class Model:
         return flat
 
     def paged_cache_specs(self, num_pages: int, page_size: int, slots: int,
-                          dtype=jnp.bfloat16):
+                          dtype=jnp.bfloat16, kv_quant: str | None = None):
         flat = {}
         for layer in range(self.cfg.n_layers):
             c = transformer.layer_cache_specs_paged(
-                self.cfg, layer, num_pages, page_size, slots, dtype)
+                self.cfg, layer, num_pages, page_size, slots, dtype,
+                kv_quant=kv_quant)
             for k, v in c.items():
                 flat[f"{layer_prefix('dec', layer)}/{k}"] = v
         if self.scan:
@@ -315,7 +319,8 @@ class Model:
     def decode_step_paged(self, params, cache, tokens, pos, block_tables,
                           *, page_size: int, max_len: int, live=None,
                           kernel: str | None = None,
-                          active_pages: tuple[int, int] | None = None):
+                          active_pages: tuple[int, int] | None = None,
+                          kv_quant: str | None = None):
         """One decode step against a paged cache.
 
         ``block_tables``: {"full": (B, n) int32, "ring": (B, n') int32}
@@ -328,15 +333,20 @@ class Model:
         same per-layer decode on it).  ``active_pages``: optional static
         ``(n_full_pages, n_ring_pages)`` bound on the fused kernels' page
         loops — the serve loop passes the batch's bucketed live horizon so
-        decode bandwidth scales with live tokens.
+        decode bandwidth scales with live tokens.  ``kv_quant``: the cache
+        quantization spec the pools were initialised with — the matching
+        fused q8 kernels (or dequantizing gather reference) are selected
+        automatically.
         """
         return self.decode_step(
             params, cache, tokens, pos,
-            paged=(block_tables, page_size, max_len, kernel, active_pages),
+            paged=(block_tables, page_size, max_len, kernel, active_pages,
+                   kv_quant),
             live=live)
 
     def prefill_chunk(self, params, cache, tokens, start, chunk_len, *,
-                      max_len: int, block_tables=None, page_size: int = 0):
+                      max_len: int, block_tables=None, page_size: int = 0,
+                      kv_quant: str | None = None):
         """One chunked-prefill step over the pooled decode cache.
 
         tokens: (B, C) int32, right-padded per row; start: (B,) absolute
@@ -345,15 +355,19 @@ class Model:
         chunk starts at position 0 reset their recurrent state.  Returns
         (logits (B, vocab) at each row's last valid position, new_cache).
 
-        With ``block_tables``/``page_size`` the cache is paged; otherwise
-        it is the dense pooled layout of :meth:`init_cache`.
+        With ``block_tables``/``page_size`` the cache is paged (and
+        ``kv_quant`` selects the quantized pool layout); otherwise it is
+        the dense pooled layout of :meth:`init_cache`.
         """
         cfg = self.cfg
         if cfg.frontend == "vit" or cfg.is_encdec:
             raise ValueError("chunked prefill supports decoder-only text "
                              "models (no frontend fusion mid-stream)")
+        if kv_quant and block_tables is None:
+            raise ValueError("kv_quant requires a paged cache "
+                             "(pass block_tables/page_size)")
         paged = (None if block_tables is None
-                 else (block_tables, page_size, max_len))
+                 else (block_tables, page_size, max_len, kv_quant))
         c = tokens.shape[1]
         x = self._embed_tokens(params, tokens)
         positions = start[:, None] + jnp.arange(c)[None, :]

@@ -34,15 +34,38 @@ Two decode paths read these pools (``kernel=`` on the decode APIs /
 Chunked prefill still uses the gather path (one gather per admitted
 chunk, amortised over the whole chunk — decode was the per-step hot
 loop).
+
+**Quantized pools** (``kv_quant="q8_0"``): a positional K/V (or MLA
+latent) leaf may instead be stored as an int8 pool plus a per-row f32
+scale pool (block = the trailing axis; see
+``kernels.paged_attn.quantize_kv_page_pool``).  Writes quantize rows on
+the fly (:func:`scatter_token_q8` / :func:`scatter_chunk_q8`), reads
+either dequantize inside the fused kernels or through
+:func:`gather_pages_q8` for the prefill-chunk / gather-reference paths.
+NULL/GARBAGE reserved-page and last-writer-wins semantics are identical
+to the f32 pools (a NULL page's qs and d stay zero, so it dequantizes to
+the same never-written zeros).
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from ..kernels.paged_attn import quantize_kv_page_pool
+
 NULL_PAGE = 0
 GARBAGE_PAGE = 1
 RESERVED_PAGES = 2
+
+KV_QUANTS = ("q8_0",)
+
+
+def check_kv_quant(kv_quant: str | None) -> str | None:
+    """Validate a cache-quantization spec (None = f32/model-dtype pools)."""
+    if kv_quant and kv_quant not in KV_QUANTS:
+        raise ValueError(f"unknown kv_quant {kv_quant!r}; "
+                         f"supported: {KV_QUANTS}")
+    return kv_quant or None
 
 
 def pages_for(length: int, page_size: int) -> int:
@@ -102,6 +125,42 @@ def scatter_chunk(pool: jnp.ndarray, block_table: jnp.ndarray,
     off = jnp.where(ok, off, 0)
     flat = val.reshape(b * c, *val.shape[2:]).astype(pool.dtype)
     return pool.at[phys.reshape(-1), off.reshape(-1)].set(flat)
+
+
+def gather_pages_q8(qs_pool: jnp.ndarray, d_pool: jnp.ndarray,
+                    block_table: jnp.ndarray, length: int) -> jnp.ndarray:
+    """Dequantizing :func:`gather_pages` over a q8_0 leaf pair.
+
+    Returns the dense f32 ``(B, length, ...)`` view ``qs * d`` — what the
+    prefill-chunk and gather-reference paths attend (the fused kernels
+    dequantize the same way, per page tile, without materialising this).
+    """
+    qs = gather_pages(qs_pool, block_table, length)
+    d = gather_pages(d_pool, block_table, length)
+    return qs.astype(jnp.float32) * d.astype(jnp.float32)[..., None]
+
+
+def scatter_token_q8(qs_pool: jnp.ndarray, d_pool: jnp.ndarray,
+                     block_table: jnp.ndarray, idx: jnp.ndarray,
+                     val: jnp.ndarray, ok: jnp.ndarray | None = None):
+    """Quantize-on-write :func:`scatter_token` for a q8_0 leaf pair.
+
+    val: (B, ...) float rows; each is quantized per trailing-axis row
+    (``quantize_kv_page_pool``) and the int8 values / f32 scales land in
+    their pools under the same routing (``ok`` rows -> GARBAGE_PAGE).
+    """
+    qs, d = quantize_kv_page_pool(val)
+    return (scatter_token(qs_pool, block_table, idx, qs, ok=ok),
+            scatter_token(d_pool, block_table, idx, d, ok=ok))
+
+
+def scatter_chunk_q8(qs_pool: jnp.ndarray, d_pool: jnp.ndarray,
+                     block_table: jnp.ndarray, idx: jnp.ndarray,
+                     val: jnp.ndarray, ok: jnp.ndarray):
+    """Quantize-on-write :func:`scatter_chunk` for a q8_0 leaf pair."""
+    qs, d = quantize_kv_page_pool(val)
+    return (scatter_chunk(qs_pool, block_table, idx, qs, ok),
+            scatter_chunk(d_pool, block_table, idx, d, ok))
 
 
 def chunk_write_plan(idx: jnp.ndarray, valid: jnp.ndarray, length: int):

@@ -83,13 +83,15 @@ def decode_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
     """One-token decode through one layer.  Returns (x, new_cache).
 
     ``paged``: optional ``(block_tables, page_size, max_len, kernel,
-    active_pages)`` — attention and MLA caches are then page pools indexed
-    through the slot block tables (``block_tables["full"]`` / ``["ring"]``);
-    recurrent state is a dense passthrough either way.  ``kernel`` picks
-    fused-Pallas vs gather-reference decode (None = env default);
-    ``active_pages`` is an optional ``(n_full, n_ring)`` static bound on
-    the page loop for the fused kernel.  ``live`` (B,) bool: rows flagged
-    False (free / mid-prefill serve lanes) leave the cache untouched.
+    active_pages, kv_quant)`` — attention and MLA caches are then page
+    pools indexed through the slot block tables (``block_tables["full"]``
+    / ``["ring"]``); recurrent state is a dense passthrough either way.
+    ``kernel`` picks fused-Pallas vs gather-reference decode (None = env
+    default); ``active_pages`` is an optional ``(n_full, n_ring)`` static
+    bound on the page loop for the fused kernel; ``kv_quant`` selects the
+    quantized pool layout (the matching fused q8 kernels are picked
+    automatically).  ``live`` (B,) bool: rows flagged False (free /
+    mid-prefill serve lanes) leave the cache untouched.
     """
     kind = cfg.block_kind(layer)
     cross = {k: cache.pop(k) for k in ("cross_k", "cross_v")
@@ -98,7 +100,7 @@ def decode_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
     if kind in ("attn", "local_attn"):
         local = kind == "local_attn"
         if paged is not None:
-            block_tables, _, max_len, kernel, active = paged
+            block_tables, _, max_len, kernel, active, kv_quant = paged
             # MLA latents always span the full horizon (no ring bound)
             use_ring = local and not cfg.mla
             bt = block_tables["ring" if use_ring else "full"]
@@ -109,11 +111,12 @@ def decode_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
             if cfg.mla:
                 delta, cache_new = mla.mla_decode_paged(
                     p, cfg, x, cache, pos, bt, max_len=max_len, live=live,
-                    kernel=kernel, active_pages=ap)
+                    kernel=kernel, active_pages=ap, kv_quant=kv_quant)
             else:
                 delta, cache_new = attention.attn_decode_paged(
                     p, cfg, x, cache, pos, bt, local=local, max_len=max_len,
-                    live=live, kernel=kernel, active_pages=ap)
+                    live=live, kernel=kernel, active_pages=ap,
+                    kv_quant=kv_quant)
         elif cfg.mla:
             delta, cache_new = mla.mla_decode(p, cfg, x, cache, pos,
                                               live=live)
@@ -244,19 +247,19 @@ def prefill_chunk_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
 
     if kind in ("attn", "local_attn"):
         local = kind == "local_attn"
-        bt = None
+        bt, kv_quant = None, None
         if paged is not None:
-            block_tables, _, _ = paged
+            block_tables, _, _, kv_quant = paged
             # MLA latents always span the full horizon (no ring bound)
             bt = block_tables["ring" if local and not cfg.mla else "full"]
         if cfg.mla:
             delta, cache_new = mla.mla_prefill_chunk(
                 p, cfg, x, cache, positions, start, chunk_len,
-                max_len=max_len, block_table=bt)
+                max_len=max_len, block_table=bt, kv_quant=kv_quant)
         else:
             delta, cache_new = attention.attn_prefill_chunk(
                 p, cfg, x, cache, positions, start, chunk_len, local=local,
-                max_len=max_len, block_table=bt)
+                max_len=max_len, block_table=bt, kv_quant=kv_quant)
         x = x + delta
     elif kind == "rglru":
         delta, cache_new = rglru.rglru_prefill_chunk(
@@ -293,18 +296,22 @@ def prefill_chunk_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
 
 def init_layer_cache_paged(cfg: ModelConfig, layer: int, num_pages: int,
                            page_size: int, slots: int,
-                           dtype=jnp.bfloat16) -> dict:
+                           dtype=jnp.bfloat16,
+                           kv_quant: str | None = None) -> dict:
     """Paged layer cache: attention/MLA leaves become page pools; recurrent
-    state stays a dense ``(slots, ...)`` passthrough (O(1) per slot)."""
+    state stays a dense ``(slots, ...)`` passthrough (O(1) per slot).
+    ``kv_quant`` switches the positional pools to the quantized layout
+    (recurrent passthrough state is never quantized)."""
     kind = cfg.block_kind(layer)
     if cfg.is_encdec:
         raise ValueError("paged caches do not support encoder-decoder "
                          "architectures")
     if kind in ("attn", "local_attn"):
         if cfg.mla:
-            return mla.init_paged_mla_cache(cfg, num_pages, page_size, dtype)
+            return mla.init_paged_mla_cache(cfg, num_pages, page_size, dtype,
+                                            kv_quant=kv_quant)
         return attention.init_paged_attn_cache(cfg, num_pages, page_size,
-                                               dtype)
+                                               dtype, kv_quant=kv_quant)
     if kind == "rglru":
         return rglru.init_rglru_cache(cfg, slots, dtype)
     if kind == "mlstm":
@@ -316,16 +323,18 @@ def init_layer_cache_paged(cfg: ModelConfig, layer: int, num_pages: int,
 
 def layer_cache_specs_paged(cfg: ModelConfig, layer: int, num_pages: int,
                             page_size: int, slots: int,
-                            dtype=jnp.bfloat16) -> dict:
+                            dtype=jnp.bfloat16,
+                            kv_quant: str | None = None) -> dict:
     kind = cfg.block_kind(layer)
     if cfg.is_encdec:
         raise ValueError("paged caches do not support encoder-decoder "
                          "architectures")
     if kind in ("attn", "local_attn"):
         if cfg.mla:
-            return mla.paged_mla_cache_specs(cfg, num_pages, page_size, dtype)
+            return mla.paged_mla_cache_specs(cfg, num_pages, page_size,
+                                             dtype, kv_quant=kv_quant)
         return attention.paged_attn_cache_specs(cfg, num_pages, page_size,
-                                                dtype)
+                                                dtype, kv_quant=kv_quant)
     if kind == "rglru":
         return rglru.rglru_cache_specs(cfg, slots, dtype)
     if kind == "mlstm":

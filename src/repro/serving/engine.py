@@ -20,7 +20,11 @@ deployment driver for the paper's scenario (DQ3_K_M weights, 32k context):
     free lanes).  Recurrent state (RG-LRU / xLSTM) is O(1) per slot and
     stays a dense passthrough.  With ``page_size == 0`` the same loop runs
     over the contiguous slot-indexed layout — the two are bitwise
-    identical (tests/test_paged_cache.py).
+    identical (tests/test_paged_cache.py).  ``kv_quant="q8_0"`` stores
+    the positional pools quantized (int8 + per-row f32 scales): rows are
+    quantized on write and the fused q8 kernels dequantize page tiles in
+    place, ~4x less cache memory and decode page traffic inside a
+    measured logit error budget (tests/test_kv_quant.py).
   * **Chunked prefill admission.**  Queued prompts are admitted in fixed
     ``prefill_chunk``-token chunks through ONE batched
     ``model.prefill_chunk`` call per iteration (all currently-admitting
@@ -196,12 +200,16 @@ class EngineStats:
     page_size: int = 0
     num_pages: int = 0
     page_bytes: int = 0                  # bytes per page across all leaves
+    kv_quant: str = ""                   # cache quantization ("" = f32/bf16)
     peak_pages: int = 0
     pages_leaked: int = 0                # pages still held after the call
     dense_cache_bytes: int = 0           # slots x max_len layout, for compare
-    # decode-read traffic: KV-cache bytes the decode attention touches,
-    # summed over iterations ("fused" reads the bucketed live pages;
-    # "gather" re-materialises every logical page each step)
+    # decode-read traffic: KV-cache bytes the decode attention touches
+    # (attn/MLA leaves only — recurrent passthrough state is excluded in
+    # every mode so kvB/tok is comparable across dense and paged), summed
+    # over iterations ("fused" reads the bucketed live pages; "gather"
+    # re-materialises every logical page each step).  With ``kv_quant``
+    # the per-page bytes are the true quantized layout's (int8 + scales).
     decode_kv_bytes: int = 0
     decoded_tokens: int = 0              # live-lane tokens over all iterations
 
@@ -265,7 +273,8 @@ class EngineStats:
             lines.append(
                 f"pages: {self.peak_pages}/"
                 f"{self.num_pages - paged.RESERVED_PAGES} peak "
-                f"({self.page_size} tok/page, {self.page_bytes} B/page, "
+                f"({self.page_size} tok/page, {self.page_bytes} B/page"
+                f"{', ' + self.kv_quant if self.kv_quant else ''}, "
                 f"leaked {self.pages_leaked})  cache "
                 f"{self.bytes_per_live_token:.0f} B/live-token vs dense "
                 f"{self.dense_cache_bytes / max(self.mean_live_tokens, 1e-9):.0f}")
@@ -316,13 +325,18 @@ class Engine:
     ``kernel`` selects the paged decode implementation: ``"fused"`` (Pallas
     flash-decode over the pages in place, bandwidth scales with live
     tokens) or ``"gather"`` (dense-view reference); default from the
-    ``REPRO_PAGED_KERNEL`` env, else fused.
+    ``REPRO_PAGED_KERNEL`` env, else fused.  ``kv_quant="q8_0"`` stores
+    the positional page pools quantized (int8 + per-row f32 scales, ~4x
+    less cache memory and decode page traffic; requires ``page_size > 0``)
+    — the fused q8 kernels are selected automatically and
+    ``EngineStats`` reports the true quantized page bytes / kvB/tok.
     """
 
     def __init__(self, model: Model, params: Any, *, max_len: int = 512,
                  eos_id: int = -1, sampler: SamplerConfig = SamplerConfig(),
                  jit: bool = True, page_size: int = 0, num_pages: int = 0,
-                 prefill_chunk: int = 0, kernel: str | None = None):
+                 prefill_chunk: int = 0, kernel: str | None = None,
+                 kv_quant: str | None = None):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -330,6 +344,10 @@ class Engine:
         self.sampler = sampler
         self.page_size = page_size
         self.num_pages = num_pages
+        self.kv_quant = paged.check_kv_quant(kv_quant)
+        if self.kv_quant and not page_size:
+            raise ValueError("kv_quant requires the paged cache "
+                             "(page_size > 0)")
         self.kernel = kernel or default_paged_kernel()
         if self.kernel not in ("fused", "gather"):
             raise ValueError(f"unknown paged decode kernel {self.kernel!r}")
@@ -364,7 +382,8 @@ class Engine:
                     for k, v in pos_leaves.items()}
 
         decode_paged = partial(model.decode_step_paged, page_size=page_size,
-                               max_len=max_len, kernel=self.kernel)
+                               max_len=max_len, kernel=self.kernel,
+                               kv_quant=self.kv_quant)
         if jit:
             self._decode = jax.jit(model.decode_step)
             # active_pages is a static (n_full, n_ring) page bound for the
@@ -374,13 +393,14 @@ class Engine:
                                          static_argnames=("active_pages",))
             self._chunk = jax.jit(
                 partial(model.prefill_chunk, max_len=max_len,
-                        page_size=page_size))
+                        page_size=page_size, kv_quant=self.kv_quant))
             self._scrub = jax.jit(scrub)
         else:
             self._decode = model.decode_step
             self._decode_paged = decode_paged
             self._chunk = partial(model.prefill_chunk, max_len=max_len,
-                                  page_size=page_size)
+                                  page_size=page_size,
+                                  kv_quant=self.kv_quant)
             self._scrub = scrub
 
     # -- one-shot batch generation ------------------------------------------
@@ -452,17 +472,20 @@ class Engine:
             num_pages = self.num_pages or (
                 paged.RESERVED_PAGES + slots * (n_full + n_ring))
             pool = PagePool(num_pages)
-            cache = model.init_paged_cache(num_pages, P, slots, dtype=dtype)
+            cache = model.init_paged_cache(num_pages, P, slots, dtype=dtype,
+                                           kv_quant=self.kv_quant)
             bt_full = np.full((slots, max(n_full, 1)), paged.GARBAGE_PAGE,
                               np.int32)
             bt_ring = np.full((slots, max(n_ring, 1)), paged.GARBAGE_PAGE,
                               np.int32)
             stats.page_size, stats.num_pages = P, num_pages
             stats.page_bytes = self._page_bytes(slots)
+            stats.kv_quant = self.kv_quant or ""
         else:
             pool = None
             cache = model.init_cache(slots, self.max_len, dtype=dtype)
         stats.dense_cache_bytes = self._dense_cache_bytes(slots)
+        dense_kv_read = 0 if use_paged else self._dense_kv_read_bytes(slots)
 
         def tables():
             return {"full": jnp.asarray(bt_full), "ring": jnp.asarray(bt_ring)}
@@ -691,7 +714,10 @@ class Engine:
                     self.params, cache, toks, pos, tables(), live=live_mask,
                     active_pages=active)
             else:
-                stats.decode_kv_bytes += stats.dense_cache_bytes
+                # charge only the attn/MLA cache reads (recurrent
+                # passthrough excluded) so kvB/tok is comparable with the
+                # paged modes, which only ever charge positional pools
+                stats.decode_kv_bytes += dense_kv_read
                 logits, cache = self._decode(self.params, cache, toks, pos,
                                              live=live_mask)
             stats.decoded_tokens += len(live)
@@ -774,7 +800,8 @@ class Engine:
             if kind not in ("attn", "local_attn"):
                 continue
             nbytes = self._spec_bytes(transformer.layer_cache_specs_paged(
-                cfg, layer, 1, self.page_size, 1, dtype=self.model.dtype))
+                cfg, layer, 1, self.page_size, 1, dtype=self.model.dtype,
+                kv_quant=self.kv_quant))
             # same table split as transformer.decode_layer: MLA latents
             # always ride the full-horizon table
             if kind == "local_attn" and not cfg.mla:
@@ -791,11 +818,28 @@ class Engine:
         """Bytes one physical page costs across every paged cache leaf."""
         r = paged.RESERVED_PAGES
         lo = self._spec_bytes(self.model.paged_cache_specs(
-            r, self.page_size, slots, dtype=self.model.dtype))
+            r, self.page_size, slots, dtype=self.model.dtype,
+            kv_quant=self.kv_quant))
         hi = self._spec_bytes(self.model.paged_cache_specs(
-            r + 1, self.page_size, slots, dtype=self.model.dtype))
+            r + 1, self.page_size, slots, dtype=self.model.dtype,
+            kv_quant=self.kv_quant))
         return hi - lo
 
     def _dense_cache_bytes(self, slots: int) -> int:
         return self._spec_bytes(self.model.cache_specs(
             slots, self.max_len, dtype=self.model.dtype))
+
+    def _dense_kv_read_bytes(self, slots: int) -> int:
+        """Bytes one dense decode step reads from the *attention/MLA*
+        caches (incl. cross-attention K/V) — recurrent passthrough state is
+        excluded so ``decode_kv_bytes`` matches what the paged modes
+        charge (their pools only ever hold positional attn/MLA leaves)."""
+        from ..models import transformer
+        cfg = self.model.cfg
+        total = 0
+        for layer in range(cfg.n_layers):
+            if cfg.block_kind(layer) not in ("attn", "local_attn"):
+                continue
+            total += self._spec_bytes(transformer.layer_cache_specs(
+                cfg, layer, slots, self.max_len, dtype=self.model.dtype))
+        return total

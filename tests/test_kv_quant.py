@@ -1,0 +1,580 @@
+"""Quantized KV page pools end-to-end: ``Engine(kv_quant="q8_0")``.
+
+Three layers of proof (the error-budget / stress suite for the quantized
+cache plumbing; kernels/paged_attn.py's q8 kernels are additionally
+pinned against dense oracles in tests/test_paged_attn_kernel.py):
+
+  * **bitwise oracle parity** — quantize-on-write (``scatter_token_q8`` /
+    ``scatter_chunk_q8``) -> ``gather_pages(_q8)`` roundtrips must
+    reproduce a pure-numpy q8_0 oracle bit for bit (int8 payloads, f32
+    scales, and the dequantized dense view), including GARBAGE-routed
+    non-live writes and padded chunk tokens;
+  * **error budget + agreement** — fuzzed serve-style runs (chunked
+    prefill + paged decode) against f32 pools must keep every
+    per-position logit error inside a *derived* budget (see
+    ``rel_budget``), and greedy token streams from full ``Engine.serve``
+    runs must agree on >= 95% of comparable steps;
+  * **memory** — the quantized pools must measure <= 0.30x the f32
+    layout (int8 payload + per-row scales), at the spec level and in the
+    engine's page-byte accounting.
+
+Error-budget derivation.  One q8_0 row stores ``x ~ qs * d`` with
+``d = max|x|/127``, so the roundtrip error per entry is at most ``d/2``,
+i.e. ``EPS_Q8 = 1/254`` relative to the row's max.  Per layer the
+attention output inherits O(EPS_Q8) relative error (scores and values
+are both perturbed, softmax is 1-Lipschitz in the scores), and the
+residual stream compounds roughly linearly in depth, so the budget is
+``AMP * n_layers * EPS_Q8`` with a measured per-family amplification
+headroom ``AMP``.  Dense-attention families sit comfortably under
+``AMP = 24`` (measured max ~7x/layer incl. softmax conditioning, ~3x
+headroom over 24-seed sweeps); the MLA + MoE family needs ``AMP = 96``:
+top-k *router* decisions are discrete, so a near-tied gate can flip an
+expert under any nonzero cache perturbation — exactly the "quantization
+hurts MoE reasoning" failure mode the source papers flag (measured
+numbers in ROADMAP.md).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypo_compat import given, settings, st
+
+from repro.configs import CONFIGS
+from repro.kernels import paged_attn
+from repro.models import paged
+from repro.models.model import Model
+from repro.models.spec import init_params
+from repro.serving import Engine, Request, SamplerConfig
+
+from test_paged_cache import _Tables, _setup
+
+EPS_Q8 = 1.0 / 254.0          # half-step relative error of one q8_0 row
+TOL = 1e-5                    # f32 parity tolerance (fused vs gather)
+
+# arch -> per-family amplification headroom for the logit error budget.
+# The MLA family is fuzzed with MoE disabled ("deepseek-mla-dense"): MoE
+# routing is discrete, so its worst-case error is O(1) regardless of the
+# cache format — that sensitivity is pinned separately on fixed seeds
+# (test_q8_moe_router_flip_budget_pinned) with MOE_AMP headroom.
+AMP = {
+    "qwen2-1.5b": 24,          # full GQA
+    "gemma2-9b": 24,           # local ring + softcap
+    "deepseek-mla-dense": 24,  # MLA latents, dense FFN
+}
+MOE_AMP = 96                   # MLA + MoE: discrete router flips
+
+ARCHS = ("qwen2-1.5b", "gemma2-9b", "deepseek-v3-671b")
+
+_MLA_DENSE = {}
+
+
+def _get(arch):
+    """(cfg, params, model) — test_paged_cache archs plus the MoE-free
+    MLA variant used by the error-budget fuzz."""
+    if arch == "deepseek-mla-dense":
+        if not _MLA_DENSE:
+            base = CONFIGS["deepseek-v3-671b"].reduced()
+            cfg = dataclasses.replace(
+                base, n_experts=0, top_k=0, n_shared_experts=0,
+                first_dense_layers=0, name=base.name + "-nomoe")
+            params = init_params(cfg, seed=0, dtype=jnp.float32)
+            _MLA_DENSE["x"] = (cfg, params, Model(cfg, dtype=jnp.float32))
+        return _MLA_DENSE["x"]
+    return _setup(arch)
+
+
+def rel_budget(arch: str) -> float:
+    """Max per-position relative logit error allowed for q8_0 KV pools."""
+    return AMP[arch] * _get(arch)[0].n_layers * EPS_Q8
+
+
+# ---------------------------------------------------------------------------
+# (a) bitwise scatter -> gather roundtrip vs the numpy q8_0 oracle
+# ---------------------------------------------------------------------------
+
+def _oracle_q8(x):
+    """Pure-numpy q8_0 rows over the trailing axis (all arithmetic in f32
+    so it is bit-comparable with the jax implementation on CPU)."""
+    x = np.asarray(x, np.float32)
+    d = (np.max(np.abs(x), axis=-1) / np.float32(127.0)).astype(np.float32)
+    safe = np.maximum(d, np.float32(1e-30))
+    qs = np.clip(np.rint(x / safe[..., None]), -127, 127).astype(np.int8)
+    return qs, d
+
+
+@given(st.integers(2, 5), st.integers(1, 4), st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_quantize_rows_match_oracle_bitwise(dim_a, dim_b, seed):
+    """quantize_kv_page_pool == the numpy oracle, bit for bit, on both the
+    4-d K/V pool layout and the 3-d MLA latent layout (incl. all-zero
+    rows, which must quantize to qs=0, d=0)."""
+    rng = np.random.default_rng(seed)
+    for shape in ((3, 4, dim_a, 8 * dim_b), (3, 4, 8 * dim_b)):
+        x = (rng.normal(size=shape)
+             * 10.0 ** int(rng.integers(-3, 3))).astype(np.float32)
+        x.reshape(-1, shape[-1])[1] = 0.0              # an all-zero row
+        qs, d = paged_attn.quantize_kv_page_pool(jnp.asarray(x))
+        oqs, od = _oracle_q8(x)
+        assert np.array_equal(np.asarray(qs), oqs)
+        assert np.array_equal(np.asarray(d), od)
+        # the roundtrip is q8_0-accurate: |x - qs*d| <= d/2 per entry
+        err = np.abs(x - oqs.astype(np.float32) * od[..., None])
+        assert np.all(err <= od[..., None] / 2 + 1e-12)
+
+
+@given(st.integers(2, 7), st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_scatter_gather_roundtrip_bitwise_vs_oracle(page_size, seed):
+    """Chunked and single-token quantized writes land in the pools exactly
+    as the oracle says (int8 + f32 scales), GARBAGE-routed rows (padding,
+    non-live lanes) leave mapped pages untouched, and the dequantizing
+    gather reproduces the oracle's dense view bitwise."""
+    rng = np.random.default_rng(seed)
+    b, n_lp, hkv, hd = 2, 3, 2, 8
+    L = n_lp * page_size
+    n_pages = paged.RESERVED_PAGES + b * n_lp
+    bt = jnp.asarray(np.arange(paged.RESERVED_PAGES, n_pages,
+                               dtype=np.int32).reshape(b, n_lp))
+    qs_pool = jnp.zeros((n_pages, page_size, hkv, hd), jnp.int8)
+    d_pool = jnp.zeros((n_pages, page_size, hkv), jnp.float32)
+
+    # chunk write covering [0, c) with one padded token per row
+    c = min(page_size + 2, L)
+    idx = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), (b, c))
+    valid = np.ones((b, c), bool)
+    valid[:, -1] = False                              # padded tail token
+    val = rng.normal(size=(b, c, hkv, hd)).astype(np.float32)
+    qs_pool, d_pool = paged.scatter_chunk_q8(
+        qs_pool, d_pool, bt, idx, jnp.asarray(val), jnp.asarray(valid))
+
+    # one decode-token write per row; row 1 is non-live -> GARBAGE
+    tpos = jnp.asarray([c - 1, c - 1], jnp.int32)
+    tval = rng.normal(size=(b, hkv, hd)).astype(np.float32)
+    live = jnp.asarray([True, False])
+    qs_pool, d_pool = paged.scatter_token_q8(
+        qs_pool, d_pool, bt, tpos, jnp.asarray(tval), ok=live)
+
+    # numpy reference: place oracle rows at the same logical indices
+    ref_qs = np.zeros((b, L, hkv, hd), np.int8)
+    ref_d = np.zeros((b, L, hkv), np.float32)
+    for s in range(b):
+        for j in range(c):
+            if valid[s, j]:
+                ref_qs[s, j], ref_d[s, j] = _oracle_q8(val[s, j])
+    ref_qs[0, c - 1], ref_d[0, c - 1] = _oracle_q8(tval[0])   # live row only
+
+    got_qs = np.asarray(paged.gather_pages(qs_pool, bt, L))
+    got_d = np.asarray(paged.gather_pages(d_pool, bt, L))
+    assert np.array_equal(got_qs, ref_qs)
+    assert np.array_equal(got_d, ref_d)
+    # dequantizing gather == oracle dense view, bitwise
+    deq = np.asarray(paged.gather_pages_q8(qs_pool, d_pool, bt, L))
+    assert np.array_equal(
+        deq, ref_qs.astype(np.float32) * ref_d[..., None])
+    # the non-live token write went to the GARBAGE sink, not a mapped page
+    assert not np.any(got_d[1, c - 1])
+
+
+def test_mla_shaped_roundtrip_bitwise():
+    """Same roundtrip for the 3-d MLA latent layout (one scale per token
+    row), page boundaries straddled."""
+    rng = np.random.default_rng(5)
+    b, n_lp, page_size, rank = 2, 3, 3, 12
+    L = n_lp * page_size
+    n_pages = paged.RESERVED_PAGES + b * n_lp
+    bt = jnp.asarray(np.arange(paged.RESERVED_PAGES, n_pages,
+                               dtype=np.int32).reshape(b, n_lp))
+    qs_pool = jnp.zeros((n_pages, page_size, rank), jnp.int8)
+    d_pool = jnp.zeros((n_pages, page_size), jnp.float32)
+    val = rng.normal(size=(b, L, rank)).astype(np.float32)
+    idx = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (b, L))
+    ok = jnp.ones((b, L), bool)
+    qs_pool, d_pool = paged.scatter_chunk_q8(qs_pool, d_pool, bt, idx,
+                                             jnp.asarray(val), ok)
+    oqs, od = _oracle_q8(val)
+    assert np.array_equal(np.asarray(paged.gather_pages(qs_pool, bt, L)),
+                          oqs)
+    assert np.array_equal(np.asarray(paged.gather_pages(d_pool, bt, L)), od)
+    assert np.array_equal(
+        np.asarray(paged.gather_pages_q8(qs_pool, d_pool, bt, L)),
+        oqs.astype(np.float32) * od[..., None])
+
+
+# ---------------------------------------------------------------------------
+# q8 MLA kernel vs dequantised oracle (the GQA q8 kernel is covered in
+# tests/test_paged_attn_kernel.py; this pins the new MLA variant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_mla_q8_kernel_matches_dequantised_oracle(impl):
+    rng = np.random.default_rng(7)
+    b, h, r, dr, page_size, n_lp = 2, 4, 12, 6, 5, 3
+    pos = np.array([6, 11], np.int32)
+    n_pages = paged.RESERVED_PAGES + b * n_lp
+    ckv = rng.normal(size=(n_pages, page_size, r)).astype(np.float32)
+    krope = rng.normal(size=(n_pages, page_size, dr)).astype(np.float32)
+    ckv[paged.NULL_PAGE] = 0.0
+    krope[paged.NULL_PAGE] = 0.0
+    bt = np.full((b, n_lp), paged.NULL_PAGE, np.int32)
+    nxt = paged.RESERVED_PAGES
+    for i in range(b):
+        for lp in range(pos[i] // page_size + 1):
+            bt[i, lp] = nxt
+            nxt += 1
+    cq, cd = paged_attn.quantize_kv_page_pool(jnp.asarray(ckv))
+    kq, kd = paged_attn.quantize_kv_page_pool(jnp.asarray(krope))
+    qe = rng.normal(size=(b, h, r)).astype(np.float32)
+    qr = rng.normal(size=(b, h, dr)).astype(np.float32)
+    scale = 0.19
+    got = np.asarray(paged_attn.paged_mla_decode_q8(
+        jnp.asarray(qe), jnp.asarray(qr), cq, cd, kq, kd, jnp.asarray(bt),
+        jnp.asarray(pos), scale=scale, impl=impl))
+    cf = np.asarray(cq, np.float32) * np.asarray(cd)[..., None]
+    kf = np.asarray(kq, np.float32) * np.asarray(kd)[..., None]
+    for i in range(b):
+        cs = cf[bt[i]].reshape(-1, r)
+        ks = kf[bt[i]].reshape(-1, dr)
+        valid = np.arange(cs.shape[0]) <= pos[i]
+        for hh in range(h):
+            s = (qe[i, hh] @ cs.T + qr[i, hh] @ ks.T) * scale
+            s = np.where(valid, s, -np.inf)
+            w = np.exp(s - s.max())
+            w /= w.sum()
+            assert np.max(np.abs(got[i, hh] - w @ cs)) < TOL, (i, hh)
+
+
+# ---------------------------------------------------------------------------
+# (b) error budget + greedy agreement vs f32 pools
+# ---------------------------------------------------------------------------
+
+def _stream_pair(arch, page_size, plens, steps, seed, chunk=5, max_len=32):
+    """Stream one prompt mix into f32-pool and q8-pool paged caches
+    (chunked prefill), then teacher-force ``steps`` fused decode steps
+    from the f32 greedy tokens.  Returns (max rel logit error, argmax
+    flips, compared positions)."""
+    cfg, params, model = _get(arch)
+    rng = np.random.default_rng(seed)
+    b = len(plens)
+    tbl = _Tables(cfg, b, max_len, page_size)
+    cache_f = model.init_paged_cache(tbl.pool.num_pages, page_size, b,
+                                     dtype=jnp.float32)
+    cache_q = model.init_paged_cache(tbl.pool.num_pages, page_size, b,
+                                     dtype=jnp.float32, kv_quant="q8_0")
+    pos = [0] * b
+    lf = lq = None
+    while any(pos[s] < plens[s] for s in range(b)):
+        toks = np.zeros((b, chunk), np.int32)
+        start = np.zeros(b, np.int32)
+        clen = np.zeros(b, np.int32)
+        for s in range(b):
+            n = min(chunk, plens[s] - pos[s])
+            if n <= 0:
+                continue
+            toks[s, :n] = rng.integers(4, cfg.vocab_size, n)
+            start[s], clen[s] = pos[s], n
+            tbl.ensure(s, pos[s], pos[s] + n)
+            pos[s] += n
+        args = (jnp.asarray(toks), jnp.asarray(start), jnp.asarray(clen))
+        lf, cache_f = model.prefill_chunk(
+            params, cache_f, *args, max_len=max_len,
+            block_tables=tbl.asdict(), page_size=page_size)
+        lq, cache_q = model.prefill_chunk(
+            params, cache_q, *args, max_len=max_len,
+            block_tables=tbl.asdict(), page_size=page_size, kv_quant="q8_0")
+
+    def relerr(a, b_):
+        return (float(jnp.max(jnp.abs(a - b_)))
+                / (float(jnp.max(jnp.abs(a))) + 1e-9))
+
+    errs = [relerr(lf, lq)]
+    flips = int((jnp.argmax(lf, -1) != jnp.argmax(lq, -1)).sum())
+    total = b
+    tok = jnp.argmax(lf, -1).astype(jnp.int32)
+    pos_arr = jnp.asarray(plens, jnp.int32)
+    for i in range(steps):
+        for s in range(b):
+            tbl.ensure(s, plens[s] + i, plens[s] + i + 1)
+        lf, cache_f = model.decode_step_paged(
+            params, cache_f, tok, pos_arr, tbl.asdict(),
+            page_size=page_size, max_len=max_len, kernel="fused")
+        lq, cache_q = model.decode_step_paged(
+            params, cache_q, tok, pos_arr, tbl.asdict(),
+            page_size=page_size, max_len=max_len, kernel="fused",
+            kv_quant="q8_0")
+        errs.append(relerr(lf, lq))
+        flips += int((jnp.argmax(lf, -1) != jnp.argmax(lq, -1)).sum())
+        total += b
+        tok = jnp.argmax(lf, -1).astype(jnp.int32)   # teacher-force on f32
+        pos_arr = pos_arr + 1
+    return max(errs), flips, total
+
+
+@given(st.sampled_from(list(AMP)), st.integers(2, 8), st.integers(2, 20),
+       st.integers(2, 20), st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_q8_logits_inside_error_budget(arch, page_size, plen_a, plen_b,
+                                       seed):
+    """Fuzzed serve-style runs: every per-position logit of the quantized
+    cache stays inside the derived error budget of the f32 cache across
+    chunked prefill and decode (teacher-forced, so errors do not compound
+    through token choices)."""
+    err, _, _ = _stream_pair(arch, page_size, (plen_a, plen_b), steps=4,
+                             seed=seed)
+    assert err <= rel_budget(arch), (arch, err, rel_budget(arch))
+
+
+def test_q8_error_budget_is_falsifiable():
+    """The dense-attention budget is tight enough to mean something: the
+    measured error is well above the single-row quantization floor (so a
+    vacuously loose bound would be caught by the 0.30x memory gate, not
+    silently absorbed here)."""
+    err, _, _ = _stream_pair("qwen2-1.5b", 4, (9, 13), steps=4, seed=3)
+    assert err > EPS_Q8 / 4        # quantization genuinely perturbs logits
+    assert err <= rel_budget("qwen2-1.5b")
+
+
+def test_q8_moe_router_flip_budget_pinned():
+    """MLA + MoE (the paper's DeepSeek-V3 shape): top-k router decisions
+    are discrete, so cache quantization occasionally *flips an expert*
+    and the worst-case per-position logit error is O(1) — measured max
+    ~0.75 relative over a 24-seed sweep (ROADMAP.md), vs ~0.06 for the
+    dense-attention families.  This is exactly the "quantization hurts
+    MoE/reasoning" failure mode the source papers flag, so it is pinned
+    (fixed seeds) under a documented router-flip budget rather than
+    fuzzed: a scale bug (wrong dequant factor, NaN) lands far outside
+    MOE_AMP x n_layers x EPS_Q8, a router flip inside it."""
+    n_layers = CONFIGS["deepseek-v3-671b"].reduced().n_layers
+    budget = MOE_AMP * n_layers * EPS_Q8
+    worst = 0.0
+    for seed in (0, 3, 7, 11):
+        err, _, _ = _stream_pair("deepseek-v3-671b", 4, (9, 13), steps=4,
+                                 seed=seed)
+        assert np.isfinite(err) and err <= budget, (seed, err, budget)
+        worst = max(worst, err)
+    assert worst > EPS_Q8          # the sensitivity is real, not vacuous
+
+
+# -- greedy agreement over full Engine.serve runs ---------------------------
+
+_TRAINED = {}
+
+
+def _trained_qwen2():
+    """Briefly trained reduced model (shared across tests): greedy argmax
+    margins on an untrained random-init model are near-ties, so token
+    agreement would measure coin flips rather than cache fidelity (same
+    rationale as examples/serve_quantized.py)."""
+    if not _TRAINED:
+        import jax
+        from repro.data.pipeline import SyntheticLM
+        from repro.training import make_train_step, optimizer as opt
+        cfg = CONFIGS["qwen2-1.5b"].reduced()
+        model = Model(cfg, dtype=jnp.float32)
+        params = init_params(cfg, seed=0, dtype=jnp.float32)
+        step_fn = jax.jit(
+            make_train_step(model, opt.AdamWConfig(
+                lr=3e-3, warmup_steps=10, total_steps=60)),
+            donate_argnums=(0, 1))
+        state = opt.init_state(params)
+        ds = SyntheticLM(cfg.vocab_size, 64, 8, seed=0)
+        for i in range(60):
+            batch = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+            params, state, _ = step_fn(params, state, batch)
+        _TRAINED["qwen2"] = (cfg, params, model)
+    return _TRAINED["qwen2"]
+
+
+def _comparable_agreement(a_outs: dict, b_outs: dict):
+    """(matches, comparable steps) between two greedy stream dicts.  Steps
+    after the first divergence of a request condition on different
+    prefixes and are not comparable — the divergence itself counts as a
+    miss, the conditioned tail is dropped."""
+    match = total = 0
+    for rid in a_outs:
+        for x, y in zip(a_outs[rid], b_outs[rid]):
+            total += 1
+            if x != y:
+                break
+            match += 1
+    return match, total
+
+
+def _serve_pair(model, params, requests, *, slots, page_size, max_len=48):
+    outs = {}
+    stats = {}
+    for kv in (None, "q8_0"):
+        eng = Engine(model, params, max_len=max_len, jit=False,
+                     sampler=SamplerConfig(greedy=True),
+                     page_size=page_size, prefill_chunk=6, kv_quant=kv)
+        done = eng.serve([Request(rid=r.rid, prompt=list(r.prompt),
+                                  max_new=r.max_new) for r in requests],
+                         slots=slots)
+        assert len(done) == len(requests) and all(r.done for r in done)
+        assert eng.last_stats.pages_leaked == 0
+        outs[kv] = {r.rid: r.out for r in done}
+        stats[kv] = eng.last_stats
+    return outs, stats
+
+
+def test_q8_serve_greedy_agreement_fuzz():
+    """Fuzzed full serve runs (seeded sweep in the spirit of hypo_compat's
+    deterministic fallback — a statistical >= 95% bound needs a pinned
+    workload set): across randomized request mixes, slot counts and page
+    sizes, the q8_0 engine's greedy streams agree with the f32 engine on
+    >= 95% of comparable steps, every request completes, and no page
+    leaks.  The quantized pools must also report <= 0.30x the f32 page
+    bytes on every run."""
+    cfg, params, model = _trained_qwen2()
+    match = total = 0
+    for ws in range(5):
+        rng = np.random.default_rng(100 + ws)
+        n_req = int(rng.integers(4, 7))
+        reqs = [Request(rid=i,
+                        prompt=list(rng.integers(
+                            4, cfg.vocab_size, int(rng.integers(3, 30)))),
+                        max_new=int(rng.integers(4, 10)))
+                for i in range(n_req)]
+        outs, stats = _serve_pair(
+            model, params, reqs, slots=int(rng.integers(2, 4)),
+            page_size=int(rng.choice([4, 8])))
+        assert (stats["q8_0"].page_bytes
+                <= 0.30 * stats[None].page_bytes)
+        m, t = _comparable_agreement(outs[None], outs["q8_0"])
+        match += m
+        total += t
+    assert total > 100
+    assert match / total >= 0.95, (match, total)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "deepseek-v3-671b"])
+def test_q8_serve_ring_and_mla_families(arch):
+    """Engine(kv_quant="q8_0") serves the local-ring and MLA families end
+    to end: fixed mixed workload, >= 95% greedy agreement with the f32
+    pools, zero leaked pages, quantized page bytes <= 0.30x f32 — together
+    with the GQA fuzz above this covers all three paged attention
+    families."""
+    cfg, params, model = _setup(arch)
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i,
+                    prompt=list(rng.integers(4, cfg.vocab_size, 5 + 3 * i)),
+                    max_new=5 + i)
+            for i in range(4)]
+    outs, stats = _serve_pair(model, params, reqs, slots=2, page_size=4)
+    assert stats["q8_0"].page_bytes <= 0.30 * stats[None].page_bytes
+    assert (stats["q8_0"].kv_bytes_per_decoded_token
+            <= 0.30 * stats[None].kv_bytes_per_decoded_token)
+    m, t = _comparable_agreement(outs[None], outs["q8_0"])
+    assert t > 0 and m / t >= 0.95, (arch, m, t)
+
+
+# -- q8 gather reference vs q8 fused kernels --------------------------------
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_q8_fused_matches_q8_gather(arch):
+    """The two implementations of the quantized decode — in-kernel dequant
+    (fused) and dequantizing gather + dense math (reference) — attend the
+    same round-tripped values, so from identical quantized pools each
+    step's logits must agree to f32 parity tolerance.  The caches are
+    re-synced between steps: quantization is *discontinuous*, so the two
+    implementations' ~1e-7 output differences can legitimately round a
+    later layer's K/V write to neighbouring int8 values — the test
+    instead bounds that write divergence to one quantization ULP."""
+    cfg, params, model = _setup(arch)
+    rng = np.random.default_rng(11)
+    page_size, max_len = 4, 32
+    plens = (9, 6)
+    b = len(plens)
+    tbl = _Tables(cfg, b, max_len, page_size)
+    cache = model.init_paged_cache(tbl.pool.num_pages, page_size, b,
+                                   dtype=jnp.float32, kv_quant="q8_0")
+    pos = [0] * b
+    lg = None
+    while any(pos[s] < plens[s] for s in range(b)):
+        toks = np.zeros((b, 4), np.int32)
+        start = np.zeros(b, np.int32)
+        clen = np.zeros(b, np.int32)
+        for s in range(b):
+            n = min(4, plens[s] - pos[s])
+            if n <= 0:
+                continue
+            toks[s, :n] = rng.integers(4, cfg.vocab_size, n)
+            start[s], clen[s] = pos[s], n
+            tbl.ensure(s, pos[s], pos[s] + n)
+            pos[s] += n
+        lg, cache = model.prefill_chunk(
+            params, cache, jnp.asarray(toks), jnp.asarray(start),
+            jnp.asarray(clen), max_len=max_len, block_tables=tbl.asdict(),
+            page_size=page_size, kv_quant="q8_0")
+
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    pos_arr = jnp.asarray(plens, jnp.int32)
+    for i in range(3):
+        for s in range(b):
+            tbl.ensure(s, plens[s] + i, plens[s] + i + 1)
+        lgr, cache_g = model.decode_step_paged(
+            params, cache, tok, pos_arr, tbl.asdict(),
+            page_size=page_size, max_len=max_len, kernel="gather",
+            kv_quant="q8_0")
+        lf, cache_f = model.decode_step_paged(
+            params, cache, tok, pos_arr, tbl.asdict(),
+            page_size=page_size, max_len=max_len, kernel="fused",
+            kv_quant="q8_0")
+        rel = (float(jnp.max(jnp.abs(lgr - lf)))
+               / (float(jnp.max(jnp.abs(lgr))) + 1e-9))
+        assert rel < TOL, (arch, i, rel)
+        for key in cache_g:
+            g, f = np.asarray(cache_g[key]), np.asarray(cache_f[key])
+            if g.dtype == np.int8:         # quantized payloads: <= 1 ULP
+                assert np.max(np.abs(
+                    g[paged.RESERVED_PAGES:].astype(np.int32)
+                    - f[paged.RESERVED_PAGES:].astype(np.int32))) <= 1, \
+                    (arch, key)
+            elif g.dtype.kind in "iu":     # positions: exact
+                assert np.array_equal(g[paged.RESERVED_PAGES:],
+                                      f[paged.RESERVED_PAGES:]), (arch, key)
+            else:                          # scales: float-tolerance
+                assert np.allclose(g[paged.RESERVED_PAGES:],
+                                   f[paged.RESERVED_PAGES:],
+                                   atol=1e-6), (arch, key)
+        cache = cache_g                    # re-sync (see docstring)
+        tok = jnp.argmax(lgr, -1).astype(jnp.int32)
+        pos_arr = pos_arr + 1
+
+
+# ---------------------------------------------------------------------------
+# (c) memory: the quantized pools genuinely shrink
+# ---------------------------------------------------------------------------
+
+def _spec_bytes(specs):
+    import jax
+    return sum(int(np.prod(s.shape)) * s.dtype.itemsize
+               for s in jax.tree_util.tree_leaves(specs))
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_q8_pool_bytes_shrink(arch):
+    """q8_0 pool nbytes ~ 1/4 payload + scales: between 0.20x and 0.30x of
+    the f32 layout for every paged leaf set (all three families)."""
+    _, _, model = _setup(arch)
+    f32_b = _spec_bytes(model.paged_cache_specs(10, 8, 2,
+                                                dtype=jnp.float32))
+    q8_b = _spec_bytes(model.paged_cache_specs(10, 8, 2,
+                                               dtype=jnp.float32,
+                                               kv_quant="q8_0"))
+    assert 0.20 * f32_b < q8_b <= 0.30 * f32_b, (arch, q8_b / f32_b)
+
+
+def test_kv_quant_validation():
+    """Unknown specs and dense-cache use are rejected up front."""
+    _, params, model = _setup("qwen2-1.5b")
+    with pytest.raises(ValueError, match="kv_quant"):
+        paged.check_kv_quant("q4_0")
+    with pytest.raises(ValueError, match="kv_quant"):
+        Engine(model, params, page_size=4, kv_quant="nope")
+    with pytest.raises(ValueError, match="page_size"):
+        Engine(model, params, kv_quant="q8_0")
+    with pytest.raises(ValueError, match="kv_quant"):
+        model.init_paged_cache(4, 4, 1, kv_quant="q2_k")
