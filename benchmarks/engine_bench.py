@@ -16,7 +16,14 @@ model:
   * **kv-quant** — the paged cache with q8_0-quantized pools
     (``Engine(kv_quant="q8_0")``): int8 values + per-row f32 scales read
     in place by the fused q8 kernels — the B/livetok and kvB/tok columns
-    should drop to ~0.27x the f32 paged mode's.
+    should drop to ~0.27x the f32 paged mode's, and
+  * **oversub** — the paged cache under ``scheduler="preempt"`` with the
+    pool deliberately undersized (one request's worst case + one page
+    per extra slot) and two priority classes: the engine must finish
+    every request by swapping the lowest-class/youngest lane's KV pages
+    to host memory; the preempt and q_ms columns report the swap count
+    and mean queue wait, and the throughput delta vs **paged** is the
+    measured preemption overhead.
 
 Reported per mode: tokens/s over the full serve call (prefill + decode),
 decode iterations, mean concurrency, mean admission latency, the
@@ -56,13 +63,30 @@ from repro.serving import Engine, Request, SamplerConfig
 POLICIES = ("fp32", "Q4_K_M", "DQ3_K_M")
 
 
-def _requests(n: int, vocab: int, seed: int = 0) -> list[Request]:
+def _requests(n: int, vocab: int, seed: int = 0,
+              classes: int = 1) -> list[Request]:
     """Mixed-length prompts and generation budgets."""
     rng = np.random.default_rng(seed)
     return [Request(rid=i,
                     prompt=list(rng.integers(4, vocab, 4 + 2 * (i % 5))),
-                    max_new=8 + 4 * (i % 3))
+                    max_new=8 + 4 * (i % 3),
+                    priority=i % classes)
             for i in range(n)]
+
+
+def _tight_pool(eng: Engine, reqs: list[Request], slots: int) -> int:
+    """Pool size for the oversubscribed mode: one request's worst case
+    (the admission floor) plus one page per extra slot — well below the
+    steady-state demand of ``slots`` concurrent lanes, so the preempt
+    scheduler must swap to finish the workload."""
+    from repro.models import paged as _paged
+    horizon = max(len(r.prompt) + r.max_new for r in reqs)
+    need = (_paged.pages_for(horizon, eng.page_size)
+            if eng._has_full else 0)
+    if eng._has_ring:
+        need += _paged.pages_for(min(horizon, eng._ring_len),
+                                 eng.page_size)
+    return _paged.RESERVED_PAGES + need + (slots - 1)
 
 
 def run(requests: int = 8, slots: int = 4, jit: bool = True,
@@ -81,7 +105,7 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
           f"max_len={max_len} page={page_size} chunk={prefill_chunk}")
     print(f"{'policy':9s} {'mode':12s} {'tok':>5s} {'tok/s':>8s} "
           f"{'iters':>6s} {'conc':>5s} {'admit_ms':>9s} {'B/livetok':>10s} "
-          f"{'kvB/tok':>9s} {'speedup':>8s}")
+          f"{'kvB/tok':>9s} {'preempt':>7s} {'q_ms':>8s} {'speedup':>8s}")
     for pol in POLICIES:
         p = (params if pol == "fp32"
              else quantize_params(cfg, params, get_policy(pol)))
@@ -92,6 +116,10 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
         paged_kw = dict(max_len=max_len, sampler=SamplerConfig(greedy=True),
                         jit=jit, page_size=page_size,
                         prefill_chunk=prefill_chunk)
+        oversub = Engine(model, p, kernel="fused", scheduler="preempt",
+                         **paged_kw)
+        oversub.num_pages = _tight_pool(
+            oversub, _requests(requests, cfg.vocab_size, classes=2), slots)
         engines = {
             "sequential": dense,
             "continuous": dense,
@@ -99,6 +127,7 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
             "paged-gather": Engine(model, p, kernel="gather", **paged_kw),
             "kv-quant": Engine(model, p, kernel="fused", kv_quant="q8_0",
                                **paged_kw),
+            "oversub": oversub,
         }
         results = {}
         for mode, eng in engines.items():
@@ -106,8 +135,10 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
             # trace (incl. the sequential mode's per-length prefill shapes
             # and the fused kernels' live-horizon buckets) is compiled
             # before the timed serve
-            warm = _requests(requests, cfg.vocab_size, seed=1)
-            reqs = _requests(requests, cfg.vocab_size)
+            classes = 2 if mode == "oversub" else 1
+            warm = _requests(requests, cfg.vocab_size, seed=1,
+                             classes=classes)
+            reqs = _requests(requests, cfg.vocab_size, classes=classes)
             if mode == "sequential":
                 eng.serve_sequential(warm)
                 eng.serve_sequential(reqs)
@@ -120,11 +151,14 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
                        max(results["sequential"].throughput_tok_s, 1e-9))
             blt = st.bytes_per_live_token if mode != "sequential" else 0.0
             kvt = st.kv_bytes_per_decoded_token
+            queue_ms = (1e3 * np.mean([r.queue_wait_s for r in st.requests])
+                        if st.requests else 0.0)
             print(f"{pol:9s} {mode:12s} {st.total_tokens:5d} "
                   f"{st.throughput_tok_s:8.1f} {st.decode_iterations:6d} "
                   f"{st.mean_concurrency:5.2f} "
                   f"{st.mean_admission_s * 1e3:9.1f} {blt:10.0f} "
-                  f"{kvt:9.0f} {speedup:7.2f}x")
+                  f"{kvt:9.0f} {st.preemptions:7d} {queue_ms:8.1f} "
+                  f"{speedup:7.2f}x")
             rows.append((f"engine/{pol}/{mode}",
                          1e6 / max(st.throughput_tok_s, 1e-9),
                          f"{st.throughput_tok_s:.1f}tok/s"))
@@ -136,6 +170,15 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
                              blt, f"{blt:.0f}B/livetok"))
                 rows.append((f"engine/{pol}/{mode}/kvtraffic",
                              kvt, f"{kvt:.0f}B/dectok"))
+            if mode == "oversub":
+                rows.append((f"engine/{pol}/{mode}/queue",
+                             queue_ms * 1e3, f"{queue_ms:.1f}ms"))
+                rows.append((f"engine/{pol}/{mode}/preemptions",
+                             float(st.preemptions),
+                             f"{st.preemptions}swaps"))
+                rows.append((f"engine/{pol}/{mode}/swapbytes",
+                             float(st.swap_out_bytes),
+                             f"{st.swap_out_bytes}B"))
         if results_out is not None:
             results_out[pol] = dict(results)
     return rows
@@ -191,6 +234,31 @@ def gate(results: dict, requests: int = 8) -> list[str]:
                 f"{kvq.kv_bytes_per_decoded_token:.0f} KV-B/token, above "
                 f"0.30x the f32 paged mode's "
                 f"{pg.kv_bytes_per_decoded_token:.0f}")
+        # oversubscribed preempt scheduler: every request must complete
+        # despite the pool holding a fraction of the steady-state demand,
+        # swap accounting must balance, and queue-time stats must be
+        # reported (they feed the BENCH_engine.json artifact)
+        ov = res["oversub"]
+        if len(ov.requests) != requests:
+            failures.append(
+                f"{pol}: oversubscribed serve completed "
+                f"{len(ov.requests)}/{requests} requests")
+        if ov.pages_leaked:
+            failures.append(
+                f"{pol}: oversubscribed serve leaked {ov.pages_leaked} "
+                f"pages")
+        if ov.preemptions == 0:
+            failures.append(
+                f"{pol}: oversubscribed pool ({ov.num_pages} pages) "
+                f"finished without a single preemption — pool sizing no "
+                f"longer exerts pressure")
+        if ov.swap_out_bytes != ov.swap_in_bytes:
+            failures.append(
+                f"{pol}: swap bytes unbalanced "
+                f"({ov.swap_out_bytes} out vs {ov.swap_in_bytes} in)")
+        if not any(r.queue_wait_s > 0 for r in ov.requests):
+            failures.append(f"{pol}: no queue-time stats recorded in the "
+                            f"oversubscribed mode")
     return failures
 
 

@@ -93,6 +93,17 @@ def _n_active(block_table: jax.Array, active_pages: int | None) -> int:
     return max(1, min(int(active_pages), n_pages))
 
 
+def _lane_bound(lane_pages: jax.Array | None, b: int, nj: int) -> jax.Array:
+    """Per-lane live-page counts, clamped into ``[1, nj]``.
+
+    ``None`` degrades to the batch-wide bound ``nj`` for every lane, so
+    the kernels always run the same (lane-clamped) code path.
+    """
+    if lane_pages is None:
+        return jnp.full((b,), nj, jnp.int32)
+    return jnp.clip(lane_pages.astype(jnp.int32), 1, nj)
+
+
 def _finish(o_ref, acc_ref, l_ref, nj: int):
     """Write the normalised accumulator on the last page step."""
 
@@ -136,6 +147,7 @@ def paged_attn_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                       pos: jax.Array, *, window: int = 0,
                       softcap: float = 0.0, scale: float | None = None,
                       active_pages: int | None = None,
+                      lane_pages: jax.Array | None = None,
                       impl: str | None = None,
                       interpret: bool | None = None) -> jax.Array:
     """Fused one-token paged GQA decode.
@@ -145,11 +157,18 @@ def paged_attn_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     int32 absolute positions (-1 = unwritten); block_table: (B, n_pages)
     int32; pos: (B,) int32 current absolute position.  A key at stored
     position ``t`` is attendable iff ``0 <= t <= pos`` and, when
-    ``window > 0``, ``t > pos - window``.  Returns (B, H, Dv) f32.
+    ``window > 0``, ``t > pos - window``.  ``lane_pages`` (B,) int32
+    optionally bounds each lane's page loop to its *own* live page count
+    (grid steps past it revisit the lane's last resident page — no fresh
+    DMA, so a short lane's reads no longer scale with the batch-max
+    bound).  Every live key must sit inside the first ``lane_pages[i]``
+    logical pages.  Returns (B, H, Dv) f32.
     """
     return _attn_core(
-        q, (k_pool, v_pool), pos_pool, block_table, pos, window=window,
-        softcap=softcap,
+        q, (k_pool, v_pool), pos_pool, block_table, pos,
+        _lane_bound(lane_pages, q.shape[0],
+                    _n_active(block_table, active_pages)),
+        window=window, softcap=softcap,
         scale=(q.shape[-1] ** -0.5 if scale is None else scale),
         nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
         interpret=(_interpret_default() if interpret is None else interpret),
@@ -192,13 +211,20 @@ def _xla_attn(q, ks, vs, ps, pos, *, window, softcap, scale):
 
 @partial(jax.jit, static_argnames=("window", "softcap", "scale", "nj",
                                    "impl", "interpret", "quant"))
-def _attn_core(q, kv, pos_pool, block_table, pos, *,
+def _attn_core(q, kv, pos_pool, block_table, pos, lane_pages, *,
                window: int, softcap: float, scale: float, nj: int,
                impl: str, interpret: bool, quant: bool) -> jax.Array:
     """Shared GQA flash-decode scaffold.  ``kv`` is ``(k_pool, v_pool)``
     (``quant=False``) or ``(k_qs, k_d, v_qs, v_d)`` (``quant=True``); the
     score/mask/online-softmax body is identical — only the page tile
-    loader changes (f32 load vs int8 * per-row scale on the VPU)."""
+    loader changes (f32 load vs int8 * per-row scale on the VPU).
+
+    ``lane_pages`` (B,) int32 in ``[1, nj]`` further bounds each lane:
+    index maps clamp the page lookup to ``min(j, lane_pages[i] - 1)`` so
+    trailing grid steps revisit the lane's own last page (already
+    resident — Pallas skips the copy), and the validity mask gains
+    ``j < lane_pages[i]`` so the revisited page is never double-counted.
+    """
     b, h, d = q.shape
     tp, hkv = kv[0].shape[1], kv[0].shape[2]
     dv = (kv[2] if quant else kv[1]).shape[-1]
@@ -206,12 +232,18 @@ def _attn_core(q, kv, pos_pool, block_table, pos, *,
     if impl == "xla":
         btj = block_table[:, :nj]
         ks, vs = _gathered_kv(kv, btj, quant)
+        ps = pos_pool[btj]                                   # (B, nj, P)
+        # out-of-lane pages read as unwritten (pos = -1), mirroring the
+        # fused kernel's j < lane_pages[i] mask
+        ps = jnp.where(jnp.arange(nj)[None, :, None] < lane_pages[:, None,
+                                                                  None],
+                       ps, -1)
         return _xla_attn(
             q, ks.reshape(b, nj * tp, hkv, d), vs.reshape(b, nj * tp, hkv, dv),
-            pos_pool[btj].reshape(b, nj * tp), pos,
+            ps.reshape(b, nj * tp), pos,
             window=window, softcap=softcap, scale=scale)
 
-    def kernel(bt_ref, pos_ref, q_ref, *refs):
+    def kernel(bt_ref, pos_ref, lp_ref, q_ref, *refs):
         del bt_ref
         *kv_refs, pp_ref, o_ref, m_ref, l_ref, acc_ref = refs
         _init_accumulators(m_ref, l_ref, acc_ref)
@@ -240,6 +272,9 @@ def _attn_core(q, kv, pos_pool, block_table, pos, *,
         valid = (pt >= 0) & (pt <= pb)
         if window:
             valid &= pt > pb - window
+        # clamped trailing steps revisit the lane's last (live!) page:
+        # mask them out so its keys are not folded in twice
+        valid &= pl.program_id(1) < lp_ref[pl.program_id(0)]
         s = jnp.where(valid[None, :], s, NEG_INF)
 
         def v_tile(p):
@@ -251,8 +286,12 @@ def _attn_core(q, kv, pos_pool, block_table, pos, *,
         _online_update(s, valid, v_tile, m_ref, l_ref, acc_ref)
         _finish(o_ref, acc_ref, l_ref, nj)
 
-    page4 = lambda i, j, bt, ps: (bt[i, j], 0, 0, 0)  # noqa: E731
-    page3 = lambda i, j, bt, ps: (bt[i, j], 0, 0)     # noqa: E731
+    # clamp to the lane's last live page: consecutive trailing grid steps
+    # then resolve to the same physical block, which Pallas keeps resident
+    # instead of issuing a fresh DMA
+    pj = lambda i, j, bt, ps, lp: bt[i, jnp.minimum(j, lp[i] - 1)]  # noqa: E731,E501
+    page4 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0, 0, 0)  # noqa: E731,E501
+    page3 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0, 0)     # noqa: E731,E501
     if quant:
         kv_specs = [
             pl.BlockSpec((1, tp, hkv, d), page4),
@@ -266,14 +305,16 @@ def _attn_core(q, kv, pos_pool, block_table, pos, *,
             pl.BlockSpec((1, tp, hkv, dv), page4),
         ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(b, nj),
         in_specs=[
-            pl.BlockSpec((1, h, d), lambda i, j, bt, ps: (i, 0, 0)),
+            pl.BlockSpec((1, h, d), lambda i, j, bt, ps, lp: (i, 0, 0)),
             *kv_specs,
-            pl.BlockSpec((1, tp), lambda i, j, bt, ps: (bt[i, j], 0)),
+            pl.BlockSpec((1, tp),
+                         lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0)),
         ],
-        out_specs=pl.BlockSpec((1, h, dv), lambda i, j, bt, ps: (i, 0, 0)),
+        out_specs=pl.BlockSpec((1, h, dv),
+                               lambda i, j, bt, ps, lp: (i, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((h, _LANES), jnp.float32),
             pltpu.VMEM((h, _LANES), jnp.float32),
@@ -285,7 +326,7 @@ def _attn_core(q, kv, pos_pool, block_table, pos, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, dv), jnp.float32),
         interpret=interpret,
-    )(block_table, pos, q, *kv, pos_pool)
+    )(block_table, pos, lane_pages, q, *kv, pos_pool)
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +337,7 @@ def paged_mla_decode(q_eff: jax.Array, q_rope: jax.Array,
                      ckv_pool: jax.Array, krope_pool: jax.Array,
                      block_table: jax.Array, pos: jax.Array, *,
                      scale: float, active_pages: int | None = None,
+                     lane_pages: jax.Array | None = None,
                      impl: str | None = None,
                      interpret: bool | None = None) -> jax.Array:
     """Fused one-token paged MLA decode, absorbed form.
@@ -304,11 +346,17 @@ def paged_mla_decode(q_eff: jax.Array, q_rope: jax.Array,
     projection; q_rope: (B, H, Dr) decoupled-RoPE query; ckv_pool:
     (num_pages, P, R); krope_pool: (num_pages, P, Dr).  Latent pools carry
     no positions: entry ``j * P + o`` is valid iff its logical index is
-    ``<= pos`` (matching :func:`repro.models.mla.mla_decode`).  Returns the
-    attended latents (B, H, R) f32 — the caller projects out with ``w_vb``.
+    ``<= pos`` (matching :func:`repro.models.mla.mla_decode`).
+    ``lane_pages`` bounds per-lane reads as in :func:`paged_attn_decode`
+    (the positional mask already excludes the clamped revisits — their
+    unclamped logical indices exceed ``pos``).  Returns the attended
+    latents (B, H, R) f32 — the caller projects out with ``w_vb``.
     """
     return _mla_core(
-        q_eff, q_rope, (ckv_pool, krope_pool), block_table, pos, scale=scale,
+        q_eff, q_rope, (ckv_pool, krope_pool), block_table, pos,
+        _lane_bound(lane_pages, q_eff.shape[0],
+                    _n_active(block_table, active_pages)),
+        scale=scale,
         nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
         interpret=(_interpret_default() if interpret is None else interpret),
         quant=False)
@@ -319,6 +367,7 @@ def paged_mla_decode_q8(q_eff: jax.Array, q_rope: jax.Array,
                         kr_qs: jax.Array, kr_d: jax.Array,
                         block_table: jax.Array, pos: jax.Array, *,
                         scale: float, active_pages: int | None = None,
+                        lane_pages: jax.Array | None = None,
                         impl: str | None = None,
                         interpret: bool | None = None) -> jax.Array:
     """:func:`paged_mla_decode` over q8_0 latent/rope pools.
@@ -331,6 +380,8 @@ def paged_mla_decode_q8(q_eff: jax.Array, q_rope: jax.Array,
     """
     return _mla_core(
         q_eff, q_rope, (ckv_qs, ckv_d, kr_qs, kr_d), block_table, pos,
+        _lane_bound(lane_pages, q_eff.shape[0],
+                    _n_active(block_table, active_pages)),
         scale=scale, nj=_n_active(block_table, active_pages),
         impl=_resolve_impl(impl),
         interpret=(_interpret_default() if interpret is None else interpret),
@@ -352,23 +403,26 @@ def _xla_mla(q_eff, q_rope, cs, ks, pos, *, scale):
 
 @partial(jax.jit, static_argnames=("scale", "nj", "impl", "interpret",
                                    "quant"))
-def _mla_core(q_eff, q_rope, kv, block_table, pos, *,
+def _mla_core(q_eff, q_rope, kv, block_table, pos, lane_pages, *,
               scale: float, nj: int, impl: str, interpret: bool,
               quant: bool) -> jax.Array:
     """Shared absorbed-MLA scaffold; ``kv`` is ``(ckv_pool, krope_pool)``
     or the q8_0 quadruple ``(ckv_qs, ckv_d, kr_qs, kr_d)`` (see
-    :func:`_attn_core` for the tile-loader pattern)."""
+    :func:`_attn_core` for the tile-loader / lane-clamp pattern).  MLA
+    validity is positional (unclamped ``kidx <= pos``), so lane-clamped
+    trailing revisits are masked with no extra predicate."""
     b, h, r = q_eff.shape
     dr = q_rope.shape[-1]
     tp = kv[0].shape[1]
     if impl == "xla":
+        del lane_pages  # positional kidx <= pos mask already bounds lanes
         btj = block_table[:, :nj]
         cs, ks = _gathered_kv(kv, btj, quant)
         return _xla_mla(q_eff, q_rope, cs.reshape(b, nj * tp, r),
                         ks.reshape(b, nj * tp, dr), pos, scale=scale)
 
-    def kernel(bt_ref, pos_ref, qe_ref, qr_ref, *refs):
-        del bt_ref
+    def kernel(bt_ref, pos_ref, lp_ref, qe_ref, qr_ref, *refs):
+        del bt_ref, lp_ref
         *kv_refs, o_ref, m_ref, l_ref, acc_ref = refs
         _init_accumulators(m_ref, l_ref, acc_ref)
         if quant:
@@ -392,8 +446,9 @@ def _mla_core(q_eff, q_rope, kv, block_table, pos, *,
             m_ref, l_ref, acc_ref)
         _finish(o_ref, acc_ref, l_ref, nj)
 
-    page3 = lambda i, j, bt, ps: (bt[i, j], 0, 0)  # noqa: E731
-    page2 = lambda i, j, bt, ps: (bt[i, j], 0)     # noqa: E731
+    pj = lambda i, j, bt, ps, lp: bt[i, jnp.minimum(j, lp[i] - 1)]  # noqa: E731,E501
+    page3 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0, 0)  # noqa: E731,E501
+    page2 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0)     # noqa: E731,E501
     if quant:
         kv_specs = [
             pl.BlockSpec((1, tp, r), page3),
@@ -407,14 +462,15 @@ def _mla_core(q_eff, q_rope, kv, block_table, pos, *,
             pl.BlockSpec((1, tp, dr), page3),
         ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(b, nj),
         in_specs=[
-            pl.BlockSpec((1, h, r), lambda i, j, bt, ps: (i, 0, 0)),
-            pl.BlockSpec((1, h, dr), lambda i, j, bt, ps: (i, 0, 0)),
+            pl.BlockSpec((1, h, r), lambda i, j, bt, ps, lp: (i, 0, 0)),
+            pl.BlockSpec((1, h, dr), lambda i, j, bt, ps, lp: (i, 0, 0)),
             *kv_specs,
         ],
-        out_specs=pl.BlockSpec((1, h, r), lambda i, j, bt, ps: (i, 0, 0)),
+        out_specs=pl.BlockSpec((1, h, r),
+                               lambda i, j, bt, ps, lp: (i, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((h, _LANES), jnp.float32),
             pltpu.VMEM((h, _LANES), jnp.float32),
@@ -426,7 +482,7 @@ def _mla_core(q_eff, q_rope, kv, block_table, pos, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
         interpret=interpret,
-    )(block_table, pos, q_eff, q_rope, *kv)
+    )(block_table, pos, lane_pages, q_eff, q_rope, *kv)
 
 
 # ---------------------------------------------------------------------------
@@ -459,6 +515,7 @@ def paged_attn_decode_q8(q: jax.Array, k_qs: jax.Array, k_d: jax.Array,
                          pos: jax.Array, *, window: int = 0,
                          softcap: float = 0.0, scale: float | None = None,
                          active_pages: int | None = None,
+                         lane_pages: jax.Array | None = None,
                          impl: str | None = None,
                          interpret: bool | None = None) -> jax.Array:
     """:func:`paged_attn_decode` over q8_0 page pools.
@@ -471,6 +528,8 @@ def paged_attn_decode_q8(q: jax.Array, k_qs: jax.Array, k_d: jax.Array,
     """
     return _attn_core(
         q, (k_qs, k_d, v_qs, v_d), pos_pool, block_table, pos,
+        _lane_bound(lane_pages, q.shape[0],
+                    _n_active(block_table, active_pages)),
         window=window, softcap=softcap,
         scale=(q.shape[-1] ** -0.5 if scale is None else scale),
         nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),

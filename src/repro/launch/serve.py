@@ -64,6 +64,24 @@ def main(argv=None):
                          "decode page traffic (the fused q8 kernels are "
                          "selected automatically).  Requires "
                          "--page-size > 0")
+    ap.add_argument("--scheduler", default="reserve",
+                    choices=Engine.SCHEDULERS,
+                    help="'reserve' admits only when the pool can hold a "
+                         "request's worst case (never preempts); 'preempt' "
+                         "admits in (priority, arrival) order, lets the "
+                         "pool oversubscribe, and swaps the lowest-class/"
+                         "youngest lane's KV pages to host memory when it "
+                         "runs dry.  Requires --page-size > 0")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="number of request classes; request i gets class "
+                         "i %% N (0 = most urgent).  Only meaningful with "
+                         "--scheduler preempt")
+    ap.add_argument("--oversubscribe", type=float, default=0.0,
+                    help="size the page pool to this fraction of the "
+                         "worst case for --slots lanes (e.g. 0.5 = half), "
+                         "forcing preemption pressure; overrides "
+                         "--num-pages.  Only meaningful with "
+                         "--scheduler preempt")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.6)
@@ -98,18 +116,33 @@ def main(argv=None):
                     sampler=SamplerConfig(args.temperature, args.top_p),
                     page_size=args.page_size, num_pages=args.num_pages,
                     prefill_chunk=args.prefill_chunk, kernel=args.kernel,
-                    kv_quant=args.kv_quant)
+                    kv_quant=args.kv_quant, scheduler=args.scheduler)
+
+    slots = min(args.slots, args.requests)
+    if args.oversubscribe and args.page_size:
+        from ..models import paged
+        n_full = (paged.pages_for(args.max_len, args.page_size)
+                  if engine._has_full else 0)
+        n_ring = (paged.pages_for(engine._ring_len, args.page_size)
+                  if engine._has_ring else 0)
+        worst = paged.RESERVED_PAGES + slots * (n_full + n_ring)
+        # floor: one request's worst case must always fit
+        engine.num_pages = max(paged.RESERVED_PAGES + n_full + n_ring,
+                               int(args.oversubscribe * worst))
+        print(f"oversubscribed pool: {engine.num_pages} pages "
+              f"({args.oversubscribe:.2f}x of the {worst}-page worst case)")
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
                     prompt=list(rng.integers(4, cfg.vocab_size,
                                              rng.integers(4, 12))),
-                    max_new=args.max_new)
+                    max_new=args.max_new,
+                    priority=i % max(args.priority_classes, 1))
             for i in range(args.requests)]
     if args.sequential:
         done = engine.serve_sequential(reqs, seed=args.seed)
     else:
-        done = engine.serve(reqs, slots=min(args.slots, args.requests),
+        done = engine.serve(reqs, slots=slots,
                             seed=args.seed)
     for r in done:
         print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}")

@@ -270,6 +270,7 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                       max_len: int, live: jax.Array | None = None,
                       kernel: str | None = None,
                       active_pages: int | None = None,
+                      lane_pages: jax.Array | None = None,
                       kv_quant: str | None = None,
                       ) -> tuple[jax.Array, dict]:
     """One-token decode against a paged cache.
@@ -281,7 +282,10 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
         the flash-decode Pallas kernel that reads the pages **in place**
         through the block table (no dense view; decode bandwidth scales
         with live pages — see kernels/paged_attn.py).  ``active_pages``
-        optionally bounds the page loop to the batch's live horizon.
+        optionally bounds the page loop to the batch's live horizon and
+        ``lane_pages`` (B,) int32 further bounds each lane to its own
+        live page count (gather ignores both — it is the full-table
+        bitwise reference).
       * ``"gather"`` — reference implementation: gather the exact dense
         view, run the unchanged dense :func:`attn_decode` on it
         (bitwise-identical logits to the contiguous layout), scatter the
@@ -335,7 +339,8 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
         o = paged_attn.paged_attn_decode_q8(
             q[:, 0], kq, kd, vq, vd, new["pos"], block_table, pos,
             window=(cfg.window if local else 0), softcap=cfg.attn_softcap,
-            scale=cfg.head_dim ** -0.5, active_pages=active_pages)
+            scale=cfg.head_dim ** -0.5, active_pages=active_pages,
+            lane_pages=lane_pages)
         o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
         return linear(p["o_proj"], o), new
 
@@ -350,7 +355,8 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     o = paged_attn.paged_attn_decode(
         q[:, 0], new["k"], new["v"], new["pos"], block_table, pos,
         window=(cfg.window if local else 0), softcap=cfg.attn_softcap,
-        scale=cfg.head_dim ** -0.5, active_pages=active_pages)
+        scale=cfg.head_dim ** -0.5, active_pages=active_pages,
+        lane_pages=lane_pages)
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
     return linear(p["o_proj"], o), new
 

@@ -320,6 +320,7 @@ class Model:
                           *, page_size: int, max_len: int, live=None,
                           kernel: str | None = None,
                           active_pages: tuple[int, int] | None = None,
+                          lane_pages=None,
                           kv_quant: str | None = None):
         """One decode step against a paged cache.
 
@@ -333,15 +334,18 @@ class Model:
         same per-layer decode on it).  ``active_pages``: optional static
         ``(n_full_pages, n_ring_pages)`` bound on the fused kernels' page
         loops — the serve loop passes the batch's bucketed live horizon so
-        decode bandwidth scales with live tokens.  ``kv_quant``: the cache
-        quantization spec the pools were initialised with — the matching
-        fused q8 kernels (or dequantizing gather reference) are selected
-        automatically.
+        decode bandwidth scales with live tokens.  ``lane_pages``:
+        optional ``{"full": (B,), "ring": (B,)}`` int32 per-lane live page
+        counts, a further per-lane refinement of ``active_pages`` (a short
+        lane's fused-kernel reads then stop scaling with the batch's
+        longest lane).  ``kv_quant``: the cache quantization spec the
+        pools were initialised with — the matching fused q8 kernels (or
+        dequantizing gather reference) are selected automatically.
         """
         return self.decode_step(
             params, cache, tokens, pos,
             paged=(block_tables, page_size, max_len, kernel, active_pages,
-                   kv_quant),
+                   kv_quant, lane_pages),
             live=live)
 
     def prefill_chunk(self, params, cache, tokens, start, chunk_len, *,

@@ -163,6 +163,37 @@ def scatter_chunk_q8(qs_pool: jnp.ndarray, d_pool: jnp.ndarray,
             scatter_chunk(d_pool, block_table, idx, d, ok))
 
 
+def extract_pages(pool: jnp.ndarray, page_ids, axis: int = 0) -> jnp.ndarray:
+    """Gather whole physical pages ``(n, P, ...)`` for swap-out.
+
+    ``page_ids`` is a host list/array of physical page ids (any leaf kind:
+    f32 payload, int8 ``qs``, f32 ``d`` scales, or ``pos`` rows).  The
+    returned array is device-side; the caller ``jax.device_get``s it to
+    host memory.  Rows are copied verbatim — for q8_0 leaf pairs the int8
+    payload and scale rows round-trip bit-exactly, so swap-out/in never
+    re-quantizes (see tests/test_kv_quant.py swap-parity oracles).
+    ``axis`` is the page axis: 0 for per-layer pools, 1 for scan-stacked
+    pools shaped ``(layers, num_pages, ...)``.
+    """
+    ids = jnp.asarray(page_ids, jnp.int32)
+    return pool[ids] if axis == 0 else pool[:, ids]
+
+
+def inject_pages(pool: jnp.ndarray, page_ids, rows,
+                 axis: int = 0) -> jnp.ndarray:
+    """Scatter saved page rows back into (possibly different) physical ids.
+
+    Inverse of :func:`extract_pages`: ``rows`` has the same trailing shape
+    as one page slice of ``pool``; ``page_ids`` must be freshly allocated
+    pages (never NULL/GARBAGE — the reserved invariants are the caller's
+    to keep).  ``axis`` is the page axis, as in :func:`extract_pages`.
+    """
+    ids = jnp.asarray(page_ids, jnp.int32)
+    rows = jnp.asarray(rows, pool.dtype)
+    return (pool.at[ids].set(rows) if axis == 0
+            else pool.at[:, ids].set(rows))
+
+
 def chunk_write_plan(idx: jnp.ndarray, valid: jnp.ndarray, length: int):
     """Resolve duplicate in-chunk writes to the same logical index.
 

@@ -83,15 +83,17 @@ def decode_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
     """One-token decode through one layer.  Returns (x, new_cache).
 
     ``paged``: optional ``(block_tables, page_size, max_len, kernel,
-    active_pages, kv_quant)`` — attention and MLA caches are then page
-    pools indexed through the slot block tables (``block_tables["full"]``
-    / ``["ring"]``); recurrent state is a dense passthrough either way.
-    ``kernel`` picks fused-Pallas vs gather-reference decode (None = env
-    default); ``active_pages`` is an optional ``(n_full, n_ring)`` static
-    bound on the page loop for the fused kernel; ``kv_quant`` selects the
-    quantized pool layout (the matching fused q8 kernels are picked
-    automatically).  ``live`` (B,) bool: rows flagged False (free /
-    mid-prefill serve lanes) leave the cache untouched.
+    active_pages, kv_quant, lane_pages)`` — attention and MLA caches are
+    then page pools indexed through the slot block tables
+    (``block_tables["full"]`` / ``["ring"]``); recurrent state is a dense
+    passthrough either way.  ``kernel`` picks fused-Pallas vs
+    gather-reference decode (None = env default); ``active_pages`` is an
+    optional ``(n_full, n_ring)`` static bound on the page loop for the
+    fused kernel and ``lane_pages`` an optional ``{"full": (B,), "ring":
+    (B,)}`` per-lane refinement of it; ``kv_quant`` selects the quantized
+    pool layout (the matching fused q8 kernels are picked automatically).
+    ``live`` (B,) bool: rows flagged False (free / mid-prefill serve
+    lanes) leave the cache untouched.
     """
     kind = cfg.block_kind(layer)
     cross = {k: cache.pop(k) for k in ("cross_k", "cross_v")
@@ -100,22 +102,26 @@ def decode_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
     if kind in ("attn", "local_attn"):
         local = kind == "local_attn"
         if paged is not None:
-            block_tables, _, max_len, kernel, active, kv_quant = paged
+            (block_tables, _, max_len, kernel, active, kv_quant,
+             lane_pages) = paged
             # MLA latents always span the full horizon (no ring bound)
             use_ring = local and not cfg.mla
-            bt = block_tables["ring" if use_ring else "full"]
+            tbl_kind = "ring" if use_ring else "full"
+            bt = block_tables[tbl_kind]
             ap = None
             if active is not None:
                 ap = active[1] if use_ring else active[0]
                 ap = ap or None
+            lp = lane_pages[tbl_kind] if lane_pages is not None else None
             if cfg.mla:
                 delta, cache_new = mla.mla_decode_paged(
                     p, cfg, x, cache, pos, bt, max_len=max_len, live=live,
-                    kernel=kernel, active_pages=ap, kv_quant=kv_quant)
+                    kernel=kernel, active_pages=ap, lane_pages=lp,
+                    kv_quant=kv_quant)
             else:
                 delta, cache_new = attention.attn_decode_paged(
                     p, cfg, x, cache, pos, bt, local=local, max_len=max_len,
-                    live=live, kernel=kernel, active_pages=ap,
+                    live=live, kernel=kernel, active_pages=ap, lane_pages=lp,
                     kv_quant=kv_quant)
         elif cfg.mla:
             delta, cache_new = mla.mla_decode(p, cfg, x, cache, pos,

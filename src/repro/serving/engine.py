@@ -73,6 +73,7 @@ The multi-pod variant shards the same functions via ``parallel.sharding``
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
 from collections import deque
 from functools import partial
@@ -158,6 +159,8 @@ class RequestStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     decode_tokens: int = 0
+    priority: int = 0
+    preemptions: int = 0         # times this request was swapped/kicked out
 
     @property
     def decode_tok_s(self) -> float:
@@ -176,6 +179,7 @@ class Request:
     rid: int
     prompt: list[int]
     max_new: int
+    priority: int = 0            # request class: smaller = more urgent
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
     stats: RequestStats | None = None
@@ -212,6 +216,17 @@ class EngineStats:
     # the per-page bytes are the true quantized layout's (int8 + scales).
     decode_kv_bytes: int = 0
     decoded_tokens: int = 0              # live-lane tokens over all iterations
+    # preemption scheduler (scheduler="preempt"; all zero under "reserve")
+    scheduler: str = "reserve"
+    preemptions: int = 0                 # lanes swapped/kicked out, total
+    swap_out_bytes: int = 0              # KV bytes device_get to host
+    swap_in_bytes: int = 0               # KV bytes injected back on resume
+    # per-iteration scheduler snapshots, recorded after the admission
+    # phase: {"queued": [(prio, seq, rid, pages_needed)], "active":
+    # [(prio, seq, rid, pages_held)], "free_pages": int, "free_slots":
+    # int}.  tests/test_scheduler.py checks priority-inversion freedom
+    # as an invariant over these observable states.
+    sched_trace: list[dict] = dataclasses.field(default_factory=list)
 
     @property
     def max_concurrency(self) -> int:
@@ -259,6 +274,23 @@ class EngineStats:
         the memory-traffic figure the fused paged kernels drive down."""
         return self.decode_kv_bytes / max(self.decoded_tokens, 1)
 
+    @property
+    def class_stats(self) -> dict[int, dict[str, float]]:
+        """Per-priority-class SLO aggregates: mean queue wait, mean
+        admission (TTFT) and preemption count over completed requests."""
+        by: dict[int, list[RequestStats]] = {}
+        for r in self.requests:
+            by.setdefault(r.priority, []).append(r)
+        return {
+            prio: {
+                "n": len(rs),
+                "mean_queue_wait_s": sum(r.queue_wait_s for r in rs) / len(rs),
+                "mean_admission_s": sum(r.admission_s for r in rs) / len(rs),
+                "preemptions": sum(r.preemptions for r in rs),
+            }
+            for prio, rs in sorted(by.items())
+        }
+
     def report(self) -> str:
         lines = [
             f"{len(self.requests)} requests, {self.total_tokens} tokens in "
@@ -282,6 +314,17 @@ class EngineStats:
             lines.append(
                 f"decode reads {self.kv_bytes_per_decoded_token:.0f} "
                 f"KV-B/decoded-token over {self.decoded_tokens} tokens")
+        if self.preemptions or self.scheduler == "preempt":
+            lines.append(
+                f"scheduler {self.scheduler}: {self.preemptions} preemptions, "
+                f"swapped out {self.swap_out_bytes} B / in "
+                f"{self.swap_in_bytes} B")
+            for prio, cs in self.class_stats.items():
+                lines.append(
+                    f"  class {prio}: {cs['n']} reqs, queue "
+                    f"{cs['mean_queue_wait_s'] * 1e3:.1f}ms, TTFT "
+                    f"{cs['mean_admission_s'] * 1e3:.1f}ms, "
+                    f"{cs['preemptions']:.0f} preemptions")
         for r in sorted(self.requests, key=lambda r: r.rid):
             lines.append(
                 f"  req {r.rid}: wait {r.queue_wait_s * 1e3:.1f}ms  "
@@ -297,7 +340,8 @@ class _Slot:
     """Host-side bookkeeping for one decode lane."""
 
     __slots__ = ("req", "tok", "pos", "n_out", "state", "prefill_pos",
-                 "req_key", "pages_full", "pages_ring", "reserve_remaining")
+                 "req_key", "pages_full", "pages_ring", "reserve_remaining",
+                 "seq")
 
     def __init__(self):
         self.req: Request | None = None
@@ -310,10 +354,55 @@ class _Slot:
         self.pages_full: list[int] = []
         self.pages_ring: list[int] = []
         self.reserve_remaining = 0  # worst-case pages not yet allocated
+        self.seq = 0     # admission sequence (FIFO rank within a class)
 
     @property
     def live(self) -> bool:
         return self.state == _LIVE
+
+    @property
+    def key(self) -> tuple[int, int]:
+        """Scheduling rank: (class, arrival seq) — smaller runs first;
+        preemption evicts the largest key (lowest class, youngest)."""
+        return (self.req.priority, self.seq)
+
+
+@dataclasses.dataclass
+class _Swapped:
+    """Host-side copy of a preempted LIVE lane (scheduler="preempt").
+
+    Holds everything needed to resume the lane bit-exactly on any slot:
+    the request scalars, the block-table rows (old physical ids — remapped
+    to freshly allocated pages on swap-in), the lane's page rows for every
+    pool leaf (f32 payloads, q8_0 int8+scale pairs and ``pos`` rows are
+    all copied verbatim), and the slot's dense passthrough rows
+    (recurrent state).  Swap-out captures pages *before* the scrub, so a
+    resumed lane's gathered dense view is bitwise identical to never
+    having been preempted.
+    """
+
+    req: Request
+    seq: int
+    tok: int
+    pos: int
+    n_out: int
+    req_key: Any
+    pages_full: list[int]                # old physical ids, allocation order
+    pages_ring: list[int]
+    bt_full: np.ndarray                  # old block-table rows (logical map)
+    bt_ring: np.ndarray
+    pool_rows: dict[str, np.ndarray]     # leaf -> (n_pages_held, P, ...)
+    slot_rows: dict[str, np.ndarray]     # leaf -> this slot's dense row
+    t_enq: float = 0.0                   # when it went back on the queue
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.pages_full) + len(self.pages_ring)
+
+    @property
+    def nbytes(self) -> int:
+        return (sum(a.nbytes for a in self.pool_rows.values())
+                + sum(a.nbytes for a in self.slot_rows.values()))
 
 
 class Engine:
@@ -330,13 +419,33 @@ class Engine:
     less cache memory and decode page traffic; requires ``page_size > 0``)
     — the fused q8 kernels are selected automatically and
     ``EngineStats`` reports the true quantized page bytes / kvB/tok.
+
+    ``scheduler`` picks the admission policy:
+
+      * ``"reserve"`` (default, the original behaviour) — admission
+        reserves each request's worst-case page count up front, so the
+        pool can never run dry mid-serve; queued requests wait for
+        retirements, and a pool smaller than one request's worst case
+        raises.
+      * ``"preempt"`` — priority classes (``Request.priority``, smaller =
+        more urgent; FIFO within a class) with preemption and KV
+        swap-out.  Admission reserves nothing, so the pool can be
+        *oversubscribed*: when pages run out the scheduler evicts the
+        lowest-class / youngest lane, copying its pages (f32 or q8_0
+        leaves verbatim, plus recurrent rows) to host memory via
+        ``jax.device_get``; the victim re-enters the queue at its
+        original rank and is swapped back in bit-exactly once pages free
+        up (mid-prefill victims restart their — deterministic — chunked
+        prefill instead).  Requires ``page_size > 0``.
     """
+
+    SCHEDULERS = ("reserve", "preempt")
 
     def __init__(self, model: Model, params: Any, *, max_len: int = 512,
                  eos_id: int = -1, sampler: SamplerConfig = SamplerConfig(),
                  jit: bool = True, page_size: int = 0, num_pages: int = 0,
                  prefill_chunk: int = 0, kernel: str | None = None,
-                 kv_quant: str | None = None):
+                 kv_quant: str | None = None, scheduler: str = "reserve"):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -348,6 +457,13 @@ class Engine:
         if self.kv_quant and not page_size:
             raise ValueError("kv_quant requires the paged cache "
                              "(page_size > 0)")
+        if scheduler not in self.SCHEDULERS:
+            raise ValueError(f"unknown scheduler {scheduler!r}; "
+                             f"supported: {self.SCHEDULERS}")
+        if scheduler == "preempt" and not page_size:
+            raise ValueError("scheduler='preempt' swaps KV pages and "
+                             "requires the paged cache (page_size > 0)")
+        self.scheduler = scheduler
         self.kernel = kernel or default_paged_kernel()
         if self.kernel not in ("fused", "gather"):
             raise ValueError(f"unknown paged decode kernel {self.kernel!r}")
@@ -454,15 +570,48 @@ class Engine:
         """Continuous-batching loop: admit (chunked) → batched decode →
         retire.  Returns the requests in completion order;
         ``self.last_stats`` holds the :class:`EngineStats` for the call.
+
+        With ``scheduler="preempt"`` admission runs in ``(priority,
+        arrival)`` order and the page pool may be oversubscribed: when it
+        runs dry the lowest-class / youngest lane is evicted (KV pages
+        swapped to host memory) and re-enters the queue at its original
+        rank — see the class docstring.
         """
         t_start = time.perf_counter()
         stats = EngineStats()
-        queue: deque[Request] = deque(requests)
+        stats.scheduler = self.scheduler
+        preempt = self.scheduler == "preempt"
         lanes = [_Slot() for _ in range(slots)]
         done: list[Request] = []
         use_paged = self.page_size > 0
         P = self.page_size
+        C = self.prefill_chunk
         model, dtype = self.model, self.model.dtype
+
+        # reserve mode: plain FIFO deque.  preempt mode: a (priority,
+        # seq, tick) heap — seq is the arrival rank, so FIFO within a
+        # class, and a preempted request re-enters at its ORIGINAL rank.
+        queue: deque[Request] = deque()
+        pqueue: list[tuple[int, int, int, Any]] = []
+        enq_t: dict[int, float] = {}     # seq -> last time it was enqueued
+        tick = 0
+
+        def requeue(item: Any, prio: int, seq: int) -> None:
+            nonlocal tick
+            tick += 1
+            heapq.heappush(pqueue, (prio, seq, tick, item))
+            enq_t[seq] = time.perf_counter()
+
+        if preempt:
+            for i, req in enumerate(requests):
+                req.stats = None     # re-serving restarts its accounting
+                requeue(req, req.priority, i)
+                enq_t[i] = t_start
+        else:
+            queue = deque(requests)
+
+        def pending() -> bool:
+            return bool(pqueue) if preempt else bool(queue)
 
         n_full = paged.pages_for(self.max_len, P) if (use_paged
                                                       and self._has_full) else 0
@@ -487,8 +636,45 @@ class Engine:
         stats.dense_cache_bytes = self._dense_cache_bytes(slots)
         dense_kv_read = 0 if use_paged else self._dense_kv_read_bytes(slots)
 
+        # swap-out needs to know which cache leaves are page pools (swap
+        # whole pages) vs per-slot dense passthrough (swap the slot row):
+        # pool leaves are exactly those whose spec shape changes with
+        # num_pages (robust even when num_pages == slots)
+        pool_axis = 1 if model.scan else 0
+        pool_leaves: list[str] = []
+        slot_leaves: list[str] = []
+        if use_paged and preempt:
+            r = paged.RESERVED_PAGES
+            lo_specs = model.paged_cache_specs(r, P, slots, dtype=dtype,
+                                               kv_quant=self.kv_quant)
+            hi_specs = model.paged_cache_specs(r + 1, P, slots, dtype=dtype,
+                                               kv_quant=self.kv_quant)
+            pool_leaves = sorted(k for k in lo_specs
+                                 if lo_specs[k].shape != hi_specs[k].shape)
+            slot_leaves = sorted(k for k in lo_specs
+                                 if lo_specs[k].shape == hi_specs[k].shape)
+
         def tables():
             return {"full": jnp.asarray(bt_full), "ring": jnp.asarray(bt_ring)}
+
+        def free_pages() -> int:
+            return (pool.capacity - pool.in_use) if pool is not None else 0
+
+        def first_chunk_pages(plen: int) -> int:
+            """Pages the first prefill chunk of a ``plen``-token prompt
+            allocates — the admission bar under scheduler="preempt"
+            (later chunks/steps preempt for pages as they go)."""
+            if not use_paged:
+                return 0
+            span = min(C, plen)
+            need = paged.pages_for(span, P) if n_full else 0
+            if n_ring:
+                need += paged.pages_for(min(span, self._ring_len), P)
+            return need
+
+        def need_now(item: Any) -> int:
+            return (item.n_pages if isinstance(item, _Swapped)
+                    else first_chunk_pages(len(item.prompt)))
 
         def worst_pages(plen: int, max_new: int) -> int:
             """Worst-case pages one request can ever hold: admission
@@ -504,46 +690,71 @@ class Engine:
                       else paged.pages_for(horizon, P))
             return wf + wr
 
-        def ensure_pages(lane: _Slot, s: int, lo: int, hi: int) -> None:
-            """Allocate pages covering logical positions [lo, hi)
-            (admission path: chunk spans are per-lane anyway)."""
-            if not use_paged or hi <= lo:
-                return
+        def _chunk_page_targets(s: int, lo: int, hi: int):
+            """(table, logical page) slots [lo, hi) still needs pages for."""
+            targets: list[tuple[np.ndarray, int, bool]] = []
             if n_full:
-                for lp in range(lo // P, (hi - 1) // P + 1):
-                    if bt_full[s, lp] < paged.RESERVED_PAGES:
-                        bt_full[s, lp] = pool.alloc()
-                        lane.pages_full.append(bt_full[s, lp])
-                        lane.reserve_remaining -= 1
+                targets += [(bt_full, lp, True)
+                            for lp in range(lo // P, (hi - 1) // P + 1)
+                            if bt_full[s, lp] < paged.RESERVED_PAGES]
             if n_ring:
-                ring_pages = {(i % self._ring_len) // P
-                              for i in range(lo, hi)}
-                for lp in ring_pages:
-                    if bt_ring[s, lp] < paged.RESERVED_PAGES:
-                        bt_ring[s, lp] = pool.alloc()
-                        lane.pages_ring.append(bt_ring[s, lp])
-                        lane.reserve_remaining -= 1
+                targets += [(bt_ring, lp, False)
+                            for lp in sorted({(i % self._ring_len) // P
+                                              for i in range(lo, hi)})
+                            if bt_ring[s, lp] < paged.RESERVED_PAGES]
+            return targets
+
+        def ensure_pages(lane: _Slot, s: int, lo: int, hi: int) -> bool:
+            """Allocate pages covering logical positions [lo, hi)
+            (admission path: chunk spans are per-lane anyway).  Under
+            scheduler="preempt" a dry pool first evicts worse-ranked
+            lanes; if that cannot cover the span, THIS lane is kicked
+            back to the queue (returns False — skip its chunk)."""
+            if not use_paged or hi <= lo:
+                return True
+            targets = _chunk_page_targets(s, lo, hi)
+            if preempt and len(targets) > free_pages():
+                if not free_up(len(targets), lane.key):
+                    preempt_lane(s)
+                    return False
+            for table, lp, is_full in targets:
+                table[s, lp] = pool.alloc()
+                (lane.pages_full if is_full
+                 else lane.pages_ring).append(table[s, lp])
+                lane.reserve_remaining -= 1
+            return True
 
         def alloc_decode_pages(live_s: np.ndarray) -> None:
             """Decode-time allocation, batched: each live lane writes one
             token this step, so it needs at most one new full + one new
             ring page.  The boundary-crossing masks are computed vectorized
-            over all lanes and ONE allocator call covers the whole step
-            (ROADMAP follow-up: cut the per-lane host loop)."""
+            over all lanes and ONE allocator call covers the whole step.
+            Under scheduler="preempt" a dry pool evicts the worst-ranked
+            active lane (lowest class, youngest) and retries — the
+            best-ranked lane can always progress."""
             if not use_paged or live_s.size == 0:
                 return
-            posv = np.array([lanes[s].pos for s in live_s], np.int32)
-            want: list[tuple[np.ndarray, int, int, bool]] = []
-            if n_full:
-                lp = posv // P
-                need = bt_full[live_s, lp] < paged.RESERVED_PAGES
-                want += [(bt_full, s, l, True)
-                         for s, l in zip(live_s[need], lp[need])]
-            if n_ring:
-                lp = (posv % self._ring_len) // P
-                need = bt_ring[live_s, lp] < paged.RESERVED_PAGES
-                want += [(bt_ring, s, l, False)
-                         for s, l in zip(live_s[need], lp[need])]
+            while True:
+                live_s = np.array([s for s in live_s if lanes[s].live],
+                                  np.int32)
+                if live_s.size == 0:
+                    return
+                posv = np.array([lanes[s].pos for s in live_s], np.int32)
+                want: list[tuple[np.ndarray, int, int, bool]] = []
+                if n_full:
+                    lp = posv // P
+                    need = bt_full[live_s, lp] < paged.RESERVED_PAGES
+                    want += [(bt_full, s, l, True)
+                             for s, l in zip(live_s[need], lp[need])]
+                if n_ring:
+                    lp = (posv % self._ring_len) // P
+                    need = bt_ring[live_s, lp] < paged.RESERVED_PAGES
+                    want += [(bt_ring, s, l, False)
+                             for s, l in zip(live_s[need], lp[need])]
+                if not preempt or len(want) <= free_pages():
+                    break
+                active = [s for s, l in enumerate(lanes) if l.state != _FREE]
+                preempt_lane(max(active, key=lambda s: lanes[s].key))
             for (table, s, lp, is_full), pid in zip(
                     want, pool.alloc_many(len(want))):
                 table[s, lp] = pid
@@ -580,42 +791,200 @@ class Engine:
             stats.total_tokens += len(req.out)
             done.append(req)
 
-        C = self.prefill_chunk
-        while queue or any(s.state != _FREE for s in lanes):
+        def preempt_lane(s: int) -> None:
+            """Evict lane ``s`` back to the queue (scheduler="preempt").
+
+            LIVE lanes swap their KV out to host memory: every pool leaf's
+            rows at the lane's physical pages are copied verbatim (pos rows
+            included — captured BEFORE the release scrub), plus the slot's
+            dense passthrough rows.  PREFILL lanes hold no sampled state
+            yet, so they just restart prefill from scratch — chunk
+            boundaries are deterministic, so the restarted pass writes the
+            same cache contents.  Either way the original arrival rank is
+            kept, so the request re-enters the queue where it left.
+            """
+            lane = lanes[s]
+            req, seq = lane.req, lane.seq
+            stats.preemptions += 1
+            req.stats.preemptions += 1
+            if lane.state == _LIVE:
+                ids = lane.pages_full + lane.pages_ring
+                pool_rows = {
+                    k: jax.device_get(paged.extract_pages(
+                        cache[k], ids, axis=pool_axis))
+                    for k in pool_leaves} if ids else {}
+                slot_rows = {
+                    k: jax.device_get(cache[k][:, s] if pool_axis
+                                      else cache[k][s])
+                    for k in slot_leaves}
+                sw = _Swapped(
+                    req=req, seq=seq, tok=lane.tok, pos=lane.pos,
+                    n_out=lane.n_out, req_key=lane.req_key,
+                    pages_full=list(lane.pages_full),
+                    pages_ring=list(lane.pages_ring),
+                    bt_full=bt_full[s].copy(), bt_ring=bt_ring[s].copy(),
+                    pool_rows=pool_rows, slot_rows=slot_rows)
+                stats.swap_out_bytes += sw.nbytes
+                item: Any = sw
+            else:
+                req.out = []
+                item = req
+            release(lane, s)
+            requeue(item, req.priority, seq)
+
+        def swap_in(lane: _Slot, s: int, sw: _Swapped, seq: int) -> None:
+            """Resume a swapped-out lane on slot ``s``: allocate fresh
+            pages (all-or-nothing), remap the saved block-table rows old
+            id -> new id, and scatter the saved rows back.  Attention only
+            reads pages through the block table, so the new physical
+            layout is invisible — outputs stay bitwise identical."""
+            nonlocal cache
+            new_ids = pool.alloc_many(sw.n_pages)
+            m = {old: new for old, new in
+                 zip(sw.pages_full + sw.pages_ring, new_ids)}
+            bt_full[s, :] = [m.get(int(x), int(x)) for x in sw.bt_full]
+            bt_ring[s, :] = [m.get(int(x), int(x)) for x in sw.bt_ring]
+            upd = {k: paged.inject_pages(cache[k], new_ids, rows,
+                                         axis=pool_axis)
+                   for k, rows in sw.pool_rows.items()}
+            for k, row in sw.slot_rows.items():
+                upd[k] = (cache[k].at[:, s].set(row) if pool_axis
+                          else cache[k].at[s].set(row))
+            cache = dict(cache, **upd)
+            req = sw.req
+            lane.req, lane.state = req, _LIVE
+            lane.tok, lane.pos, lane.n_out = sw.tok, sw.pos, sw.n_out
+            lane.req_key, lane.seq = sw.req_key, seq
+            lane.prefill_pos = len(req.prompt)
+            lane.pages_full = [m[p] for p in sw.pages_full]
+            lane.pages_ring = [m[p] for p in sw.pages_ring]
+            lane.reserve_remaining = 0
+            stats.swap_in_bytes += sw.nbytes
+            req.stats.queue_wait_s += time.perf_counter() - enq_t[seq]
+
+        def free_up(need: int, key: tuple[int, int]) -> bool:
+            """Make ``need`` pages available for a request ranked ``key``
+            by evicting strictly worse-ranked lanes, worst first.  All or
+            nothing: if the eligible victims can't cover the shortfall,
+            nothing is evicted and the caller waits/queues instead."""
+            if free_pages() >= need:
+                return True
+            victims = sorted(
+                (s for s, l in enumerate(lanes)
+                 if l.state != _FREE and l.key > key),
+                key=lambda s: lanes[s].key, reverse=True)
+            held = sum(len(lanes[s].pages_full) + len(lanes[s].pages_ring)
+                       for s in victims)
+            if free_pages() + held < need:
+                return False
+            for s in victims:
+                if free_pages() >= need:
+                    break
+                preempt_lane(s)
+            return True
+
+        while pending() or any(s.state != _FREE for s in lanes):
             # -- admission: claim free slots for queued requests -------------
-            for s, lane in enumerate(lanes):
-                if lane.state != _FREE or not queue:
-                    continue
-                n = len(queue[0].prompt)
-                if n + 1 > self.max_len:
-                    raise ValueError(
-                        f"prompt of {n} tokens leaves no room to decode "
-                        f"within max_len={self.max_len}")
-                need = worst_pages(n, queue[0].max_new)
-                if use_paged:
-                    if need > pool.capacity:
+            if preempt:
+                # slot preemption: a queued request of a strictly better
+                # CLASS may bump a running lane off its slot (same-class
+                # arrivals never do — FIFO within a class)
+                while pqueue and not any(l.state == _FREE for l in lanes):
+                    worst = max(range(slots), key=lambda s: lanes[s].key)
+                    if pqueue[0][0] >= lanes[worst].req.priority:
+                        break
+                    preempt_lane(worst)
+                for s, lane in enumerate(lanes):
+                    if lane.state != _FREE or not pqueue:
+                        continue
+                    prio, seq, _, item = pqueue[0]
+                    req = item.req if isinstance(item, _Swapped) else item
+                    n = len(req.prompt)
+                    if n + 1 > self.max_len:
                         raise ValueError(
-                            f"request needs up to {need} pages but the pool "
-                            f"holds {pool.capacity}; raise num_pages or "
-                            f"max_len/page_size")
-                    outstanding = sum(l.reserve_remaining for l in lanes)
-                    if (pool.capacity - pool.in_use - outstanding) < need:
-                        break  # wait for retirements to free pages
-                req = queue.popleft()
-                lane.reserve_remaining = need
-                req.out = []  # rebind: serving a request restarts its output
-                req.stats = RequestStats(
-                    rid=req.rid,
-                    queue_wait_s=time.perf_counter() - t_start)
-                if use_paged:
-                    # unallocated logical pages read the (never written)
-                    # NULL page: pos = -1, masked like unwritten entries
-                    bt_full[s, :] = paged.NULL_PAGE
-                    bt_ring[s, :] = paged.NULL_PAGE
-                lane.req, lane.state = req, _PREFILL
-                lane.prefill_pos, lane.n_out = 0, 0
-                lane.req_key = (None if self.sampler.greedy
-                                else request_key(seed, req.rid))
+                            f"prompt of {n} tokens leaves no room to decode "
+                            f"within max_len={self.max_len}")
+                    if use_paged:
+                        worst = worst_pages(n, req.max_new)
+                        if worst > pool.capacity:
+                            raise ValueError(
+                                f"request needs up to {worst} pages but the "
+                                f"pool holds {pool.capacity}; raise "
+                                f"num_pages or max_len/page_size")
+                        # no worst-case reservation: admit whenever the
+                        # request's IMMEDIATE need fits (evicting worse
+                        # lanes if it must) — later shortfalls preempt
+                        if not free_up(need_now(item), (prio, seq)):
+                            break  # pages held by better-ranked lanes
+                    heapq.heappop(pqueue)
+                    now = time.perf_counter()
+                    if isinstance(item, _Swapped):
+                        swap_in(lane, s, item, seq)
+                        continue
+                    req.out = []  # (re)start: output accumulates from zero
+                    if req.stats is None:
+                        req.stats = RequestStats(
+                            rid=req.rid, priority=req.priority,
+                            queue_wait_s=now - enq_t[seq])
+                    else:  # restarted prefill: accumulate the re-queue wait
+                        req.stats.queue_wait_s += now - enq_t[seq]
+                    if use_paged:
+                        bt_full[s, :] = paged.NULL_PAGE
+                        bt_ring[s, :] = paged.NULL_PAGE
+                    lane.req, lane.state = req, _PREFILL
+                    lane.prefill_pos, lane.n_out = 0, 0
+                    lane.seq = seq
+                    lane.req_key = (None if self.sampler.greedy
+                                    else request_key(seed, req.rid))
+            else:
+                for s, lane in enumerate(lanes):
+                    if lane.state != _FREE or not queue:
+                        continue
+                    n = len(queue[0].prompt)
+                    if n + 1 > self.max_len:
+                        raise ValueError(
+                            f"prompt of {n} tokens leaves no room to decode "
+                            f"within max_len={self.max_len}")
+                    need = worst_pages(n, queue[0].max_new)
+                    if use_paged:
+                        if need > pool.capacity:
+                            raise ValueError(
+                                f"request needs up to {need} pages but the "
+                                f"pool holds {pool.capacity}; raise "
+                                f"num_pages or max_len/page_size")
+                        outstanding = sum(l.reserve_remaining for l in lanes)
+                        if (pool.capacity - pool.in_use - outstanding) < need:
+                            break  # wait for retirements to free pages
+                    req = queue.popleft()
+                    lane.reserve_remaining = need
+                    req.out = []  # rebind: serving restarts its output
+                    req.stats = RequestStats(
+                        rid=req.rid, priority=req.priority,
+                        queue_wait_s=time.perf_counter() - t_start)
+                    if use_paged:
+                        # unallocated logical pages read the (never written)
+                        # NULL page: pos = -1, masked like unwritten entries
+                        bt_full[s, :] = paged.NULL_PAGE
+                        bt_ring[s, :] = paged.NULL_PAGE
+                    lane.req, lane.state = req, _PREFILL
+                    lane.prefill_pos, lane.n_out = 0, 0
+                    lane.req_key = (None if self.sampler.greedy
+                                    else request_key(seed, req.rid))
+
+            if preempt:
+                # post-admission snapshot: the fuzz suite replays these to
+                # prove priority-inversion freedom (no queued request ever
+                # out-ranks an admissible state it was denied)
+                stats.sched_trace.append({
+                    "queued": [(p, q, (it.req if isinstance(it, _Swapped)
+                                       else it).rid, need_now(it))
+                               for p, q, _, it in sorted(pqueue)],
+                    "active": [(l.req.priority, l.seq, l.req.rid,
+                                len(l.pages_full) + len(l.pages_ring))
+                               for l in lanes if l.state != _FREE],
+                    "free_pages": free_pages(),
+                    "free_slots": sum(l.state == _FREE for l in lanes),
+                })
 
             # -- one batched prefill chunk over all admitting lanes ----------
             prefilling = [s for s, l in enumerate(lanes)
@@ -626,13 +995,20 @@ class Engine:
                 clen = np.zeros(slots, np.int32)
                 for s in prefilling:
                     lane = lanes[s]
+                    if lane.state != _PREFILL:
+                        continue  # evicted by an earlier lane's free_up
                     prompt = lane.req.prompt
                     n = min(C, len(prompt) - lane.prefill_pos)
+                    if not ensure_pages(lane, s, lane.prefill_pos,
+                                        lane.prefill_pos + n):
+                        continue  # preempted itself: requeued, skip chunk
                     toks[s, :n] = prompt[lane.prefill_pos:lane.prefill_pos + n]
                     start[s] = lane.prefill_pos
                     clen[s] = n
-                    ensure_pages(lane, s, lane.prefill_pos,
-                                 lane.prefill_pos + n)
+                for s in prefilling:
+                    if lanes[s].state != _PREFILL:
+                        clen[s] = 0  # evicted after its chunk was assembled
+            if prefilling and clen.any():
                 kwargs = {"block_tables": tables()} if use_paged else {}
                 logits, cache = self._chunk(
                     self.params, cache, jnp.asarray(toks), jnp.asarray(start),
@@ -641,6 +1017,8 @@ class Engine:
                 first_toks = None
                 for s in prefilling:
                     lane = lanes[s]
+                    if lane.state != _PREFILL or not clen[s]:
+                        continue
                     lane.prefill_pos += int(clen[s])
                     if lane.prefill_pos < len(lane.req.prompt):
                         continue  # more chunks to stream
@@ -672,6 +1050,10 @@ class Engine:
                     lane.state = _LIVE
                     lane.tok, lane.pos, lane.n_out = tok, len(req.prompt), 1
 
+            # decode-time page allocation may itself preempt lanes under
+            # scheduler="preempt", so allocate BEFORE freezing the live set
+            alloc_decode_pages(np.array(
+                [s for s, l in enumerate(lanes) if l.live], np.int32))
             live = [s for s in lanes if s.live]
             if not live:
                 continue
@@ -684,8 +1066,6 @@ class Engine:
             stats.live_tokens_per_iteration.append(
                 sum(l.pos + 1 for l in lanes if l.live)
                 + sum(l.prefill_pos for l in lanes if l.state == _PREFILL))
-            alloc_decode_pages(np.array(
-                [s for s, l in enumerate(lanes) if l.live], np.int32))
             if use_paged:
                 stats.pages_in_use_per_iteration.append(pool.in_use)
             toks = jnp.asarray([s.tok for s in lanes], jnp.int32)
@@ -695,6 +1075,7 @@ class Engine:
             t0 = time.perf_counter()
             if use_paged:
                 active = None
+                lane_pages = None
                 if self.kernel == "fused":
                     # bucketed live horizon: the fused kernels' page loops
                     # (and hence decode bandwidth) follow live tokens, and
@@ -705,14 +1086,32 @@ class Engine:
                         _bucket_pages(
                             paged.pages_for(min(horizon, self._ring_len), P),
                             n_ring))
-                nf_read = active[0] if active else n_full
-                nr_read = active[1] if active else n_ring
-                stats.decode_kv_bytes += slots * (
-                    nf_read * self._full_page_bytes
-                    + nr_read * self._ring_page_bytes)
+                    # per-lane page counts: the kernels clamp each lane's
+                    # page loop to its OWN live pages, so a short lane's
+                    # HBM reads don't scale with the longest lane in the
+                    # batch (free lanes charge their single clamped read)
+                    lf = np.array(
+                        [min(paged.pages_for(l.pos + 1, P), active[0])
+                         if l.live else 1 for l in lanes], np.int32)
+                    lr = np.array(
+                        [min(paged.pages_for(min(l.pos + 1, self._ring_len),
+                                             P), active[1])
+                         if l.live else 1 for l in lanes], np.int32)
+                    lane_pages = {"full": jnp.asarray(lf),
+                                  "ring": jnp.asarray(lr)}
+                    if n_full:
+                        stats.decode_kv_bytes += (int(lf.sum())
+                                                  * self._full_page_bytes)
+                    if n_ring:
+                        stats.decode_kv_bytes += (int(lr.sum())
+                                                  * self._ring_page_bytes)
+                else:
+                    stats.decode_kv_bytes += slots * (
+                        n_full * self._full_page_bytes
+                        + n_ring * self._ring_page_bytes)
                 logits, cache = self._decode_paged(
                     self.params, cache, toks, pos, tables(), live=live_mask,
-                    active_pages=active)
+                    active_pages=active, lane_pages=lane_pages)
             else:
                 # charge only the attn/MLA cache reads (recurrent
                 # passthrough excluded) so kvB/tok is comparable with the

@@ -3,10 +3,15 @@
 When ``hypothesis`` is installed it is re-exported untouched, so CI (which
 installs requirements-dev.txt) gets real property-based shrinking/coverage.
 When it is absent, ``given``/``settings``/``st`` degrade to a deterministic
-seeded-numpy sweep: each ``@given`` test runs ``max_examples`` times with
-draws from ``np.random.default_rng(0)``.  That keeps every property test
-*collecting and running* as a fixed-example regression test instead of
-erroring the whole suite at import time.
+seeded-numpy sweep: each ``@given`` test runs ``max_examples`` times.
+
+Every example draws from its own ``np.random.default_rng(seed)`` where the
+seed folds in the test's qualified name (so two tests never share a draw
+stream — adding an example to one test cannot shift another test's
+examples) plus the example index.  On failure the seed is printed and the
+single offending example can be replayed alone::
+
+    REPRO_HYPO_SEED=<printed seed> pytest tests/test_x.py::test_y
 
 Usage in test modules::
 
@@ -17,6 +22,8 @@ from __future__ import annotations
 
 import functools
 import inspect
+import os
+import zlib
 
 import numpy as np
 
@@ -61,15 +68,35 @@ except ImportError:
             return fn
         return deco
 
+    def _test_seed(fn, example: int) -> int:
+        """Per-test, per-example seed: CRC of the qualified test name
+        folded with the example index.  Stable across runs and machines,
+        independent across tests."""
+        name = f"{fn.__module__}::{fn.__qualname__}"
+        return (zlib.crc32(name.encode()) + example) % 2**32
+
     def given(*strategies):
         def deco(fn):
             n = getattr(fn, "_max_examples", 10)
 
             @functools.wraps(fn)
             def run():
-                rng = np.random.default_rng(0)
-                for _ in range(n):
-                    fn(*(s.draw(rng) for s in strategies))
+                replay = os.environ.get("REPRO_HYPO_SEED")
+                if replay is not None:
+                    seeds = [int(replay)]
+                else:
+                    seeds = [_test_seed(fn, i) for i in range(n)]
+                for seed in seeds:
+                    rng = np.random.default_rng(seed)
+                    args = tuple(s.draw(rng) for s in strategies)
+                    try:
+                        fn(*args)
+                    except BaseException:
+                        print(f"\nhypo_compat: falsifying example "
+                              f"seed={seed} args={args!r}\n"
+                              f"replay just this example with "
+                              f"REPRO_HYPO_SEED={seed}")
+                        raise
             # hide the wrapped signature so pytest doesn't treat the
             # strategy-filled parameters as fixtures
             del run.__wrapped__

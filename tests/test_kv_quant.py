@@ -36,6 +36,7 @@ numbers in ROADMAP.md).
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -201,6 +202,65 @@ def test_mla_shaped_roundtrip_bitwise():
     assert np.array_equal(
         np.asarray(paged.gather_pages_q8(qs_pool, d_pool, bt, L)),
         oqs.astype(np.float32) * od[..., None])
+
+
+def test_swap_roundtrip_bitwise_q8_pairs():
+    """extract_pages -> host -> inject_pages is bitwise lossless for q8_0
+    leaf pairs (int8 payload + f32 scale rows) on both the 4-d K/V layout
+    and the 3-d MLA latent layout, landing in DIFFERENT physical ids —
+    the preempt scheduler's swap path never re-quantizes — and leaves
+    every untouched page bit-identical."""
+    rng = np.random.default_rng(9)
+    P, n_pages = 4, 10
+    src, dst = [3, 7, 5], [8, 2, 9]
+    for tail in ((P, 2, 8), (P, 12)):             # GQA K/V vs MLA latent
+        qs = rng.integers(-127, 128, (n_pages,) + tail).astype(np.int8)
+        d = rng.normal(size=(n_pages,) + tail[:-1]).astype(np.float32)
+        for pool_np in (qs, d):
+            pool = jnp.asarray(pool_np)
+            rows = jax.device_get(paged.extract_pages(pool, src))
+            assert rows.dtype == pool_np.dtype
+            new = np.asarray(paged.inject_pages(pool, dst, rows))
+            for a, b in zip(src, dst):
+                assert np.array_equal(new[b], pool_np[a])
+            untouched = [i for i in range(n_pages) if i not in dst]
+            assert np.array_equal(new[untouched], pool_np[untouched])
+
+
+def test_swap_roundtrip_real_q8_cache_leaves():
+    """Same roundtrip over every pool leaf of a real q8_0 paged cache
+    (qwen2 GQA pairs and deepseek MLA latent pairs): each ``*_qs``/``*_d``
+    leaf survives extract -> host -> inject into fresh ids bitwise, with
+    all other pages bit-identical."""
+    for arch in ("qwen2-1.5b", "deepseek-v3-671b"):
+        _, _, model = _get(arch)
+        n_pages, P, slots = 9, 4, 2
+        cache = model.init_paged_cache(n_pages, P, slots,
+                                       dtype=jnp.float32, kv_quant="q8_0")
+        lo = model.paged_cache_specs(paged.RESERVED_PAGES, P, slots,
+                                     dtype=jnp.float32, kv_quant="q8_0")
+        hi = model.paged_cache_specs(paged.RESERVED_PAGES + 1, P, slots,
+                                     dtype=jnp.float32, kv_quant="q8_0")
+        pool_leaves = [k for k in lo if lo[k].shape != hi[k].shape]
+        assert any(k.endswith("_qs") for k in pool_leaves), arch
+        axis = 1 if model.scan else 0
+        rng = np.random.default_rng(11)
+        src, dst = [4, 6], [7, 3]
+        for k in pool_leaves:
+            shape, dt = cache[k].shape, cache[k].dtype
+            if np.issubdtype(dt, np.integer):
+                x = rng.integers(-127, 128, shape).astype(dt)
+            else:
+                x = rng.normal(size=shape).astype(dt)
+            pool = jnp.asarray(x)
+            rows = jax.device_get(paged.extract_pages(pool, src, axis=axis))
+            new = np.asarray(paged.inject_pages(pool, dst, rows, axis=axis))
+            xs = np.moveaxis(x, axis, 0)
+            ns = np.moveaxis(new, axis, 0)
+            for a, b in zip(src, dst):
+                assert np.array_equal(ns[b], xs[a]), (arch, k)
+            untouched = [i for i in range(shape[axis]) if i not in dst]
+            assert np.array_equal(ns[untouched], xs[untouched]), (arch, k)
 
 
 # ---------------------------------------------------------------------------

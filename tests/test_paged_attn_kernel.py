@@ -146,6 +146,114 @@ def test_kernel_active_pages_bound(impl):
 
 
 @pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_kernel_lane_pages_bound(impl):
+    """Per-lane page bounds (``lane_pages``): clamping each lane's page
+    loop to its OWN live pages must not change results even when another
+    lane in the batch is 8x longer — and an under-bound must truncate
+    only the lane it under-bounds (proves the clamp is per-lane, not a
+    batch-wide minimum)."""
+    rng = np.random.default_rng(2)
+    b, h, hkv, d, dv, page_size, n_lp = 2, 4, 2, 16, 8, 4, 8
+    pos = np.array([2, 30], np.int32)              # live pages: 1 vs 8
+    k_pool, v_pool, pos_pool, bt = _build_pools(
+        rng, b, n_lp, page_size, hkv, d, dv, pos)
+    args = (jnp.asarray(k_pool), jnp.asarray(v_pool), jnp.asarray(pos_pool),
+            jnp.asarray(bt), jnp.asarray(pos))
+    q = jnp.asarray(rng.normal(size=(b, h, d)).astype(np.float32))
+    full = np.asarray(paged_attn.paged_attn_decode(q, *args, impl=impl))
+    lp = jnp.asarray([1, 8], jnp.int32)
+    bounded = np.asarray(paged_attn.paged_attn_decode(
+        q, *args, lane_pages=lp, impl=impl))
+    assert np.max(np.abs(full - bounded)) < TOL
+    # under-bounding the long lane truncates it; the short lane is intact
+    trunc = np.asarray(paged_attn.paged_attn_decode(
+        q, *args, lane_pages=jnp.asarray([1, 2], jnp.int32), impl=impl))
+    assert np.max(np.abs(full[0] - trunc[0])) < TOL
+    assert np.max(np.abs(full[1] - trunc[1])) > TOL
+    # q8 variant honors the same bound
+    kq, kd = paged_attn.quantize_kv_page_pool(jnp.asarray(k_pool))
+    vq, vd = paged_attn.quantize_kv_page_pool(jnp.asarray(v_pool))
+    fq = np.asarray(paged_attn.paged_attn_decode_q8(
+        q, kq, kd, vq, vd, jnp.asarray(pos_pool), jnp.asarray(bt),
+        jnp.asarray(pos), impl=impl))
+    bq = np.asarray(paged_attn.paged_attn_decode_q8(
+        q, kq, kd, vq, vd, jnp.asarray(pos_pool), jnp.asarray(bt),
+        jnp.asarray(pos), lane_pages=lp, impl=impl))
+    assert np.max(np.abs(fq - bq)) < TOL
+
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_mla_lane_pages_bound(impl):
+    """MLA variant of the per-lane bound: clamped grid steps revisit the
+    lane's last page, whose entries the positional mask already
+    excludes, so bounded results are unchanged."""
+    rng = np.random.default_rng(4)
+    b, h, r, dr, page_size, n_lp = 2, 4, 12, 6, 4, 8
+    pos = np.array([1, 27], np.int32)
+    n_pages = paged.RESERVED_PAGES + b * n_lp
+    ckv = rng.normal(size=(n_pages, page_size, r)).astype(np.float32)
+    krope = rng.normal(size=(n_pages, page_size, dr)).astype(np.float32)
+    bt = np.full((b, n_lp), paged.NULL_PAGE, np.int32)
+    nxt = paged.RESERVED_PAGES
+    for i in range(b):
+        for lp_ in range(pos[i] // page_size + 1):
+            bt[i, lp_] = nxt
+            nxt += 1
+    qe = rng.normal(size=(b, h, r)).astype(np.float32)
+    qr = rng.normal(size=(b, h, dr)).astype(np.float32)
+    base = (jnp.asarray(qe), jnp.asarray(qr), jnp.asarray(ckv),
+            jnp.asarray(krope), jnp.asarray(bt), jnp.asarray(pos))
+    full = np.asarray(paged_attn.paged_mla_decode(*base, scale=0.2,
+                                                  impl=impl))
+    bounded = np.asarray(paged_attn.paged_mla_decode(
+        *base, scale=0.2, lane_pages=jnp.asarray([1, 7], jnp.int32),
+        impl=impl))
+    assert np.max(np.abs(full - bounded)) < TOL
+
+
+def test_lane_pages_dma_count_proxy():
+    """A short lane's page fetches must not scale with the longest lane
+    in the batch.  The kernels clamp the block-table index map to
+    ``bt[i, min(j, lane_pages[i]-1)]``; Pallas skips the DMA whenever
+    consecutive grid steps resolve to the same physical page, so the
+    number of DISTINCT fetches per lane is the lane's own page count.
+    This replays the exact index-map arithmetic as the regression
+    oracle."""
+    page_size, n_lp = 4, 8
+    pos = np.array([2, 30], np.int32)
+    lane_pages = [paged.pages_for(int(p) + 1, page_size) for p in pos]
+    assert lane_pages == [1, 8]
+    bt = np.full((2, n_lp), paged.NULL_PAGE, np.int32)
+    nxt = paged.RESERVED_PAGES
+    for i in range(2):
+        for lp_ in range(lane_pages[i]):
+            bt[i, lp_] = nxt
+            nxt += 1
+    fetches = []
+    for i, lp_i in enumerate(lane_pages):
+        seen, last = [], None
+        for j in range(n_lp):          # batch-max bucket drives the grid
+            pj = bt[i, min(j, lp_i - 1)]
+            if pj != last:             # unchanged index -> no new DMA
+                seen.append(pj)
+            last = pj
+        fetches.append(len(seen))
+    # the short lane fetches exactly its 1 page even though the grid ran
+    # 8 steps for its 30-token neighbor
+    assert fetches == lane_pages
+    # without the clamp the short lane also fetches the NULL tail —
+    # strictly more DMAs, and page-sized ones
+    unclamped = []
+    last = None
+    for j in range(n_lp):
+        pj = bt[0, j]
+        if pj != last:
+            unclamped.append(pj)
+        last = pj
+    assert len(unclamped) > lane_pages[0]
+
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
 def test_q8_kernel_matches_dequantised_oracle(impl):
     """The q8_0 variant (stretch: quantized KV pages) must attend exactly
     as the f32 kernel over the *dequantised* pools — dequantisation happens

@@ -235,3 +235,26 @@ def test_chunk_write_plan_last_writer_wins():
     # tokens 4,5 supersede 0,1; 2,3 keep their slots; 6,7 are padding
     assert np.asarray(ok).tolist() == [
         [False, False, True, True, True, True, False, False]]
+
+
+def test_swap_roundtrip_f32_bitwise_both_axes():
+    """extract_pages -> host -> inject_pages (the preempt scheduler's
+    swap-out/in) is bitwise lossless for f32 pools on both page-axis
+    layouts: per-layer pools (axis=0) and scan-stacked pools shaped
+    (layers, num_pages, ...) (axis=1).  Untouched pages stay
+    bit-identical even when rows land in different physical ids."""
+    import jax
+    rng = np.random.default_rng(13)
+    n_pages, P = 10, 4
+    src, dst = [5, 3, 8], [2, 9, 6]
+    for axis, shape in ((0, (n_pages, P, 2, 8)),
+                       (1, (3, n_pages, P, 2, 8))):
+        x = rng.normal(size=shape).astype(np.float32)
+        pool = jnp.asarray(x)
+        rows = jax.device_get(paged.extract_pages(pool, src, axis=axis))
+        new = np.asarray(paged.inject_pages(pool, dst, rows, axis=axis))
+        xs, ns = np.moveaxis(x, axis, 0), np.moveaxis(new, axis, 0)
+        for a, b_ in zip(src, dst):
+            assert np.array_equal(ns[b_], xs[a])
+        untouched = [i for i in range(n_pages) if i not in dst]
+        assert np.array_equal(ns[untouched], xs[untouched])

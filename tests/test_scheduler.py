@@ -1,0 +1,234 @@
+"""Preemption + priority scheduler as a fuzzable state machine.
+
+The ``scheduler="preempt"`` engine is exercised with randomized request
+traces (prompt lengths, budgets, priority classes, pool sizes, slot
+counts) and checked against oracles:
+
+* **Bitwise outputs** — greedy outputs of an oversubscribed preempting
+  serve equal unpreempted sequential serving (f32) / an unpreempted
+  serve of the same engine (q8_0, whose chunked-prefill quantization
+  already differs from one-shot prefill by design).  The ``gather``
+  kernel is the bitwise reference path.
+* **Zero leaks + page conservation** — the allocator postconditions
+  hold at the end AND at every post-admission snapshot the engine
+  records in ``EngineStats.sched_trace``: free + held == usable pages,
+  so swap transactions are all-or-nothing (a half-swapped lane would
+  break conservation mid-run).
+* **Priority-inversion freedom** — replaying the trace snapshots, no
+  queued request is ever left waiting in a state where evicting
+  strictly worse-ranked lanes could have admitted it.
+
+Seeds come from ``hypo_compat``'s per-test derivation, so a failure
+reproduces from the printed seed alone (``REPRO_HYPO_SEED=<seed>``).
+"""
+
+import numpy as np
+import pytest
+
+from hypo_compat import given, settings, st
+
+from test_paged_cache import _setup
+
+from repro.models import paged
+from repro.serving import Engine, SamplerConfig
+from repro.serving.engine import Request
+
+_GREEDY = SamplerConfig(greedy=True)
+
+
+def _random_requests(rng, cfg, n_req, n_classes, max_new_hi):
+    reqs = []
+    for i in range(n_req):
+        plen = int(rng.integers(2, 14))
+        reqs.append(dict(
+            rid=i,
+            prompt=[int(t) for t in rng.integers(4, cfg.vocab_size, plen)],
+            max_new=int(rng.integers(2, max_new_hi + 1)),
+            priority=int(rng.integers(0, n_classes))))
+    return reqs
+
+
+def _mk_engine(model, params, *, num_pages, scheduler="preempt",
+               page_size=4, kv_quant=None, max_len=48):
+    return Engine(model, params, max_len=max_len, page_size=page_size,
+                  kernel="gather", jit=False, sampler=_GREEDY,
+                  kv_quant=kv_quant, num_pages=num_pages,
+                  scheduler=scheduler)
+
+
+def _serve(eng, req_dicts, slots, seed=0):
+    reqs = [Request(**d) for d in req_dicts]
+    done = eng.serve(reqs, slots=slots, seed=seed)
+    return {r.rid: list(r.out) for r in done}, eng.last_stats
+
+
+def _usable(stats):
+    return stats.num_pages - paged.RESERVED_PAGES
+
+
+def _check_conservation(stats):
+    """Pages are conserved at every post-admission snapshot: free pages
+    plus pages held by active lanes must equal the usable pool.  A swap
+    that freed or allocated only part of a lane's pages would break this
+    at the very next snapshot."""
+    for snap in stats.sched_trace:
+        held = sum(h for _, _, _, h in snap["active"])
+        assert snap["free_pages"] + held == _usable(stats), snap
+
+
+def _check_no_inversion(stats, slots):
+    """At every snapshot, the best queued request must NOT be admissible
+    by preempting strictly worse-ranked lanes.  Admissible means: a slot
+    is free (or a strictly lower-class lane could be bumped off one) and
+    the free pages plus pages held by worse-ranked lanes cover its
+    immediate need."""
+    for snap in stats.sched_trace:
+        if not snap["queued"]:
+            continue
+        p, q, _, need = min(snap["queued"])[0:4]
+        evictable = sum(h for ap, aq, _, h in snap["active"]
+                        if (ap, aq) > (p, q))
+        slot_ok = (snap["free_slots"] > 0
+                   or any(ap > p for ap, _, _, _ in snap["active"]))
+        admissible = slot_ok and (snap["free_pages"] + evictable >= need)
+        assert not admissible, ("priority inversion: queued "
+                                f"(prio={p}, seq={q}) was denied in {snap}")
+
+
+# -- constructor validation ------------------------------------------------
+
+def test_unknown_scheduler_rejected():
+    _, params, model = _setup("qwen2-1.5b")
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        Engine(model, params, max_len=32, page_size=4, jit=False,
+               scheduler="fifo")
+
+
+def test_preempt_requires_paged_cache():
+    _, params, model = _setup("qwen2-1.5b")
+    with pytest.raises(ValueError, match="paged cache"):
+        Engine(model, params, max_len=32, jit=False, scheduler="preempt")
+
+
+# -- deterministic state-machine checks ------------------------------------
+
+def test_oversubscribed_pool_no_longer_raises():
+    """The reserve scheduler waits (and would deadlock a pool smaller
+    than one request); preempt serves the same workload by swapping."""
+    cfg, params, model = _setup("qwen2-1.5b")
+    rng = np.random.default_rng(0)
+    reqs = _random_requests(rng, cfg, 6, 2, 8)
+    worst_one = 2 * paged.pages_for(48, 4)  # generous single-request bound
+    eng = _mk_engine(model, params, num_pages=paged.RESERVED_PAGES + 8)
+    assert paged.RESERVED_PAGES + 8 < worst_one * len(reqs)
+    got, stats = _serve(eng, reqs, slots=3)
+    assert sorted(got) == [d["rid"] for d in reqs]
+    assert stats.pages_leaked == 0
+    assert stats.preemptions > 0
+    assert stats.swap_out_bytes == stats.swap_in_bytes
+    assert all(rs.queue_wait_s >= 0 for rs in stats.requests)
+
+
+def test_priority_classes_order_admission():
+    """With one slot, strictly better classes are admitted first even
+    though they arrive last — and every class still completes."""
+    cfg, params, model = _setup("qwen2-1.5b")
+    rng = np.random.default_rng(1)
+    reqs = _random_requests(rng, cfg, 5, 3, 6)
+    for i, d in enumerate(reqs):
+        d["priority"] = 2 - (i % 3)  # later arrivals get better classes
+    eng = _mk_engine(model, params, num_pages=paged.RESERVED_PAGES + 12)
+    got, stats = _serve(eng, reqs, slots=1)
+    assert sorted(got) == [d["rid"] for d in reqs]
+    order = [rs.rid for rs in stats.requests]
+    # with one slot and FIFO-free admission, completion order follows
+    # (priority, arrival): class 0 requests all finish before class 2
+    by_class = {d["rid"]: d["priority"] for d in reqs}
+    classes_done = [by_class[r] for r in order]
+    assert classes_done == sorted(classes_done), classes_done
+    _check_conservation(stats)
+    _check_no_inversion(stats, slots=1)
+
+
+# -- fuzz: random traces vs the sequential oracle --------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fuzz_preempt_bitwise_vs_sequential_f32(seed):
+    """Random workloads on a randomly undersized pool: every request
+    completes with greedy output bitwise-identical to sequential
+    serving, zero leaks, page conservation and inversion-freedom at
+    every recorded scheduler snapshot."""
+    cfg, params, model = _setup("qwen2-1.5b")
+    rng = np.random.default_rng(seed)
+    n_req = int(rng.integers(3, 7))
+    slots = int(rng.integers(1, 4))
+    n_classes = int(rng.integers(1, 4))
+    reqs = _random_requests(rng, cfg, n_req, n_classes, 8)
+    # pool: at least one request's worst case, well under slots' worst
+    worst_one = paged.pages_for(48, 4)
+    num_pages = paged.RESERVED_PAGES + worst_one + int(rng.integers(0, 6))
+
+    ref_eng = _mk_engine(model, params, num_pages=0, scheduler="reserve")
+    ref = {r.rid: list(r.out)
+           for r in ref_eng.serve_sequential(
+               [Request(**d) for d in reqs], seed=0)}
+
+    eng = _mk_engine(model, params, num_pages=num_pages)
+    got, stats = _serve(eng, reqs, slots=slots)
+    assert got == ref, {k: (ref[k], got[k]) for k in ref if got[k] != ref[k]}
+    assert stats.pages_leaked == 0
+    assert stats.swap_out_bytes == stats.swap_in_bytes
+    _check_conservation(stats)
+    _check_no_inversion(stats, slots=slots)
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fuzz_preempt_bitwise_q8(seed):
+    """q8_0 pools: preemption swaps int8+scale rows verbatim, so a
+    preempted serve is bitwise-identical to the same engine serving
+    from a roomy pool with zero preemptions.  (Sequential one-shot
+    prefill quantizes blocks differently from chunked admission, so the
+    unpreempted SERVE is the right bitwise oracle here.)"""
+    cfg, params, model = _setup("qwen2-1.5b")
+    rng = np.random.default_rng(seed)
+    reqs = _random_requests(rng, cfg, int(rng.integers(3, 6)), 2, 8)
+    slots = int(rng.integers(2, 4))
+
+    big = _mk_engine(model, params, num_pages=0, kv_quant="q8_0")
+    ref, ref_stats = _serve(big, reqs, slots=slots)
+    assert ref_stats.preemptions == 0
+
+    worst_one = paged.pages_for(48, 4)
+    small = _mk_engine(model, params, kv_quant="q8_0",
+                       num_pages=paged.RESERVED_PAGES + worst_one + 2)
+    got, stats = _serve(small, reqs, slots=slots)
+    assert got == ref, {k: (ref[k], got[k]) for k in ref if got[k] != ref[k]}
+    assert stats.pages_leaked == 0
+    _check_conservation(stats)
+    _check_no_inversion(stats, slots=slots)
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fuzz_recurrent_swap_state(seed):
+    """Architectures with dense per-slot recurrent state (ring attention
+    + recurrent passthrough): swap-out must carry the slot rows too, or
+    a resumed lane forgets its conv/RG-LRU state."""
+    cfg, params, model = _setup("recurrentgemma-2b")
+    rng = np.random.default_rng(seed)
+    reqs = _random_requests(rng, cfg, int(rng.integers(3, 6)), 2, 10)
+    for d in reqs:  # short prompts so decode crosses page boundaries
+        d["prompt"] = d["prompt"][:3]
+
+    big = _mk_engine(model, params, num_pages=0)
+    ref, ref_stats = _serve(big, reqs, slots=3)
+    assert ref_stats.preemptions == 0
+
+    small = _mk_engine(model, params, num_pages=paged.RESERVED_PAGES + 4)
+    got, stats = _serve(small, reqs, slots=3)
+    assert got == ref
+    assert stats.pages_leaked == 0
+    _check_conservation(stats)
+    _check_no_inversion(stats, slots=3)
