@@ -1,0 +1,27 @@
+"""repro.analysis — a JAX/Pallas-aware static analyzer for this repo.
+
+The serving stack's correctness rests on conventions no generic linter
+enforces: no host synchronisation inside hot decode paths, static-vs-
+traced argument discipline on ``jax.jit``, paired q8_0 cache leaves,
+grid/BlockSpec arity agreement on every ``pl.pallas_call``.  This package
+checks them at analysis time (stdlib ``ast`` only — no new dependencies)
+so contract violations surface as CI findings instead of accuracy or
+latency regressions.
+
+Usage::
+
+    python -m repro.analysis src/ --baseline .lint-baseline.json
+
+Inline suppression::
+
+    x = jax.device_get(y)  # repro-lint: disable=host-sync-in-hot-path
+
+See docs/lint_rules.md for the rule catalog and README "Static analysis"
+for the workflow (baselines, suppressions, CI wiring).
+"""
+
+from .core import Finding, Project, Rule, SourceModule
+from .runner import analyze, iter_py_files
+
+__all__ = ["Finding", "Project", "Rule", "SourceModule", "analyze",
+           "iter_py_files"]

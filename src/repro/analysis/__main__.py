@@ -1,0 +1,108 @@
+"""CLI: ``python -m repro.analysis [paths] [--baseline FILE] ...``.
+
+Exit codes: 0 clean (or all findings baselined), 1 new findings or stale
+baseline entries, 2 usage/configuration error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import baseline as baseline_mod
+from .rules import ALL_RULES, RULES_BY_NAME
+from .runner import analyze
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX/Pallas-aware static analyzer for this repo")
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files or directories to analyze (default: src)")
+    p.add_argument("--baseline", metavar="FILE",
+                   help="checked-in baseline of accepted findings")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="rewrite --baseline from the current findings")
+    p.add_argument("--json", metavar="FILE", dest="json_out",
+                   help="write a machine-readable report")
+    p.add_argument("--select", metavar="RULES",
+                   help="comma-separated rule names to run (default: all)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    return p
+
+
+def main(argv=None) -> int:
+    args = _parser().parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.name}: {rule.description}")
+        return 0
+
+    rules = ALL_RULES
+    if args.select:
+        names = [n.strip() for n in args.select.split(",") if n.strip()]
+        unknown = [n for n in names if n not in RULES_BY_NAME]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+        rules = [RULES_BY_NAME[n] for n in names]
+
+    if args.update_baseline and not args.baseline:
+        print("--update-baseline requires --baseline", file=sys.stderr)
+        return 2
+
+    try:
+        _, findings = analyze(list(args.paths), rules)
+    except (SyntaxError, OSError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+
+    if args.update_baseline:
+        baseline_mod.save(args.baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    new, old, stale = findings, [], []
+    if args.baseline:
+        try:
+            entries = baseline_mod.load(args.baseline)
+        except (OSError, ValueError) as exc:
+            print(f"error: {exc}", file=sys.stderr)
+            return 2
+        new, old, stale = baseline_mod.split(findings, entries)
+
+    for f in new:
+        print(f.render())
+    for fp in stale:
+        print(f"stale baseline entry {fp} — flagged code no longer exists; "
+              f"refresh with --update-baseline")
+
+    if args.json_out:
+        report = {
+            "version": 1,
+            "count": len(findings),
+            "new": [f.to_json() for f in new],
+            "baselined": [f.to_json() for f in old],
+            "stale_baseline": stale,
+        }
+        with open(args.json_out, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+
+    n_new, n_stale = len(new), len(stale)
+    if n_new or n_stale:
+        print(f"{n_new} new finding(s), {len(old)} baselined, "
+              f"{n_stale} stale baseline entr(y/ies)", file=sys.stderr)
+        return 1
+    if old:
+        print(f"clean: 0 new finding(s), {len(old)} baselined",
+              file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

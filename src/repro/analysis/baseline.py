@@ -1,0 +1,76 @@
+"""Checked-in baselines: pre-existing findings that don't block CI.
+
+A baseline entry is a *fingerprint* of a finding — a hash of the rule,
+file path, normalized source line and the occurrence index of that
+(rule, path, line-text) triple within the file — so entries survive
+unrelated line-number shifts but go stale when the flagged code itself
+changes or disappears.  Stale entries are reported (and fail the
+``--check-stale`` self-check) so the baseline can only shrink.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import re
+
+from .core import Finding
+
+VERSION = 1
+_WS = re.compile(r"\s+")
+
+
+def _normalize(snippet: str) -> str:
+    return _WS.sub(" ", snippet.strip())
+
+
+def assign_fingerprints(findings: list[Finding]) -> list[tuple[Finding, str]]:
+    """Stable fingerprint per finding: occurrence-indexed within the file
+    so two identical lines in one file baseline independently."""
+    counts: dict[tuple, int] = {}
+    out = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+        key = (f.rule, f.path, _normalize(f.snippet))
+        idx = counts.get(key, 0)
+        counts[key] = idx + 1
+        payload = f"{f.rule}::{f.path}::{_normalize(f.snippet)}::{idx}"
+        out.append((f, hashlib.sha1(payload.encode()).hexdigest()[:16]))
+    return out
+
+
+def load(path: str) -> dict[str, dict]:
+    """fingerprint -> entry dict.  Raises ValueError on a malformed file."""
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    if not isinstance(data, dict) or data.get("version") != VERSION:
+        raise ValueError(f"{path}: not a v{VERSION} lint baseline")
+    entries = data.get("entries")
+    if not isinstance(entries, dict):
+        raise ValueError(f"{path}: missing 'entries' mapping")
+    for fp, entry in entries.items():
+        if not isinstance(entry, dict) or "rule" not in entry:
+            raise ValueError(f"{path}: malformed entry {fp!r}")
+    return entries
+
+
+def save(path: str, findings: list[Finding]) -> None:
+    entries = {
+        fp: {"rule": f.rule, "path": f.path, "line": f.line,
+             "snippet": _normalize(f.snippet)}
+        for f, fp in assign_fingerprints(findings)
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"version": VERSION, "entries": entries}, fh, indent=2,
+                  sort_keys=True)
+        fh.write("\n")
+
+
+def split(findings: list[Finding], entries: dict[str, dict]
+          ) -> tuple[list[Finding], list[Finding], list[str]]:
+    """(new, baselined, stale_fingerprints)."""
+    with_fp = assign_fingerprints(findings)
+    new = [f for f, fp in with_fp if fp not in entries]
+    old = [f for f, fp in with_fp if fp in entries]
+    live = {fp for _, fp in with_fp}
+    stale = sorted(fp for fp in entries if fp not in live)
+    return new, old, stale

@@ -1,0 +1,57 @@
+"""Name-based call-graph reachability over a :class:`Project`.
+
+Functions are indexed by their *unqualified* name (methods included), and
+a call site contributes an edge to the callee's final name segment —
+``self._decode(...)`` edges to ``_decode``, ``paged.gather_pages(...)``
+to ``gather_pages``.  This is deliberately coarse (no type inference):
+for a lint that guards "is a host sync reachable from the jit'd decode
+step", over-approximating the graph errs on the side of reporting, and
+inline suppressions/allowlists handle the few intentional sites.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .core import Project, SourceModule, call_name, iter_functions
+
+
+def function_index(project: Project) -> dict[str, list[tuple[SourceModule,
+                                                             ast.AST]]]:
+    """unqualified function name -> [(module, FunctionDef), ...]."""
+    index: dict[str, list] = {}
+    for mod in project.modules:
+        for fn in iter_functions(mod.tree):
+            index.setdefault(fn.name, []).append((mod, fn))
+    return index
+
+
+def callees(fn: ast.AST) -> set[str]:
+    """Final name segments of every call inside ``fn`` (nested defs
+    included — a nested helper runs in its parent's dynamic extent)."""
+    out: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            if name:
+                out.add(name.rsplit(".", 1)[-1])
+    return out
+
+
+def reachable_functions(project: Project, entries: set[str]
+                        ) -> dict[str, list[tuple[SourceModule, ast.AST]]]:
+    """Subset of :func:`function_index` reachable from the entry names
+    (entries themselves included when defined in the project)."""
+    index = function_index(project)
+    seen: set[str] = set()
+    work = [name for name in entries if name in index]
+    while work:
+        name = work.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        for _, fn in index[name]:
+            for callee in callees(fn):
+                if callee in index and callee not in seen:
+                    work.append(callee)
+    return {name: index[name] for name in seen}

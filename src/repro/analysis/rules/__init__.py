@@ -1,0 +1,21 @@
+"""Rule registry: one module per rule, instances collected here."""
+
+from .donation import DonationReuseRule
+from .host_sync import HostSyncRule
+from .jit_static import JitStaticDisciplineRule
+from .pallas_contract import PallasContractRule
+from .q8_pairing import Q8LeafPairingRule
+from .tracer_leak import TracerLeakRule
+
+ALL_RULES = [
+    HostSyncRule(),
+    TracerLeakRule(),
+    JitStaticDisciplineRule(),
+    PallasContractRule(),
+    Q8LeafPairingRule(),
+    DonationReuseRule(),
+]
+
+RULES_BY_NAME = {r.name: r for r in ALL_RULES}
+
+__all__ = ["ALL_RULES", "RULES_BY_NAME"]

@@ -1,0 +1,196 @@
+"""donation-reuse: donated buffers must not be read after the call.
+
+``jax.jit(..., donate_argnums=...)`` lets XLA alias the donated input's
+memory for outputs — after the call the donor array is *deleted*;
+touching it raises ``RuntimeError: Array has been deleted`` on a real
+device but works silently under some CPU configurations, so tests pass
+and production crashes.
+
+We record every name bound to a donating jit (``step = jax.jit(f,
+donate_argnums=(1,))`` or a ``@partial(jax.jit, donate_argnums=...)``
+decorator), then at each call site note which bare-Name arguments sit
+in donated positions and flag any later *read* of those names before
+they are rebound.  Scan order is source order within the enclosing
+function — an over-approximation that matches the straight-line style
+of the engine's step loops.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..core import (Rule, SourceModule, call_name, dotted, fn_param_names,
+                    jit_decorator_info, _donation_spec)
+
+_JIT_NAMES = {"jax.jit", "jit"}
+
+
+def _donating_assigns(tree: ast.AST) -> dict[str, tuple[list[int], list[str]]]:
+    """name -> (donate_argnums, donate_argnames) for ``f = jax.jit(g,
+    donate_...=...)``-style assignments (plain and attribute targets)."""
+    out: dict[str, tuple[list[int], list[str]]] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        if not (isinstance(node.value, ast.Call)
+                and call_name(node.value) in _JIT_NAMES):
+            continue
+        nums, names = _donation_spec(node.value)
+        if not nums and not names:
+            continue
+        tgt = dotted(node.targets[0])
+        if tgt:
+            out[tgt] = (nums, names)
+    return out
+
+
+def _donating_defs(tree: ast.AST) -> dict[str, tuple[list[int], list[str]]]:
+    """name -> donation spec for functions carrying a donating jit
+    decorator (positions are adjusted for bound ``self`` at call sites
+    only when the def is a plain function — methods are matched by
+    attribute call name and keep their spec as declared)."""
+    out: dict[str, tuple[list[int], list[str]]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            info = jit_decorator_info(node)
+            if info and (info.donate_argnums or info.donate_argnames):
+                out[node.name] = (info.donate_argnums, info.donate_argnames)
+    return out
+
+
+class DonationReuseRule(Rule):
+    name = "donation-reuse"
+    description = ("arguments donated to a jit'd call (donate_argnums/"
+                   "donate_argnames) read again after the call")
+
+    def check_module(self, mod: SourceModule):
+        donors = _donating_assigns(mod.tree)
+        donors.update(_donating_defs(mod.tree))
+        if not donors:
+            return
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._scan_fn(mod, node, donors)
+
+    def _scan_fn(self, mod: SourceModule, fn, donors):
+        # linearised (event, ...) stream in source order
+        events = self._linearise(fn.body)
+        # dead[name] -> line it was donated at
+        dead: dict[str, int] = {}
+        for kind, payload in events:
+            if kind == "call":
+                call, assigned = payload
+                tgt_names = self._donated_args(call, donors)
+                # the call's own assign targets are immediately rebound
+                for name in assigned:
+                    dead.pop(name, None)
+                for name in tgt_names:
+                    if name not in assigned:
+                        dead[name] = call.lineno
+            elif kind == "store":
+                dead.pop(payload, None)
+            elif kind == "load":
+                name_node = payload
+                if name_node.id in dead:
+                    yield mod.finding(
+                        self.name, name_node,
+                        f"`{name_node.id}` was donated to a jit'd call on "
+                        f"line {dead[name_node.id]} and read again here — "
+                        f"donated buffers are deleted after the call")
+                    dead.pop(name_node.id)   # one finding per donation
+
+    @staticmethod
+    def _donated_args(call: ast.Call, donors) -> list[str]:
+        fname = call_name(call)
+        spec = donors.get(fname) or donors.get(fname.rsplit(".", 1)[-1])
+        if spec is None:
+            return []
+        nums, names = spec
+        out = []
+        for i, arg in enumerate(call.args):
+            if i in nums and isinstance(arg, ast.Name):
+                out.append(arg.id)
+        for kw in call.keywords:
+            if kw.arg in names and isinstance(kw.value, ast.Name):
+                out.append(kw.value.id)
+        return out
+
+    def _linearise(self, stmts) -> list[tuple]:
+        """Flatten statements into (kind, payload) events in source order:
+        ``("call", (Call, assigned_names))`` for calls,
+        ``("store", name)`` / ``("load", Name)`` for name accesses."""
+        events: list[tuple] = []
+
+        def expr_events(node, skip_calls=()):
+            for n in ast.walk(node):
+                if n in skip_calls:
+                    continue
+                if isinstance(n, ast.Name):
+                    if isinstance(n.ctx, ast.Load):
+                        events.append(("load", n))
+                    else:
+                        events.append(("store", n.id))
+
+        def walk(body):
+            for stmt in body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue
+                if isinstance(stmt, ast.Assign):
+                    assigned = []
+                    for t in stmt.targets:
+                        elts = (t.elts if isinstance(t, (ast.Tuple, ast.List))
+                                else [t])
+                        for e in elts:
+                            d = dotted(e)
+                            if d:
+                                assigned.append(d.split(".")[0])
+                    calls = [n for n in ast.walk(stmt.value)
+                             if isinstance(n, ast.Call)]
+                    for n in ast.walk(stmt.value):
+                        if isinstance(n, ast.Name) and isinstance(
+                                n.ctx, ast.Load):
+                            events.append(("load", n))
+                    for c in calls:
+                        events.append(("call", (c, assigned)))
+                    for a in assigned:
+                        events.append(("store", a))
+                    continue
+                if isinstance(stmt, (ast.For, ast.While)):
+                    head = stmt.iter if isinstance(stmt, ast.For) else stmt.test
+                    expr_events(head)
+                    if isinstance(stmt, ast.For):
+                        for n in ast.walk(stmt.target):
+                            if isinstance(n, ast.Name):
+                                events.append(("store", n.id))
+                    walk(stmt.body)
+                    walk(stmt.orelse)
+                    continue
+                if isinstance(stmt, ast.If):
+                    expr_events(stmt.test)
+                    walk(stmt.body)
+                    walk(stmt.orelse)
+                    continue
+                if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                    walk(stmt.body)
+                    continue
+                if isinstance(stmt, ast.Try):
+                    walk(stmt.body)
+                    for h in stmt.handlers:
+                        walk(h.body)
+                    walk(stmt.finalbody)
+                    continue
+                # expression / return / etc.
+                calls = [n for n in ast.walk(stmt)
+                         if isinstance(n, ast.Call)]
+                for n in ast.walk(stmt):
+                    if isinstance(n, ast.Name):
+                        if isinstance(n.ctx, ast.Load):
+                            events.append(("load", n))
+                        else:
+                            events.append(("store", n.id))
+                for c in calls:
+                    events.append(("call", (c, [])))
+
+        walk(stmts)
+        return events

@@ -1,0 +1,190 @@
+"""host-sync-in-hot-path: no host synchronisation in hot decode paths.
+
+Two sub-checks:
+
+1. **Jit-graph reachability** — any function reachable (by name) from the
+   engine's jit'd entry points (``decode_step``, ``decode_step_paged``,
+   ``prefill_chunk``, ``prefill``) runs inside a trace; an explicit host
+   materialisation there (``jax.device_get``, ``.block_until_ready()``,
+   ``np.asarray``/``np.array``, ``.item()``, ``.tolist()``) either
+   crashes under jit or silently forces eager round-trips when the
+   caller runs unjitted.  Bare ``int()``/``float()`` are *not* flagged
+   here — the traced code legitimately applies them to static Python
+   scalars (e.g. ``int(active_pages)`` on a static page bound).
+
+2. **Host serving loops** — inside the engine's ``serve``/``generate``
+   loops, values produced by jax calls are device arrays; reading them
+   *element-wise* inside a Python loop (``int(next_tok[i])``,
+   ``float(x[s])``, ``.item()``) issues one device sync per element per
+   step.  The sanctioned pattern is a single ``np.asarray(...)``
+   materialisation per step, then host-side indexing.  ``jax.device_get``
+   and ``.block_until_ready()`` in these functions are also flagged.
+
+Allowlist: the preemption scheduler's swap path (``preempt_lane``,
+``swap_in`` — swap-out to host memory IS the operation) is exempt, and
+deliberate timing barriers carry an inline
+``# repro-lint: disable=host-sync-in-hot-path`` suppression.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..callgraph import reachable_functions
+from ..core import Project, Rule, SourceModule, call_name
+
+# jit'd entry points of the serving engine (by function name)
+ENTRY_POINTS = {"decode_step", "decode_step_paged", "prefill_chunk",
+                "prefill"}
+# host-side serving loops where per-element device reads are the defect
+HOT_LOOP_FNS = {"serve", "generate"}
+# nested scheduler functions allowed to device_get (the swap path)
+ALLOWED_FNS = {"preempt_lane", "swap_in"}
+
+_SYNC_CALLS = {"jax.device_get", "jax.block_until_ready"}
+_SYNC_METHODS = {"block_until_ready", "item", "tolist"}
+_HOST_CONVERT = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+# calls whose results are device arrays (taint sources in the host loops)
+_DEVICE_ROOTS = ("jnp.", "jax.", "self._decode", "self._chunk")
+_DEVICE_NAMES = {"sample", "sample_per_slot"}
+
+
+def _is_device_source(call: ast.Call) -> bool:
+    name = call_name(call)
+    return (name in _DEVICE_NAMES
+            or any(name.startswith(root) for root in _DEVICE_ROOTS))
+
+
+class HostSyncRule(Rule):
+    name = "host-sync-in-hot-path"
+    description = ("host synchronisation (device_get / block_until_ready / "
+                   "np.asarray / .item() / per-element int()) inside the "
+                   "jit'd decode graph or the engine's serving loops")
+
+    def check_project(self, project: Project):
+        yield from self._check_jit_graph(project)
+        for mod in project.modules:
+            yield from self._check_hot_loops(mod)
+
+    # -- 1. functions reachable from the jit'd entries -----------------------
+    def _check_jit_graph(self, project: Project):
+        reach = reachable_functions(project, ENTRY_POINTS)
+        for fname, defs in sorted(reach.items()):
+            if fname in ALLOWED_FNS or fname in HOT_LOOP_FNS:
+                continue
+            for mod, fn in defs:
+                yield from self._scan_traced_body(mod, fn)
+
+    def _scan_traced_body(self, mod: SourceModule, fn: ast.AST):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name in _SYNC_CALLS or name in _HOST_CONVERT:
+                yield mod.finding(
+                    self.name, node,
+                    f"`{name}(...)` in `{fn.name}`, reachable from the "
+                    f"jit'd decode/prefill step — host sync inside a "
+                    f"traced graph")
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _SYNC_METHODS):
+                yield mod.finding(
+                    self.name, node,
+                    f"`.{node.func.attr}()` in `{fn.name}`, reachable from "
+                    f"the jit'd decode/prefill step — host sync inside a "
+                    f"traced graph")
+
+    # -- 2. element-wise device reads in the serve/generate loops ------------
+    def _check_hot_loops(self, mod: SourceModule):
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and node.name in HOT_LOOP_FNS):
+                yield from self._scan_hot_fn(mod, node)
+
+    def _scan_hot_fn(self, mod: SourceModule, fn: ast.AST):
+        tainted: set[str] = set()
+
+        def handle_assign(targets, value):
+            names = []
+            for t in targets:
+                if isinstance(t, ast.Name):
+                    names.append(t.id)
+                elif isinstance(t, (ast.Tuple, ast.List)):
+                    names += [e.id for e in t.elts
+                              if isinstance(e, ast.Name)]
+            if isinstance(value, ast.Call) and _is_device_source(value):
+                tainted.update(names)
+            else:
+                tainted.difference_update(names)
+
+        def scan_expr(node, loop_depth):
+            for call in ast.walk(node):
+                if not isinstance(call, ast.Call):
+                    continue
+                name = call_name(call)
+                if name in _SYNC_CALLS:
+                    yield mod.finding(
+                        self.name, call,
+                        f"`{name}(...)` in the `{fn.name}` loop — host sync "
+                        f"on the serving hot path")
+                elif (isinstance(call.func, ast.Attribute)
+                        and call.func.attr == "item"
+                        and self._tainted_expr(call.func.value, tainted)):
+                    yield mod.finding(
+                        self.name, call,
+                        f"`.item()` on a device array in `{fn.name}` — one "
+                        f"device sync per element")
+                elif (loop_depth > 0 and name in ("int", "float")
+                        and len(call.args) == 1
+                        and isinstance(call.args[0], ast.Subscript)
+                        and self._tainted_expr(call.args[0].value, tainted)):
+                    yield mod.finding(
+                        self.name, call,
+                        f"`{name}(...)` on a device-array element inside a "
+                        f"`{fn.name}` loop — one device sync per element "
+                        f"per step; materialise once with np.asarray and "
+                        f"index the host copy")
+
+        def scan_stmts(stmts, loop_depth):
+            for stmt in stmts:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if stmt.name not in ALLOWED_FNS:
+                        yield from scan_stmts(stmt.body, loop_depth)
+                    continue
+                if isinstance(stmt, ast.Assign):
+                    yield from scan_expr(stmt.value, loop_depth)
+                    handle_assign(stmt.targets, stmt.value)
+                    continue
+                if isinstance(stmt, ast.AugAssign):
+                    yield from scan_expr(stmt.value, loop_depth)
+                    continue
+                if isinstance(stmt, (ast.For, ast.While)):
+                    if isinstance(stmt, ast.For):
+                        yield from scan_expr(stmt.iter, loop_depth)
+                    else:
+                        yield from scan_expr(stmt.test, loop_depth)
+                    yield from scan_stmts(stmt.body, loop_depth + 1)
+                    yield from scan_stmts(stmt.orelse, loop_depth + 1)
+                    continue
+                if isinstance(stmt, ast.If):
+                    yield from scan_expr(stmt.test, loop_depth)
+                    yield from scan_stmts(stmt.body, loop_depth)
+                    yield from scan_stmts(stmt.orelse, loop_depth)
+                    continue
+                if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                    yield from scan_stmts(stmt.body, loop_depth)
+                    continue
+                if isinstance(stmt, ast.Try):
+                    yield from scan_stmts(stmt.body, loop_depth)
+                    for h in stmt.handlers:
+                        yield from scan_stmts(h.body, loop_depth)
+                    yield from scan_stmts(stmt.finalbody, loop_depth)
+                    continue
+                yield from scan_expr(stmt, loop_depth)
+
+        yield from scan_stmts(fn.body, 0)
+
+    @staticmethod
+    def _tainted_expr(node: ast.AST, tainted: set[str]) -> bool:
+        return any(isinstance(n, ast.Name) and n.id in tainted
+                   for n in ast.walk(node))

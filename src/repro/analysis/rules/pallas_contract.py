@@ -1,0 +1,246 @@
+"""pallas-contract: structural checks on every ``pl.pallas_call``.
+
+* **Index-map arity** — each BlockSpec's index map must take exactly
+  ``len(grid) + num_scalar_prefetch`` arguments (grid indices first, then
+  the scalar-prefetch operands when the grid spec is a
+  ``PrefetchScalarGridSpec``).  An arity mismatch is a TypeError at
+  trace time on TPU but can go unnoticed for a long time under
+  ``interpret=True`` parity tests that never run the real lowering.
+* **Static scratch shapes** — ``scratch_shapes`` entries must not be
+  built from the enclosing jitted function's *traced* parameters.
+* **f32 accumulators** — VMEM scratch used for online-softmax
+  accumulators must be ``jnp.float32``; lower-precision accumulation
+  silently degrades long-context softmax sums.
+* **Lane alignment** — literal block/scratch minor dims that are not a
+  multiple of 128 under-utilise the VPU lanes on the TPU target (tiny
+  odd test shapes are runtime values, not literals, so they don't trip
+  this).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..core import Rule, SourceModule, call_name, dotted, jit_decorator_info
+
+_LANES = 128
+
+
+def _last_segment(name: str) -> str:
+    return name.rsplit(".", 1)[-1]
+
+
+def _enclosing_functions(tree: ast.AST):
+    """Yield (fn, [enclosing chain]) for every function def."""
+    stack: list = []
+
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield child, list(stack)
+                stack.append(child)
+                yield from walk(child)
+                stack.pop()
+            else:
+                yield from walk(child)
+
+    yield from walk(tree)
+
+
+class PallasContractRule(Rule):
+    name = "pallas-contract"
+    description = ("pallas_call grid/index-map arity agreement, static "
+                   "scratch shapes, f32 accumulators, lane-aligned tiles")
+
+    def check_module(self, mod: SourceModule):
+        for fn, _ in _enclosing_functions(mod.tree):
+            lambdas = self._local_lambdas(fn)
+            speclists = self._local_spec_lists(fn)
+            traced = self._traced_params(fn)
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Call)
+                        and _last_segment(call_name(node)) == "pallas_call"
+                        and self._directly_inside(fn, node)):
+                    yield from self._check_call(mod, node, lambdas,
+                                                speclists, traced)
+
+    @staticmethod
+    def _directly_inside(fn, node) -> bool:
+        """Avoid double-reporting calls that live in a nested def (they
+        are visited again with that def as ``fn``)."""
+        for child in ast.walk(fn):
+            if (isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and child is not fn):
+                if any(n is node for n in ast.walk(child)):
+                    return False
+        return True
+
+    @staticmethod
+    def _local_lambdas(fn) -> dict[str, ast.Lambda]:
+        out = {}
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Lambda)):
+                out[node.targets[0].id] = node.value
+        return out
+
+    @staticmethod
+    def _local_spec_lists(fn) -> dict[str, list[ast.expr]]:
+        """name -> elements, for ``kv_specs = [...]`` style assignments
+        (merged across branches — each branch's elements are checked)."""
+        out: dict[str, list] = {}
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, (ast.List, ast.Tuple))):
+                out.setdefault(node.targets[0].id,
+                               []).extend(node.value.elts)
+        return out
+
+    @staticmethod
+    def _traced_params(fn) -> set[str]:
+        info = jit_decorator_info(fn)
+        if info is None:
+            return set()
+        a = fn.args
+        params = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+        return params - info.static_argnames - {"self", "cls"}
+
+    # -- per-call checks -----------------------------------------------------
+    def _check_call(self, mod: SourceModule, call: ast.Call, lambdas,
+                    speclists, traced: set[str]):
+        kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+        grid_len = None
+        n_prefetch = 0
+        in_specs: list[ast.expr] = []
+        out_specs: list[ast.expr] = []
+        scratch: list[ast.expr] = []
+
+        spec = kwargs.get("grid_spec")
+        if isinstance(spec, ast.Call):
+            skw = {kw.arg: kw.value for kw in spec.keywords if kw.arg}
+            if "PrefetchScalarGridSpec" in call_name(spec):
+                v = skw.get("num_scalar_prefetch")
+                if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                    n_prefetch = v.value
+            grid_len = self._grid_len(skw.get("grid"), speclists)
+            in_specs = self._expand(skw.get("in_specs"), speclists)
+            out_specs = self._expand(skw.get("out_specs"), speclists)
+            scratch = self._expand(skw.get("scratch_shapes"), speclists)
+        else:
+            grid_len = self._grid_len(kwargs.get("grid"), speclists)
+            in_specs = self._expand(kwargs.get("in_specs"), speclists)
+            out_specs = self._expand(kwargs.get("out_specs"), speclists)
+            scratch = self._expand(kwargs.get("scratch_shapes"), speclists)
+
+        expected = None if grid_len is None else grid_len + n_prefetch
+        for spec_call in self._blockspecs(in_specs + out_specs, speclists):
+            yield from self._check_blockspec(mod, spec_call, expected,
+                                             lambdas)
+        for sc in scratch:
+            yield from self._check_scratch(mod, sc, traced)
+
+    @staticmethod
+    def _grid_len(grid, speclists) -> int | None:
+        """Grid rank; None when the expression can't be resolved (a Name
+        with no local tuple assignment, an arbitrary call, ...)."""
+        if grid is None:
+            return None
+        if isinstance(grid, (ast.Tuple, ast.List)):
+            return len(grid.elts)
+        if isinstance(grid, ast.Name):
+            elts = speclists.get(grid.id)
+            return len(elts) if elts is not None else None
+        if isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+            return 1
+        return None
+
+    @staticmethod
+    def _expand(node, speclists) -> list[ast.expr]:
+        """Flatten a list/tuple expression (resolving ``*name`` splats and
+        bare names through local list assignments) into element exprs."""
+        if node is None:
+            return []
+        if isinstance(node, (ast.List, ast.Tuple)):
+            out = []
+            for el in node.elts:
+                if (isinstance(el, ast.Starred)
+                        and isinstance(el.value, ast.Name)):
+                    out += speclists.get(el.value.id, [])
+                else:
+                    out.append(el)
+            return out
+        if isinstance(node, ast.Name):
+            return speclists.get(node.id, [])
+        return [node]
+
+    @staticmethod
+    def _blockspecs(elements, speclists) -> list[ast.Call]:
+        out = []
+        for el in elements:
+            if (isinstance(el, ast.Call)
+                    and _last_segment(call_name(el)) == "BlockSpec"):
+                out.append(el)
+        return out
+
+    def _check_blockspec(self, mod: SourceModule, spec: ast.Call,
+                         expected: int | None, lambdas):
+        index_map = None
+        block_shape = None
+        for arg in list(spec.args) + [kw.value for kw in spec.keywords]:
+            if isinstance(arg, ast.Lambda):
+                index_map = arg
+            elif isinstance(arg, ast.Name) and arg.id in lambdas:
+                index_map = lambdas[arg.id]
+            elif isinstance(arg, (ast.Tuple, ast.List)):
+                block_shape = arg
+        if index_map is not None and expected is not None:
+            a = index_map.args
+            arity = len(a.posonlyargs) + len(a.args)
+            if a.vararg is None and arity != expected:
+                yield mod.finding(
+                    self.name, spec,
+                    f"BlockSpec index map takes {arity} args but the grid "
+                    f"spec provides {expected} (grid dims + scalar-prefetch "
+                    f"operands)")
+        if block_shape is not None and len(block_shape.elts) >= 2:
+            last = block_shape.elts[-1]
+            if (isinstance(last, ast.Constant) and isinstance(last.value, int)
+                    and last.value > 1 and last.value % _LANES):
+                yield mod.finding(
+                    self.name, spec,
+                    f"BlockSpec minor dim {last.value} is not a multiple "
+                    f"of {_LANES} — misaligned with the VPU lanes on TPU")
+
+    def _check_scratch(self, mod: SourceModule, sc: ast.expr,
+                       traced: set[str]):
+        if not isinstance(sc, ast.Call):
+            return
+        shape = sc.args[0] if sc.args else None
+        if isinstance(shape, (ast.Tuple, ast.List)):
+            for el in shape.elts:
+                names = {n.id for n in ast.walk(el)
+                         if isinstance(n, ast.Name)}
+                hit = sorted(names & traced)
+                if hit:
+                    yield mod.finding(
+                        self.name, sc,
+                        f"scratch shape depends on traced argument "
+                        f"`{hit[0]}` — scratch shapes must be static")
+            last = shape.elts[-1] if shape.elts else None
+            if (isinstance(last, ast.Constant)
+                    and isinstance(last.value, int)
+                    and last.value > 1 and last.value % _LANES):
+                yield mod.finding(
+                    self.name, sc,
+                    f"scratch minor dim {last.value} is not a multiple of "
+                    f"{_LANES} — misaligned with the VPU lanes on TPU")
+        if len(sc.args) >= 2:
+            dt = dotted(sc.args[1])
+            if dt and _last_segment(dt) in ("bfloat16", "float16", "int8",
+                                            "float8_e4m3fn", "float8_e5m2"):
+                yield mod.finding(
+                    self.name, sc,
+                    f"scratch accumulator dtype `{_last_segment(dt)}` — "
+                    f"online-softmax accumulators must be jnp.float32")

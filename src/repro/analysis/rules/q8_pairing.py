@@ -1,0 +1,111 @@
+"""q8-leaf-pairing: every ``*_qs`` int8 leaf needs a matching ``*_d``.
+
+The q8_0 cache layout stores values as int8 pools plus per-row f32 scale
+pools; readers (fused kernels, ``gather_pages_q8``, swap) address the
+pair by naming convention — ``k_qs``/``k_d``, ``c_kv_qs``/``c_kv_d``.  A
+spec or init dict that ships a ``*_qs`` leaf without its ``*_d`` sibling
+(or with inconsistent shapes/dtypes) dequantizes garbage at read time
+without any shape error, because the pools are independent dict leaves.
+
+Checked on every dict literal that contains a ``*_qs`` key: the ``*_d``
+sibling must exist, the scale shape must equal the value shape minus the
+trailing (block) axis, the value dtype must be int8 and the scale dtype
+float32.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..core import Rule, SourceModule, dotted
+
+
+def _key_basename(node: ast.expr) -> str | None:
+    """Literal tail of a dict key: ``"k_qs"`` -> ``k_qs``,
+    ``f"{prefix}/k_qs"`` -> ``k_qs``; dynamic tails -> None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value.rsplit("/", 1)[-1]
+    if isinstance(node, ast.JoinedStr) and node.values:
+        last = node.values[-1]
+        if isinstance(last, ast.Constant) and isinstance(last.value, str):
+            tail = last.value.rsplit("/", 1)[-1]
+            return tail or None
+    return None
+
+
+def _shape_elts(value: ast.expr) -> list[str] | None:
+    """Unparsed shape-tuple elements of a ``jnp.zeros((...), dt)`` /
+    ``jax.ShapeDtypeStruct((...), dt)``-style leaf value."""
+    if isinstance(value, ast.Call) and value.args:
+        shape = value.args[0]
+        if isinstance(shape, (ast.Tuple, ast.List)):
+            return [ast.unparse(el) for el in shape.elts]
+    return None
+
+
+def _leaf_dtype(value: ast.expr) -> str | None:
+    """Final dtype name mentioned in a leaf-constructor call.  Only
+    allocator-style calls (first argument a literal shape tuple) are
+    sniffed — update/scatter calls carry arrays, not dtypes."""
+    if _shape_elts(value) is None:
+        return None
+    cands = list(value.args[1:]) + [kw.value for kw in value.keywords]
+    for c in cands:
+        name = dotted(c)
+        if name:
+            return name.rsplit(".", 1)[-1]
+    return None
+
+
+class Q8LeafPairingRule(Rule):
+    name = "q8-leaf-pairing"
+    description = ("every *_qs int8 cache leaf must have a *_d f32 scale "
+                   "leaf with the value shape minus the block axis")
+
+    def check_module(self, mod: SourceModule):
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Dict):
+                yield from self._check_dict(mod, node)
+
+    def _check_dict(self, mod: SourceModule, d: ast.Dict):
+        leaves: dict[str, ast.expr] = {}
+        keynodes: dict[str, ast.expr] = {}
+        for key, value in zip(d.keys, d.values):
+            if key is None:        # **splat
+                continue
+            base = _key_basename(key)
+            if base is not None:
+                leaves[base] = value
+                keynodes[base] = key
+        for base, value in leaves.items():
+            if not base.endswith("_qs"):
+                continue
+            stem = base[: -len("_qs")]
+            mate = f"{stem}_d"
+            if mate not in leaves:
+                yield mod.finding(
+                    self.name, keynodes[base],
+                    f"q8 leaf `{base}` has no matching `{mate}` scale leaf "
+                    f"in this cache dict")
+                continue
+            qs_shape = _shape_elts(value)
+            d_shape = _shape_elts(leaves[mate])
+            if (qs_shape is not None and d_shape is not None
+                    and d_shape != qs_shape[:-1]):
+                yield mod.finding(
+                    self.name, keynodes[mate],
+                    f"scale leaf `{mate}` shape ({', '.join(d_shape)}) "
+                    f"must be the `{base}` shape minus its trailing block "
+                    f"axis ({', '.join(qs_shape[:-1])})")
+            qdt = _leaf_dtype(value)
+            if qdt is not None and qdt != "int8":
+                yield mod.finding(
+                    self.name, keynodes[base],
+                    f"q8 leaf `{base}` dtype `{qdt}` — quantized value "
+                    f"pools must be jnp.int8")
+            ddt = _leaf_dtype(leaves[mate])
+            if ddt is not None and ddt != "float32":
+                yield mod.finding(
+                    self.name, keynodes[mate],
+                    f"scale leaf `{mate}` dtype `{ddt}` — q8_0 scales must "
+                    f"be jnp.float32")

@@ -1,0 +1,58 @@
+"""File discovery + analysis driver (suppressions applied here)."""
+
+from __future__ import annotations
+
+import os
+
+from .core import Finding, Project, SourceModule
+from .rules import ALL_RULES
+
+
+def iter_py_files(paths: list[str]) -> list[str]:
+    """Expand files/directories into a sorted list of ``.py`` paths,
+    skipping ``__pycache__``."""
+    out: list[str] = []
+    for path in paths:
+        if os.path.isfile(path):
+            if path.endswith(".py"):
+                out.append(path)
+            continue
+        for root, dirs, files in os.walk(path):
+            dirs[:] = sorted(d for d in dirs if d != "__pycache__")
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    out.append(os.path.join(root, name))
+    return sorted(dict.fromkeys(out))
+
+
+def load_project(paths: list[str]) -> tuple[Project, list[str]]:
+    """(project, unparsable-file messages)."""
+    modules: list[SourceModule] = []
+    errors: list[str] = []
+    for path in iter_py_files(paths):
+        rel = os.path.relpath(path).replace(os.sep, "/")
+        try:
+            with open(path, encoding="utf-8") as fh:
+                text = fh.read()
+            modules.append(SourceModule(path, rel, text))
+        except (OSError, SyntaxError, ValueError) as exc:
+            errors.append(f"{rel}: {exc}")
+    return Project(modules), errors
+
+
+def analyze(paths: list[str], rules=None) -> tuple[Project, list[Finding]]:
+    """Run ``rules`` (default: all) over ``paths``; inline suppressions
+    filtered, findings sorted by (path, line, rule)."""
+    project, errors = load_project(paths)
+    if errors:
+        raise SyntaxError("unparsable input: " + "; ".join(errors))
+    by_rel = {mod.rel: mod for mod in project.modules}
+    findings: list[Finding] = []
+    for rule in (rules if rules is not None else ALL_RULES):
+        for f in rule.check_project(project):
+            mod = by_rel.get(f.path)
+            if mod is not None and mod.suppressed(f.rule, f.line):
+                continue
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return project, findings

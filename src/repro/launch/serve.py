@@ -82,6 +82,11 @@ def main(argv=None):
                          "forcing preemption pressure; overrides "
                          "--num-pages.  Only meaningful with "
                          "--scheduler preempt")
+    ap.add_argument("--swap-budget-bytes", type=int, default=None,
+                    help="cap on host bytes held by swapped-out lanes; "
+                         "evictions past the cap restart the request "
+                         "instead of swapping.  Only meaningful with "
+                         "--scheduler preempt")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.6)
@@ -116,7 +121,8 @@ def main(argv=None):
                     sampler=SamplerConfig(args.temperature, args.top_p),
                     page_size=args.page_size, num_pages=args.num_pages,
                     prefill_chunk=args.prefill_chunk, kernel=args.kernel,
-                    kv_quant=args.kv_quant, scheduler=args.scheduler)
+                    kv_quant=args.kv_quant, scheduler=args.scheduler,
+                    swap_budget_bytes=args.swap_budget_bytes)
 
     slots = min(args.slots, args.requests)
     if args.oversubscribe and args.page_size:

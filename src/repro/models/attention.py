@@ -415,15 +415,16 @@ def attn_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     itself.  Works on a dense pooled cache, or a paged one when
     ``block_table`` is given; with ``kv_quant`` the paged pools are
     quantized — earlier chunks are read through a dequantizing gather and
-    this chunk's K/V are quantized on write (the chunk's own keys attend
-    raw within the chunk; every later read sees the round-tripped
-    values).
+    this chunk's K/V are quantized once up front, so the chunk's own keys
+    are attended through the same round-tripped values every later read
+    sees and outputs are bitwise independent of the chunk size.
     """
     b, c, _ = x.shape
     length = cache_len(cfg, max_len, local)
     h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
     q, k, v = _qkv(p, cfg, h, positions)
 
+    k_qs = k_d = v_qs = v_d = None
     if kv_quant:
         assert block_table is not None, "kv_quant requires paged caches"
         ck = paged.gather_pages_q8(cache["k_qs"], cache["k_d"], block_table,
@@ -431,19 +432,26 @@ def attn_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
         cv = paged.gather_pages_q8(cache["v_qs"], cache["v_d"], block_table,
                                    length)
         cpos = paged.gather_pages(cache["pos"], block_table, length)
+        # quantize the chunk's K/V once, up front: in-chunk attention uses
+        # the round-tripped view and the same qs/d are scattered below, so
+        # in-chunk and cross-chunk reads are identical
+        k_qs, k_d, k_att = paged.roundtrip_q8(k)
+        v_qs, v_d, v_att = paged.roundtrip_q8(v)
     elif block_table is not None:
         ck = paged.gather_pages(cache["k"], block_table, length)
         cv = paged.gather_pages(cache["v"], block_table, length)
         cpos = paged.gather_pages(cache["pos"], block_table, length)
+        k_att, v_att = k, v
     else:
         ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+        k_att, v_att = k, v
 
     # attend over [old cache view | chunk] so in-chunk ring writes can never
     # evict entries an earlier in-chunk query still needs
     valid_tok = jnp.arange(c)[None, :] < chunk_len[:, None]        # (B, C)
     key_pos = chunk_key_positions(cpos, positions, valid_tok)
-    kk = jnp.concatenate([ck, k.astype(ck.dtype)], axis=1)
-    vv = jnp.concatenate([cv, v.astype(cv.dtype)], axis=1)
+    kk = jnp.concatenate([ck, k_att.astype(ck.dtype)], axis=1)
+    vv = jnp.concatenate([cv, v_att.astype(cv.dtype)], axis=1)
     window = cfg.window if local else 0
     mask_fn = chunk_mask_fn(key_pos, length, positions, start, window)
 
@@ -456,12 +464,16 @@ def attn_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     ok = paged.chunk_write_plan(idx, valid_tok, length)
     wpos = positions.astype(jnp.int32)
     if kv_quant:
-        kq, kd = paged.scatter_chunk_q8(cache["k_qs"], cache["k_d"],
-                                        block_table, idx, k, ok)
-        vq, vd = paged.scatter_chunk_q8(cache["v_qs"], cache["v_d"],
-                                        block_table, idx, v, ok)
+        # scatter the qs/d computed up front — never quantize twice
         new = {
-            "k_qs": kq, "k_d": kd, "v_qs": vq, "v_d": vd,
+            "k_qs": paged.scatter_chunk(cache["k_qs"], block_table, idx,
+                                        k_qs, ok),
+            "k_d": paged.scatter_chunk(cache["k_d"], block_table, idx,
+                                       k_d, ok),
+            "v_qs": paged.scatter_chunk(cache["v_qs"], block_table, idx,
+                                        v_qs, ok),
+            "v_d": paged.scatter_chunk(cache["v_d"], block_table, idx,
+                                       v_d, ok),
             "pos": paged.scatter_chunk(cache["pos"], block_table, idx,
                                        wpos, ok),
         }

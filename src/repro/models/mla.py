@@ -254,7 +254,9 @@ def mla_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     naive evaluation, as in :func:`mla_forward`) and attends the chunk
     queries over it with per-row positional masks; writes the chunk's
     latents into the cache (dense rows or pages; quantized rows when
-    ``kv_quant`` — earlier chunks are read through a dequantizing gather).
+    ``kv_quant`` — earlier chunks are read through a dequantizing gather
+    and the chunk's own latents are attended through the same round trip
+    they are stored with, so outputs are chunk-size independent).
     """
     b, c, _ = x.shape
     nh = cfg.n_heads
@@ -263,21 +265,30 @@ def mla_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     q_nope, q_rope = _project_q(p, cfg, h, positions)
     c_new, kr_new = _latents(p, cfg, h, positions)
 
+    c_qs = c_d = kr_qs = kr_d = None
     if kv_quant:
         assert block_table is not None, "kv_quant requires paged caches"
         ckv = paged.gather_pages_q8(cache["c_kv_qs"], cache["c_kv_d"],
                                     block_table, max_len)
         krope = paged.gather_pages_q8(cache["k_rope_qs"], cache["k_rope_d"],
                                       block_table, max_len)
+        # quantize the chunk's latents once, up front: in-chunk attention
+        # uses the round-tripped view and the same qs/d are scattered
+        # below, so in-chunk and cross-chunk reads are identical and the
+        # output is bitwise independent of the chunk size
+        c_qs, c_d, c_att = paged.roundtrip_q8(c_new)
+        kr_qs, kr_d, kr_att = paged.roundtrip_q8(kr_new)
     elif block_table is not None:
         ckv = paged.gather_pages(cache["c_kv"], block_table, max_len)
         krope = paged.gather_pages(cache["k_rope"], block_table, max_len)
+        c_att, kr_att = c_new, kr_new
     else:
         ckv, krope = cache["c_kv"], cache["k_rope"]
+        c_att, kr_att = c_new, kr_new
 
     valid_tok = jnp.arange(c)[None, :] < chunk_len[:, None]        # (B, C)
-    ckv_all = jnp.concatenate([ckv, c_new.astype(ckv.dtype)], axis=1)
-    kr_all = jnp.concatenate([krope, kr_new.astype(krope.dtype)], axis=1)
+    ckv_all = jnp.concatenate([ckv, c_att.astype(ckv.dtype)], axis=1)
+    kr_all = jnp.concatenate([krope, kr_att.astype(krope.dtype)], axis=1)
     # cache entries carry their logical index (latents store no positions)
     old_pos = jnp.broadcast_to(
         jnp.arange(max_len, dtype=jnp.int32)[None, :], (b, max_len))
@@ -298,12 +309,17 @@ def mla_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     idx = positions.astype(jnp.int32)
     ok = valid_tok                          # full horizon: no ring collisions
     if kv_quant:
-        cq, cd = paged.scatter_chunk_q8(cache["c_kv_qs"], cache["c_kv_d"],
-                                        block_table, idx, c_new, ok)
-        kq, kd = paged.scatter_chunk_q8(cache["k_rope_qs"],
-                                        cache["k_rope_d"], block_table, idx,
-                                        kr_new, ok)
-        new = {"c_kv_qs": cq, "c_kv_d": cd, "k_rope_qs": kq, "k_rope_d": kd}
+        # scatter the qs/d computed up front — never quantize twice
+        new = {
+            "c_kv_qs": paged.scatter_chunk(cache["c_kv_qs"], block_table,
+                                           idx, c_qs, ok),
+            "c_kv_d": paged.scatter_chunk(cache["c_kv_d"], block_table,
+                                          idx, c_d, ok),
+            "k_rope_qs": paged.scatter_chunk(cache["k_rope_qs"], block_table,
+                                             idx, kr_qs, ok),
+            "k_rope_d": paged.scatter_chunk(cache["k_rope_d"], block_table,
+                                            idx, kr_d, ok),
+        }
     elif block_table is not None:
         new = {
             "c_kv": paged.scatter_chunk(cache["c_kv"], block_table, idx,

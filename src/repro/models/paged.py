@@ -163,6 +163,22 @@ def scatter_chunk_q8(qs_pool: jnp.ndarray, d_pool: jnp.ndarray,
             scatter_chunk(d_pool, block_table, idx, d, ok))
 
 
+def roundtrip_q8(val: jnp.ndarray):
+    """Quantize a chunk's rows once: ``(qs, d, dequantized)``.
+
+    ``dequantized`` (``qs * d``, f32) is exactly what every later read of
+    these rows sees (:func:`gather_pages_q8` and the fused q8 kernels
+    compute the same product), so a prefill chunk that attends its *own*
+    K/V through this view — and scatters the returned ``qs``/``d``
+    directly via :func:`scatter_chunk`, never quantizing twice — produces
+    outputs that are bitwise independent of the chunk size: in-chunk and
+    cross-chunk reads go through one identical round trip.
+    """
+    qs, d = quantize_kv_page_pool(val)
+    deq = qs.astype(jnp.float32) * d.astype(jnp.float32)[..., None]
+    return qs, d, deq
+
+
 def extract_pages(pool: jnp.ndarray, page_ids, axis: int = 0) -> jnp.ndarray:
     """Gather whole physical pages ``(n, P, ...)`` for swap-out.
 

@@ -221,6 +221,8 @@ class EngineStats:
     preemptions: int = 0                 # lanes swapped/kicked out, total
     swap_out_bytes: int = 0              # KV bytes device_get to host
     swap_in_bytes: int = 0               # KV bytes injected back on resume
+    swap_held_bytes: int = 0             # peak host bytes held by swapped lanes
+    swap_restarts: int = 0               # LIVE lanes restarted: swap over cap
     # per-iteration scheduler snapshots, recorded after the admission
     # phase: {"queued": [(prio, seq, rid, pages_needed)], "active":
     # [(prio, seq, rid, pages_held)], "free_pages": int, "free_slots":
@@ -318,7 +320,8 @@ class EngineStats:
             lines.append(
                 f"scheduler {self.scheduler}: {self.preemptions} preemptions, "
                 f"swapped out {self.swap_out_bytes} B / in "
-                f"{self.swap_in_bytes} B")
+                f"{self.swap_in_bytes} B (peak held {self.swap_held_bytes} B, "
+                f"{self.swap_restarts} budget restarts)")
             for prio, cs in self.class_stats.items():
                 lines.append(
                     f"  class {prio}: {cs['n']} reqs, queue "
@@ -437,6 +440,14 @@ class Engine:
         original rank and is swapped back in bit-exactly once pages free
         up (mid-prefill victims restart their — deterministic — chunked
         prefill instead).  Requires ``page_size > 0``.
+
+    ``swap_budget_bytes`` (preempt only) caps the host-side swap store:
+    when evicting one more lane would push the held swap bytes past the
+    cap, the victim's KV is discarded and the request restarts from
+    scratch instead (``EngineStats.swap_restarts``) — still bit-exact,
+    since chunk boundaries and the per-request sample streams are
+    deterministic.  ``EngineStats.swap_held_bytes`` reports the peak
+    held bytes, which never exceeds the cap.
     """
 
     SCHEDULERS = ("reserve", "preempt")
@@ -445,7 +456,8 @@ class Engine:
                  eos_id: int = -1, sampler: SamplerConfig = SamplerConfig(),
                  jit: bool = True, page_size: int = 0, num_pages: int = 0,
                  prefill_chunk: int = 0, kernel: str | None = None,
-                 kv_quant: str | None = None, scheduler: str = "reserve"):
+                 kv_quant: str | None = None, scheduler: str = "reserve",
+                 swap_budget_bytes: int | None = None):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -463,6 +475,14 @@ class Engine:
         if scheduler == "preempt" and not page_size:
             raise ValueError("scheduler='preempt' swaps KV pages and "
                              "requires the paged cache (page_size > 0)")
+        if swap_budget_bytes is not None:
+            if scheduler != "preempt":
+                raise ValueError("swap_budget_bytes caps the preemption "
+                                 "scheduler's host swap store; it requires "
+                                 "scheduler='preempt'")
+            if swap_budget_bytes < 0:
+                raise ValueError("swap_budget_bytes must be >= 0")
+        self.swap_budget_bytes = swap_budget_bytes
         self.scheduler = scheduler
         self.kernel = kernel or default_paged_kernel()
         if self.kernel not in ("fused", "gather"):
@@ -550,10 +570,11 @@ class Engine:
         next_tok = sample(logits[:, -1], k0, self.sampler)
         live = np.ones(b, bool)
         for step in range(max_new):
+            host_tok = np.asarray(next_tok)  # one materialisation per step
             for i in range(b):
                 if live[i]:
-                    outs[i].append(int(next_tok[i]))
-                    if int(next_tok[i]) == self.eos_id:
+                    outs[i].append(int(host_tok[i]))
+                    if int(host_tok[i]) == self.eos_id:
                         live[i] = False
             if not live.any() or step == max_new - 1:
                 break
@@ -653,6 +674,22 @@ class Engine:
                                  if lo_specs[k].shape != hi_specs[k].shape)
             slot_leaves = sorted(k for k in lo_specs
                                  if lo_specs[k].shape == hi_specs[k].shape)
+
+        # host swap-store cap (swap_budget_bytes): a lane's swap size is
+        # exactly pages_held x per-page bytes + its dense slot rows, so the
+        # budget check runs BEFORE any device_get — an over-budget victim
+        # discards its KV and restarts instead of swapping
+        swap_held = 0
+        swap_page_b = swap_slot_b = 0
+        if use_paged and preempt:
+            swap_page_b = sum(int(cache[k].nbytes) // num_pages
+                              for k in pool_leaves)
+            swap_slot_b = sum(int(cache[k].nbytes) // slots
+                              for k in slot_leaves)
+
+        def swap_size(lane: _Slot) -> int:
+            return ((len(lane.pages_full) + len(lane.pages_ring))
+                    * swap_page_b + swap_slot_b)
 
         def tables():
             return {"full": jnp.asarray(bt_full), "ring": jnp.asarray(bt_ring)}
@@ -803,11 +840,21 @@ class Engine:
             same cache contents.  Either way the original arrival rank is
             kept, so the request re-enters the queue where it left.
             """
+            nonlocal swap_held
             lane = lanes[s]
             req, seq = lane.req, lane.seq
             stats.preemptions += 1
             req.stats.preemptions += 1
-            if lane.state == _LIVE:
+            over_budget = (
+                lane.state == _LIVE and self.swap_budget_bytes is not None
+                and swap_held + swap_size(lane) > self.swap_budget_bytes)
+            if over_budget:
+                # the host swap store is full: evict-to-restart.  Chunked
+                # prefill boundaries and the per-request sample streams are
+                # deterministic, so the restarted run re-emits the same
+                # tokens — only latency is lost, never exactness.
+                stats.swap_restarts += 1
+            if lane.state == _LIVE and not over_budget:
                 ids = lane.pages_full + lane.pages_ring
                 pool_rows = {
                     k: jax.device_get(paged.extract_pages(
@@ -825,6 +872,8 @@ class Engine:
                     bt_full=bt_full[s].copy(), bt_ring=bt_ring[s].copy(),
                     pool_rows=pool_rows, slot_rows=slot_rows)
                 stats.swap_out_bytes += sw.nbytes
+                swap_held += sw.nbytes
+                stats.swap_held_bytes = max(stats.swap_held_bytes, swap_held)
                 item: Any = sw
             else:
                 req.out = []
@@ -838,7 +887,7 @@ class Engine:
             id -> new id, and scatter the saved rows back.  Attention only
             reads pages through the block table, so the new physical
             layout is invisible — outputs stay bitwise identical."""
-            nonlocal cache
+            nonlocal cache, swap_held
             new_ids = pool.alloc_many(sw.n_pages)
             m = {old: new for old, new in
                  zip(sw.pages_full + sw.pages_ring, new_ids)}
@@ -860,6 +909,7 @@ class Engine:
             lane.pages_ring = [m[p] for p in sw.pages_ring]
             lane.reserve_remaining = 0
             stats.swap_in_bytes += sw.nbytes
+            swap_held -= sw.nbytes
             req.stats.queue_wait_s += time.perf_counter() - enq_t[seq]
 
         def free_up(need: int, key: tuple[int, int]) -> bool:
@@ -1127,7 +1177,9 @@ class Engine:
                     [stream_key(l.req_key, l.n_out) if l.live
                      else jnp.zeros(2, jnp.uint32) for l in lanes])
                 next_tok = sample_per_slot(logits, keys, self.sampler)
-            next_tok = jax.block_until_ready(next_tok)  # honest step timing
+            # one materialisation per step; doubles as the timing barrier
+            # repro-lint: disable=host-sync-in-hot-path (honest step timing)
+            host_tok = np.asarray(jax.block_until_ready(next_tok))
             dt = time.perf_counter() - t0
 
             # -- emit + retire ----------------------------------------------
@@ -1138,7 +1190,7 @@ class Engine:
                 rst = req.stats
                 rst.decode_s += dt
                 rst.decode_tokens += 1
-                tok = int(next_tok[s])
+                tok = int(host_tok[s])
                 req.out.append(tok)
                 lane.tok, lane.pos, lane.n_out = tok, lane.pos + 1, \
                     lane.n_out + 1
@@ -1161,7 +1213,16 @@ class Engine:
         (what the engine did before continuous batching; kept for the
         throughput comparison in benchmarks/engine_bench.py).  Generation
         is clamped to the ``max_len`` cache horizon exactly like
-        :meth:`serve` retires lanes there."""
+        :meth:`serve` retires lanes there.
+
+        With ``kv_quant`` the dense one-shot path doesn't exist (the
+        quantized pools are paged-only), so each request instead runs
+        *alone* through :meth:`serve` — same quantized cache path, same
+        per-request sample streams, no batching or preemption effects —
+        which makes this the bitwise oracle the scheduler tests compare
+        preempted serves against."""
+        if self.kv_quant:
+            return self._serve_sequential_paged(requests, seed)
         t_start = time.perf_counter()
         stats = EngineStats()
         done = []
@@ -1182,6 +1243,37 @@ class Engine:
             done.append(req)
         stats.wall_s = time.perf_counter() - t_start
         self.last_stats = stats
+        return done
+
+    def _serve_sequential_paged(self, requests: list[Request],
+                                seed: int) -> list[Request]:
+        """One request at a time through the full :meth:`serve` path,
+        aggregating the per-call :class:`EngineStats`."""
+        t_start = time.perf_counter()
+        agg = EngineStats()
+        agg.scheduler = self.scheduler
+        done = []
+        for req in requests:
+            done.extend(self.serve([req], slots=1, seed=seed))
+            s = self.last_stats
+            agg.requests.extend(s.requests)
+            agg.total_tokens += s.total_tokens
+            agg.decode_iterations += s.decode_iterations
+            agg.prefill_iterations += s.prefill_iterations
+            agg.live_per_iteration.extend(s.live_per_iteration)
+            agg.live_tokens_per_iteration.extend(s.live_tokens_per_iteration)
+            agg.pages_in_use_per_iteration.extend(
+                s.pages_in_use_per_iteration)
+            agg.decode_kv_bytes += s.decode_kv_bytes
+            agg.decoded_tokens += s.decoded_tokens
+            agg.page_size, agg.num_pages = s.page_size, s.num_pages
+            agg.page_bytes = s.page_bytes
+            agg.kv_quant = s.kv_quant
+            agg.dense_cache_bytes = s.dense_cache_bytes
+            agg.peak_pages = max(agg.peak_pages, s.peak_pages)
+            agg.pages_leaked += s.pages_leaked
+        agg.wall_s = time.perf_counter() - t_start
+        self.last_stats = agg
         return done
 
     # -- internals -----------------------------------------------------------

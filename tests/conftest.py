@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from recompile_guard import recompile_budget  # noqa: F401  (fixture export)
+
 
 @pytest.fixture(autouse=True, scope="module")
 def _clear_jax_caches_between_modules():

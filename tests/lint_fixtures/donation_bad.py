@@ -1,0 +1,32 @@
+"""Known-bad: reading a buffer after donating it to a jit'd call."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _step(cache, tok):
+    return cache * 1.01, tok
+
+
+step = jax.jit(_step, donate_argnums=(0,))
+
+
+@partial(jax.jit, donate_argnames=("state",))
+def update(state, delta):
+    return state + delta
+
+
+def decode_loop(cache, toks):
+    for tok in toks:
+        cache2, out = step(cache, tok)
+        stale = cache.sum()  # EXPECT[donation-reuse]
+        cache = cache2 + stale
+    return cache
+
+
+def apply_updates(state, deltas):
+    new_state = update(state=state, delta=deltas)
+    norm = jnp.linalg.norm(state)  # EXPECT[donation-reuse]
+    return new_state, norm

@@ -1,0 +1,32 @@
+"""Known-good: donation followed by immediate or explicit rebinding."""
+
+import jax
+
+
+def _step(cache, tok):
+    return cache * 1.01, tok
+
+
+step = jax.jit(_step, donate_argnums=(0,))
+plain = jax.jit(_step)
+
+
+def decode_loop(cache, toks):
+    outs = []
+    for tok in toks:
+        cache, out = step(cache, tok)  # donor rebound by the same statement
+        outs.append(out)
+    return cache, outs
+
+
+def rebind_then_read(cache, tok):
+    cache2, out = step(cache, tok)
+    cache = cache2              # rebound before any read
+    total = cache.sum()
+    return total, out
+
+
+def no_donation(cache, tok):
+    # plain jit keeps its inputs alive — reading after the call is fine
+    cache2, out = plain(cache, tok)
+    return cache.sum(), cache2, out

@@ -1,0 +1,43 @@
+"""Known-bad: host synchronisation inside hot paths.
+
+Every tagged line must be flagged by exactly the named rule at exactly
+that line (tests/test_lint.py asserts the full (rule, line) set per
+fixture).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _helper(x):
+    # reachable from decode_step_paged below -> traced context
+    return jax.device_get(x)  # EXPECT[host-sync-in-hot-path]
+
+
+def decode_step_paged(params, cache, toks):
+    y = jnp.dot(toks, toks)
+    y = np.asarray(y)  # EXPECT[host-sync-in-hot-path]
+    z = _helper(y)
+    return z.item()  # EXPECT[host-sync-in-hot-path]
+
+
+def sample(logits, key, cfg):
+    return logits
+
+
+def serve(requests):
+    outs = []
+    next_tok = sample(jnp.zeros((4, 8)), None, None)
+    jax.block_until_ready(next_tok)  # EXPECT[host-sync-in-hot-path]
+    for s in range(4):
+        outs.append(int(next_tok[s]))  # EXPECT[host-sync-in-hot-path]
+    return outs
+
+
+def generate(prompts):
+    toks = sample(jnp.zeros((2, 2)), None, None)
+    vals = []
+    for i in range(2):
+        vals.append(float(toks[i]))  # EXPECT[host-sync-in-hot-path]
+    return vals

@@ -1,0 +1,40 @@
+"""Known-bad: dynamic jit args used where only static values work.
+
+The shape/bound/branch cases are also tracer leaks (the two rules look
+at the same hazard from different angles), so those lines carry both
+EXPECT markers.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def alloc_by_arg(x, n):
+    return x + jnp.zeros((n, 4))  # EXPECT[jit-static-discipline] EXPECT[tracer-leak]
+
+
+@jax.jit
+def loop_by_arg(x, steps):
+    for _ in range(steps):  # EXPECT[jit-static-discipline] EXPECT[tracer-leak]
+        x = x * 2.0
+    return x
+
+
+@jax.jit
+def branch_by_arg(x, flag):
+    if flag:  # EXPECT[jit-static-discipline] EXPECT[tracer-leak]
+        return -x
+    return x
+
+
+@partial(jax.jit, static_argnames=("opts",))
+def unhashable_default(x, opts=[]):  # EXPECT[jit-static-discipline]
+    return x
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def unhashable_kwonly(x, *, cfg={}):  # EXPECT[jit-static-discipline]
+    return x

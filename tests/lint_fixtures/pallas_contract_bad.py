@@ -1,0 +1,77 @@
+"""Known-bad: pallas_call grid/BlockSpec/scratch contract violations."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def arity_mismatch(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],  # EXPECT[pallas-contract]
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)
+
+
+def prefetch_arity(x, idx):
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],  # EXPECT[pallas-contract]
+            out_specs=pl.BlockSpec((8, 128), lambda s, i: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(idx, x)
+
+
+def misaligned_block(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 96), lambda i: (i, 0))],  # EXPECT[pallas-contract]
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)
+
+
+@jax.jit
+def traced_scratch(x, n):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((n, 128), jnp.float32)],  # EXPECT[pallas-contract]
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)
+
+
+def low_precision_acc(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((8, 128), jnp.bfloat16)],  # EXPECT[pallas-contract]
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)
+
+
+def misaligned_scratch(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((8, 64), jnp.float32)],  # EXPECT[pallas-contract]
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)

@@ -1,0 +1,64 @@
+"""Known-good: pallas_call shapes the analyzer must accept as written."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def named_grid(x):
+    # grid and index map bound to local names, spec list splatted in —
+    # the analyzer resolves all three through the local assignments
+    grid = (2, 2, 2)
+    body = lambda i, j, k: (i, j, k)  # noqa: E731
+    kv_specs = [pl.BlockSpec((8, 128), body)]
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[*kv_specs, pl.BlockSpec((8, 256), body)],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j, k: (i, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((8, 128), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)
+
+
+def prefetch_ok(x, idx):
+    # index maps take grid dims + scalar-prefetch operands: 1 + 1 = 2
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((8, 128), lambda s, i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda s, i: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(idx, x)
+
+
+def unknown_grid(x, grid):
+    # grid is a runtime value: arity can't be checked statically, so the
+    # analyzer must skip (not guess) rather than false-positive
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)
+
+
+def scalar_minor_dim(x):
+    # a trailing dim of exactly 1 is a reduction column, not misalignment
+    return pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 1), lambda i: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((8, 1), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((8, 1), jnp.float32),
+    )(x)

@@ -1,0 +1,38 @@
+"""Known-bad: q8_0 cache dicts with broken ``*_qs`` / ``*_d`` pairing."""
+
+import jax.numpy as jnp
+
+
+def missing_scale(num_pages, page, heads, dim):
+    return {
+        "k_qs": jnp.zeros((num_pages, page, heads, dim), jnp.int8),  # EXPECT[q8-leaf-pairing]
+        "v": jnp.zeros((num_pages, page, heads, dim), jnp.bfloat16),
+    }
+
+
+def scale_shape_mismatch(num_pages, page, heads, dim):
+    return {
+        "k_qs": jnp.zeros((num_pages, page, heads, dim), jnp.int8),
+        "k_d": jnp.zeros((num_pages, page, heads, dim), jnp.float32),  # EXPECT[q8-leaf-pairing]
+    }
+
+
+def wrong_value_dtype(num_pages, page, heads, dim):
+    return {
+        "v_qs": jnp.zeros((num_pages, page, heads, dim), jnp.int32),  # EXPECT[q8-leaf-pairing]
+        "v_d": jnp.zeros((num_pages, page, heads), jnp.float32),
+    }
+
+
+def wrong_scale_dtype(num_pages, page, dim):
+    return {
+        "c_kv_qs": jnp.zeros((num_pages, page, dim), jnp.int8),
+        "c_kv_d": jnp.zeros((num_pages, page), jnp.bfloat16),  # EXPECT[q8-leaf-pairing]
+    }
+
+
+def fstring_keys(prefix, n, p, h, d):
+    return {
+        f"{prefix}/kr_qs": jnp.zeros((n, p, h, d), jnp.int8),  # EXPECT[q8-leaf-pairing]
+        f"{prefix}/other": jnp.zeros((n,), jnp.float32),
+    }

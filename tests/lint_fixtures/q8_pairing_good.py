@@ -1,0 +1,33 @@
+"""Known-good: well-formed q8_0 cache dicts."""
+
+import jax.numpy as jnp
+
+
+def paired_pool(num_pages, page, heads, dim):
+    return {
+        "k_qs": jnp.zeros((num_pages, page, heads, dim), jnp.int8),
+        "k_d": jnp.zeros((num_pages, page, heads), jnp.float32),
+        "v_qs": jnp.zeros((num_pages, page, heads, dim), jnp.int8),
+        "v_d": jnp.zeros((num_pages, page, heads), jnp.float32),
+        "pos": jnp.zeros((num_pages,), jnp.int32),
+    }
+
+
+def fstring_paired(prefix, n, p, d):
+    return {
+        f"{prefix}/c_kv_qs": jnp.zeros((n, p, d), jnp.int8),
+        f"{prefix}/c_kv_d": jnp.zeros((n, p), jnp.float32),
+    }
+
+
+def unquantized_pool(num_pages, page, heads, dim):
+    # no *_qs leaves at all — nothing to pair
+    return {
+        "k": jnp.zeros((num_pages, page, heads, dim), jnp.bfloat16),
+        "v": jnp.zeros((num_pages, page, heads, dim), jnp.bfloat16),
+    }
+
+
+def dynamic_keys(names, shapes):
+    # comprehension keys are runtime values — out of static reach
+    return {name: shapes[name] for name in names}

@@ -1,0 +1,41 @@
+"""Known-bad: Python control flow / shape use of traced values."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_tracer(x, y):
+    if x > 0:  # EXPECT[tracer-leak]
+        return y
+    return -y
+
+
+@jax.jit
+def derived_value_leaks(x):
+    s = jnp.sum(x) * 2.0
+    while s > 1.0:  # EXPECT[tracer-leak]
+        s = s / 2.0
+    return s
+
+
+@partial(jax.jit, static_argnames=("n",))
+def assert_on_tracer(x, n):
+    assert x.sum() > 0  # EXPECT[tracer-leak]
+    return x * n
+
+
+@jax.jit
+def iterate_tracer(xs):
+    total = 0.0
+    for row in xs:  # EXPECT[tracer-leak]
+        total = total + row
+    return total
+
+
+@jax.jit
+def tracer_as_shape(x):
+    n = x[0]
+    return jnp.zeros((n, 4))  # EXPECT[tracer-leak]

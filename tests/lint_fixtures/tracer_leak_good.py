@@ -1,0 +1,42 @@
+"""Known-good: sanitized/static uses that must NOT be flagged."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_shape(x, y):
+    # .shape/.ndim/len()/`is None` are static facts, not tracer reads
+    if x.shape[0] > 4:
+        return y
+    if x.ndim == 2 and len(x.shape) == 2:
+        return -y
+    if y is None:
+        return x
+    return x + y
+
+
+@partial(jax.jit, static_argnames=("n",))
+def static_controls(x, n):
+    # static args are concrete: branching and shaping with them is fine
+    if n > 4:
+        x = x * 2.0
+    out = jnp.zeros((n, 4))
+    for _ in range(n):
+        out = out + x[:n]
+    return out
+
+
+@jax.jit
+def lax_control_flow(x):
+    # the traced way to branch: no Python truthiness involved
+    return jax.lax.cond(jnp.sum(x) > 0, lambda v: v, lambda v: -v, x)
+
+
+def not_jitted(x):
+    # plain helper, x is a concrete array — Python control flow is fine
+    if x.sum() > 0:
+        return x
+    return -x

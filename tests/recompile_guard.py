@@ -1,0 +1,146 @@
+"""Jit-recompile sanitizer for engine tests.
+
+A silent retrace is the serving stack's most expensive class of bug: one
+unstable shape/static-arg in the decode step turns every serve() call
+into a compile storm, and nothing fails — latency just quietly grows.
+This module counts compile-cache misses on an :class:`Engine`'s jit'd
+callables (``_decode``, ``_decode_paged``, ``_chunk``, ``_scrub``) over
+a scoped region and fails when a callable compiles more distinct traces
+than its declared budget.
+
+The decode budget is *derived*, not guessed: ``_decode_paged`` is traced
+once per distinct ``active_pages`` bucket, and the engine buckets live
+page counts to powers of two (see ``engine._bucket_pages``), so the
+exact trace ceiling for a serve() of any request mix is the number of
+distinct ``(full, ring)`` bucket pairs over horizons ``1..max_len`` —
+logarithmic in ``max_len / page_size``.  Everything else gets 1 trace
+per guard scope.
+
+Usage — context manager::
+
+    with recompile_guard(engine):
+        engine.serve(requests, slots=4)
+
+or the pytest fixture (checked at teardown)::
+
+    def test_serving(recompile_budget):
+        engine = Engine(model, params, ...)
+        recompile_budget(engine)
+        engine.serve(requests, slots=4)
+
+Cache-size introspection uses the jitted function's ``_cache_size()``;
+engines built with ``jit=False`` expose plain callables and the guard is
+a no-op for them.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import pytest
+
+from repro.models import paged
+from repro.serving.engine import _bucket_pages
+
+_JIT_FIELDS = ("_decode", "_decode_paged", "_chunk", "_scrub")
+
+
+class RecompileBudgetExceeded(AssertionError):
+    """A jit'd engine callable compiled more traces than budgeted."""
+
+
+def _cache_size(fn) -> int | None:
+    size = getattr(fn, "_cache_size", None)
+    return size() if callable(size) else None
+
+
+def decode_bucket_budget(engine) -> int:
+    """Exact ``_decode_paged`` trace ceiling for one engine config: the
+    number of distinct bucketed ``active_pages`` pairs over all live
+    horizons.  Non-fused kernels pass ``active_pages=None`` (one trace).
+    """
+    if engine.kernel != "fused" or engine.page_size <= 0:
+        return 1
+    P = engine.page_size
+    n_full = (paged.pages_for(engine.max_len, P)
+              if engine._has_full else 0)
+    n_ring = (paged.pages_for(engine._ring_len, P)
+              if engine._has_ring else 0)
+    buckets = {
+        (_bucket_pages(paged.pages_for(h, P), n_full),
+         _bucket_pages(paged.pages_for(min(h, engine._ring_len), P),
+                       n_ring))
+        for h in range(1, engine.max_len + 1)
+    }
+    return max(1, len(buckets))
+
+
+def default_budgets(engine) -> dict[str, int]:
+    return {
+        "_decode": 1,
+        "_decode_paged": decode_bucket_budget(engine),
+        "_chunk": 1,
+        "_scrub": 1,
+    }
+
+
+class RecompileGuard:
+    """Snapshots the engine's jit caches at construction; :meth:`check`
+    fails if any callable gained more entries than its budget."""
+
+    def __init__(self, engine, budgets: dict[str, int] | None = None):
+        self.engine = engine
+        self.budgets = dict(default_budgets(engine))
+        if budgets:
+            self.budgets.update(budgets)
+        self._start: dict[str, int] = {}
+        for field in _JIT_FIELDS:
+            size = _cache_size(getattr(engine, field, None))
+            if size is not None:
+                self._start[field] = size
+
+    def misses(self) -> dict[str, int]:
+        """Compile-cache entries gained per tracked callable since the
+        guard was armed."""
+        out = {}
+        for field, start in self._start.items():
+            now = _cache_size(getattr(self.engine, field))
+            if now is not None:
+                out[field] = now - start
+        return out
+
+    def check(self) -> None:
+        over = {f: (n, self.budgets.get(f, 1))
+                for f, n in self.misses().items()
+                if n > self.budgets.get(f, 1)}
+        if over:
+            detail = ", ".join(
+                f"{f}: {n} compiles (budget {b})"
+                for f, (n, b) in sorted(over.items()))
+            raise RecompileBudgetExceeded(
+                f"jit recompile budget exceeded — {detail}; an unstable "
+                f"shape or static argument is forcing retraces in the "
+                f"serving hot path")
+
+
+@contextlib.contextmanager
+def recompile_guard(engine, budgets: dict[str, int] | None = None):
+    guard = RecompileGuard(engine, budgets)
+    yield guard
+    guard.check()
+
+
+@pytest.fixture
+def recompile_budget():
+    """Factory fixture: arm a :class:`RecompileGuard` on each engine the
+    test registers; budgets are enforced at teardown."""
+    guards: list[RecompileGuard] = []
+
+    def attach(engine, budgets: dict[str, int] | None = None):
+        guard = RecompileGuard(engine, budgets)
+        guards.append(guard)
+        return guard
+
+    yield attach
+    for guard in guards:
+        guard.check()

@@ -638,3 +638,32 @@ def test_kv_quant_validation():
         Engine(model, params, kv_quant="q8_0")
     with pytest.raises(ValueError, match="kv_quant"):
         model.init_paged_cache(4, 4, 1, kv_quant="q2_k")
+
+
+# ---------------------------------------------------------------------------
+# (f) chunked prefill is bitwise independent of the admission chunk size
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "deepseek-mla-dense"])
+def test_q8_prefill_chunk_size_invariant_bitwise(arch):
+    """The q8 chunk writer quantizes each chunk's K/V (or MLA latents)
+    exactly once up front and attends the chunk's own keys through that
+    same round trip, so serve outputs are bitwise identical for ANY
+    admission chunk size — including one-chunk (whole-prompt) prefill.
+    This is what lets ``serve_sequential`` be the bitwise oracle for the
+    preemption fuzz (tests/test_scheduler.py)."""
+    cfg, params, model = _get(arch)
+    rng = np.random.default_rng(7)
+    prompts = [[int(t) for t in rng.integers(4, cfg.vocab_size,
+                                             int(rng.integers(5, 14)))]
+               for _ in range(4)]
+    outs = []
+    for chunk in (3, 5, 0):          # 0 = whole prompt in one chunk
+        eng = Engine(model, params, max_len=32, page_size=4, jit=False,
+                     kernel="gather", kv_quant="q8_0", prefill_chunk=chunk,
+                     sampler=SamplerConfig(greedy=True))
+        reqs = [Request(rid=i, prompt=p, max_new=6)
+                for i, p in enumerate(prompts)]
+        eng.serve(reqs, slots=2)
+        outs.append({r.rid: list(r.out) for r in reqs})
+    assert outs[0] == outs[1] == outs[2], outs

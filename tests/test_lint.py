@@ -1,0 +1,240 @@
+"""repro.analysis corpus tests: fixtures, baseline discipline, CLI.
+
+The fixture corpus under ``tests/lint_fixtures/`` is the executable spec
+of the analyzer.  ``*_bad.py`` files tag every line the analyzer must
+flag with a trailing ``# EXPECT[rule-name]`` marker (several markers on
+one line when several rules fire there); the test asserts the *exact*
+(rule, line) set — no missed lines, no extra findings.  ``*_good.py``
+files exercise the sanctioned patterns and must produce zero findings
+under ALL rules.
+"""
+
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.__main__ import main as lint_main
+from repro.analysis.rules import ALL_RULES, RULES_BY_NAME
+
+FIXTURES = Path(__file__).resolve().parent / "lint_fixtures"
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+BASELINE = REPO / ".lint-baseline.json"
+
+_EXPECT = re.compile(r"EXPECT\[([\w\-]+)\]")
+
+BAD = sorted(FIXTURES.glob("*_bad.py"))
+GOOD = sorted(FIXTURES.glob("*_good.py"))
+
+
+def expected_findings(path: Path) -> set[tuple[str, int]]:
+    out = set()
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        for rule in _EXPECT.findall(line):
+            out.add((rule, lineno))
+    return out
+
+
+# ---------------------------------------------------------------- fixtures
+
+def test_corpus_is_present_and_paired():
+    assert BAD and GOOD
+    stems = {p.stem.rsplit("_", 1)[0] for p in BAD}
+    assert stems == {p.stem.rsplit("_", 1)[0] for p in GOOD}
+
+
+def test_corpus_covers_every_rule():
+    tagged = set()
+    for path in BAD:
+        tagged |= {rule for rule, _ in expected_findings(path)}
+    assert tagged == set(RULES_BY_NAME)
+
+
+@pytest.mark.parametrize("path", BAD, ids=lambda p: p.stem)
+def test_bad_fixture_flags_exact_lines(path):
+    want = expected_findings(path)
+    assert want, f"{path.name} has no EXPECT markers"
+    for rule, _ in want:
+        assert rule in RULES_BY_NAME, f"unknown rule in marker: {rule}"
+    _, findings = analyze([str(path)])
+    got = {(f.rule, f.line) for f in findings}
+    assert got == want, (
+        f"missed: {sorted(want - got)}  unexpected: {sorted(got - want)}")
+
+
+@pytest.mark.parametrize("path", GOOD, ids=lambda p: p.stem)
+def test_good_fixture_is_clean(path):
+    _, findings = analyze([str(path)])
+    assert [(f.rule, f.line, f.message) for f in findings] == []
+
+
+# ------------------------------------------------------------ suppressions
+
+_SUPPRESSIBLE = '''\
+CACHE = {
+    "k_qs": 0,  # repro-lint: disable=q8-leaf-pairing
+}
+'''
+
+
+def test_inline_suppression_silences_named_rule(tmp_path):
+    mod = tmp_path / "m.py"
+    mod.write_text(_SUPPRESSIBLE)
+    _, findings = analyze([str(mod)])
+    assert findings == []
+
+    mod.write_text(_SUPPRESSIBLE.replace(
+        "  # repro-lint: disable=q8-leaf-pairing", ""))
+    _, findings = analyze([str(mod)])
+    assert [f.rule for f in findings] == ["q8-leaf-pairing"]
+
+
+def test_suppression_of_other_rule_does_not_silence(tmp_path):
+    mod = tmp_path / "m.py"
+    mod.write_text(_SUPPRESSIBLE.replace("q8-leaf-pairing", "tracer-leak"))
+    _, findings = analyze([str(mod)])
+    assert [f.rule for f in findings] == ["q8-leaf-pairing"]
+
+
+def test_comment_line_suppression_binds_to_next_line(tmp_path):
+    mod = tmp_path / "m.py"
+    mod.write_text(
+        "CACHE = {\n"
+        "    # repro-lint: disable=q8-leaf-pairing\n"
+        '    "k_qs": 0,\n'
+        "}\n")
+    _, findings = analyze([str(mod)])
+    assert findings == []
+
+
+# ----------------------------------------------------- baseline discipline
+
+def test_src_tree_is_clean_against_baseline():
+    """src/ carries zero non-baselined findings (and the checked-in
+    baseline carries zero stale entries) — the CI gate invariant."""
+    entries = baseline_mod.load(str(BASELINE))
+    _, findings = analyze([str(SRC)])
+    new, _, stale = baseline_mod.split(findings, entries)
+    assert [f.render() for f in new] == []
+    assert stale == []
+
+
+def test_fingerprints_survive_line_shifts(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    mod = tmp_path / "m.py"
+    mod.write_text('CACHE = {\n    "k_qs": 0,\n}\n')
+    _, findings = analyze(["m.py"])
+    (_, fp0), = baseline_mod.assign_fingerprints(findings)
+
+    mod.write_text('\n\n# shifted down\n\nCACHE = {\n    "k_qs": 0,\n}\n')
+    _, findings = analyze(["m.py"])
+    (_, fp1), = baseline_mod.assign_fingerprints(findings)
+    assert fp0 == fp1
+
+    mod.write_text('CACHE = {\n    "v_qs": 0,\n}\n')
+    _, findings = analyze(["m.py"])
+    (_, fp2), = baseline_mod.assign_fingerprints(findings)
+    assert fp2 != fp0
+
+
+def test_baseline_roundtrip_and_staleness(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    mod = tmp_path / "m.py"
+    mod.write_text('CACHE = {\n    "k_qs": 0,\n}\n')
+    _, findings = analyze(["m.py"])
+    bl = tmp_path / "bl.json"
+    baseline_mod.save(str(bl), findings)
+
+    entries = baseline_mod.load(str(bl))
+    new, old, stale = baseline_mod.split(findings, entries)
+    assert (len(new), len(old), stale) == (0, 1, [])
+
+    # fix the code -> the baselined entry must go stale, not linger
+    mod.write_text('CACHE = {\n    "k_qs": 0,\n    "k_d": 0,\n}\n')
+    _, findings = analyze(["m.py"])
+    new, old, stale = baseline_mod.split(findings, entries)
+    assert (new, old, len(stale)) == ([], [], 1)
+
+
+# -------------------------------------------------------------------- CLI
+
+def test_cli_clean_tree_exits_zero():
+    assert lint_main([str(SRC), "--baseline", str(BASELINE)]) == 0
+
+
+def test_cli_flags_injected_bad_fixture(capsys):
+    rc = lint_main([str(SRC), str(FIXTURES / "host_sync_bad.py"),
+                    "--baseline", str(BASELINE)])
+    assert rc == 1
+    out = capsys.readouterr()
+    assert "host-sync-in-hot-path" in out.out
+
+
+def test_cli_select_limits_rules():
+    # host_sync_bad has no q8 findings -> selecting only that rule: clean
+    assert lint_main(["--select", "q8-leaf-pairing",
+                      str(FIXTURES / "host_sync_bad.py")]) == 0
+
+
+def test_cli_unknown_rule_is_usage_error(capsys):
+    assert lint_main(["--select", "no-such-rule", str(SRC)]) == 2
+    assert "no-such-rule" in capsys.readouterr().err
+
+
+def test_cli_stale_baseline_fails(tmp_path, capsys):
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({
+        "version": 1,
+        "entries": {"deadbeefdeadbeef": {
+            "rule": "q8-leaf-pairing", "path": "gone.py", "line": 1,
+            "snippet": '"k_qs": 0,'}},
+    }))
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert lint_main([str(clean), "--baseline", str(bl)]) == 1
+    assert "stale" in capsys.readouterr().out
+
+
+def test_cli_json_report(tmp_path):
+    report = tmp_path / "lint_report.json"
+    fixture = FIXTURES / "q8_pairing_bad.py"
+    rc = lint_main([str(fixture), "--json", str(report)])
+    assert rc == 1
+    data = json.loads(report.read_text())
+    assert data["version"] == 1
+    assert data["count"] == len(expected_findings(fixture))
+    assert len(data["new"]) == data["count"]
+    assert data["baselined"] == [] and data["stale_baseline"] == []
+    entry = data["new"][0]
+    assert {"rule", "path", "line", "message"} <= set(entry)
+
+
+def test_cli_update_baseline_then_clean(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+    mod = tmp_path / "m.py"
+    mod.write_text('CACHE = {\n    "k_qs": 0,\n}\n')
+    bl = tmp_path / "bl.json"
+    assert lint_main(["m.py", "--baseline", str(bl),
+                      "--update-baseline"]) == 0
+    capsys.readouterr()
+    assert lint_main(["m.py", "--baseline", str(bl)]) == 0
+
+    assert lint_main(["m.py", "--update-baseline"]) == 2
+
+
+def test_cli_list_rules(capsys):
+    assert lint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in ALL_RULES:
+        assert rule.name in out
+
+
+def test_cli_syntax_error_is_usage_error(tmp_path, capsys):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    assert lint_main([str(bad)]) == 2
+    assert "broken.py" in capsys.readouterr().err

@@ -1,0 +1,80 @@
+"""The jit-recompile sanitizer itself: it must catch a deliberately
+recompiling pattern and stay quiet on a well-behaved jit'd serve."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.engine import Engine, Request
+from repro.serving.sampler import SamplerConfig
+from recompile_guard import (RecompileBudgetExceeded, RecompileGuard,
+                             decode_bucket_budget, recompile_guard)
+from test_paged_cache import _setup
+
+
+def _prompts(rng, n, lo=3, hi=10):
+    return [list(rng.integers(1, 200, rng.integers(lo, hi)))
+            for _ in range(n)]
+
+
+def test_guard_catches_deliberate_recompiles():
+    cfg, params, model = _setup("qwen2-1.5b")
+    eng = Engine(model, params, max_len=32,
+                 sampler=SamplerConfig(greedy=True), jit=True)
+    guard = RecompileGuard(eng)
+    # growing-shape decode inputs: the classic retrace-per-step bug the
+    # guard exists to catch (every new length is a fresh trace)
+    logits, cache = model.prefill(
+        eng.params, {"tokens": jnp.zeros((1, 4), jnp.int32)}, eng.max_len,
+        lengths=jnp.asarray([4], jnp.int32))
+    for n in (1, 2, 3):
+        toks = jnp.zeros((n,), jnp.int32)
+        pos = jnp.arange(n, dtype=jnp.int32) + 4
+        eng._decode(eng.params, cache, toks, pos)
+    assert guard.misses()["_decode"] == 3
+    with pytest.raises(RecompileBudgetExceeded, match="_decode"):
+        guard.check()
+
+
+def test_guard_noop_on_unjitted_engine():
+    cfg, params, model = _setup("qwen2-1.5b")
+    eng = Engine(model, params, max_len=32, jit=False,
+                 sampler=SamplerConfig(greedy=True))
+    with recompile_guard(eng) as guard:
+        eng.generate([[1, 2, 3]], max_new=2)
+    assert guard.misses() == {}      # nothing jitted, nothing tracked
+
+
+def test_decode_bucket_budget_is_logarithmic():
+    cfg, params, model = _setup("qwen2-1.5b")
+    eng = Engine(model, params, max_len=64, page_size=4, kernel="fused",
+                 jit=False, sampler=SamplerConfig(greedy=True))
+    budget = decode_bucket_budget(eng)
+    # 16 full pages -> power-of-two buckets {1,2,4,8,16}: far below the
+    # 16 distinct raw page counts
+    assert 1 <= budget <= 5
+
+
+def test_jitted_serve_respects_decode_budget(rng):
+    cfg, params, model = _setup("qwen2-1.5b")
+    eng = Engine(model, params, max_len=32, page_size=4, prefill_chunk=8,
+                 kernel="fused", jit=True,
+                 sampler=SamplerConfig(greedy=True))
+    reqs = [Request(rid=i, prompt=p, max_new=6)
+            for i, p in enumerate(_prompts(rng, 5))]
+    with recompile_guard(eng):
+        eng.serve(reqs, slots=2)
+    for r in reqs:
+        assert r.out
+
+
+def test_fixture_enforces_at_teardown(rng, recompile_budget):
+    cfg, params, model = _setup("qwen2-1.5b")
+    eng = Engine(model, params, max_len=32, page_size=4, prefill_chunk=8,
+                 kernel="fused", jit=True,
+                 sampler=SamplerConfig(greedy=True))
+    recompile_budget(eng)
+    reqs = [Request(rid=i, prompt=p, max_new=4)
+            for i, p in enumerate(_prompts(rng, 3))]
+    eng.serve(reqs, slots=2)

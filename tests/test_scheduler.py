@@ -5,9 +5,10 @@ traces (prompt lengths, budgets, priority classes, pool sizes, slot
 counts) and checked against oracles:
 
 * **Bitwise outputs** — greedy outputs of an oversubscribed preempting
-  serve equal unpreempted sequential serving (f32) / an unpreempted
-  serve of the same engine (q8_0, whose chunked-prefill quantization
-  already differs from one-shot prefill by design).  The ``gather``
+  serve equal unpreempted sequential serving (f32 and q8_0 both: the
+  chunk writer quantizes each chunk's K/V once up front, so chunked
+  admission is bitwise identical to any other chunking and
+  ``serve_sequential`` is the oracle everywhere).  The ``gather``
   kernel is the bitwise reference path.
 * **Zero leaks + page conservation** — the allocator postconditions
   hold at the end AND at every post-admission snapshot the engine
@@ -49,11 +50,12 @@ def _random_requests(rng, cfg, n_req, n_classes, max_new_hi):
 
 
 def _mk_engine(model, params, *, num_pages, scheduler="preempt",
-               page_size=4, kv_quant=None, max_len=48):
+               page_size=4, kv_quant=None, max_len=48,
+               swap_budget_bytes=None):
     return Engine(model, params, max_len=max_len, page_size=page_size,
                   kernel="gather", jit=False, sampler=_GREEDY,
                   kv_quant=kv_quant, num_pages=num_pages,
-                  scheduler=scheduler)
+                  scheduler=scheduler, swap_budget_bytes=swap_budget_bytes)
 
 
 def _serve(eng, req_dicts, slots, seed=0):
@@ -186,19 +188,20 @@ def test_fuzz_preempt_bitwise_vs_sequential_f32(seed):
 @settings(max_examples=2, deadline=None)
 @given(st.integers(0, 2**31 - 1))
 def test_fuzz_preempt_bitwise_q8(seed):
-    """q8_0 pools: preemption swaps int8+scale rows verbatim, so a
-    preempted serve is bitwise-identical to the same engine serving
-    from a roomy pool with zero preemptions.  (Sequential one-shot
-    prefill quantizes blocks differently from chunked admission, so the
-    unpreempted SERVE is the right bitwise oracle here.)"""
+    """q8_0 pools: preemption swaps int8+scale rows verbatim, and the
+    chunk writer round-trips each chunk's K/V exactly once, so a
+    preempted serve is bitwise-identical to serving each request ALONE
+    through the quantized path (``serve_sequential``) — the strictest
+    oracle: no batching, no preemption, no shared pool."""
     cfg, params, model = _setup("qwen2-1.5b")
     rng = np.random.default_rng(seed)
     reqs = _random_requests(rng, cfg, int(rng.integers(3, 6)), 2, 8)
     slots = int(rng.integers(2, 4))
 
     big = _mk_engine(model, params, num_pages=0, kv_quant="q8_0")
-    ref, ref_stats = _serve(big, reqs, slots=slots)
-    assert ref_stats.preemptions == 0
+    seq_done = big.serve_sequential([Request(**d) for d in reqs], seed=0)
+    ref = {r.rid: list(r.out) for r in seq_done}
+    assert big.last_stats.preemptions == 0
 
     worst_one = paged.pages_for(48, 4)
     small = _mk_engine(model, params, kv_quant="q8_0",
@@ -232,3 +235,75 @@ def test_fuzz_recurrent_swap_state(seed):
     assert stats.pages_leaked == 0
     _check_conservation(stats)
     _check_no_inversion(stats, slots=3)
+
+
+# -- host swap-store budget (Engine(swap_budget_bytes=...)) ----------------
+
+def test_swap_budget_requires_preempt_scheduler():
+    cfg, params, model = _setup("qwen2-1.5b")
+    with pytest.raises(ValueError, match="preempt"):
+        Engine(model, params, max_len=48, page_size=4, jit=False,
+               sampler=_GREEDY, swap_budget_bytes=1 << 20)
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fuzz_swap_budget_zero_restarts_bitwise(seed):
+    """swap_budget_bytes=0: every LIVE eviction takes the restart path
+    instead of swapping — zero host bytes move, and outputs stay bitwise
+    equal to the unpreempted reference because chunk boundaries and the
+    per-request sample streams make restarts deterministic."""
+    cfg, params, model = _setup("qwen2-1.5b")
+    rng = np.random.default_rng(seed)
+    reqs = _random_requests(rng, cfg, int(rng.integers(3, 6)), 2, 8)
+    slots = int(rng.integers(2, 4))
+
+    big = _mk_engine(model, params, num_pages=0)
+    ref, ref_stats = _serve(big, reqs, slots=slots)
+    assert ref_stats.preemptions == 0
+
+    worst_one = paged.pages_for(48, 4)
+    small = _mk_engine(model, params,
+                       num_pages=paged.RESERVED_PAGES + worst_one + 2,
+                       swap_budget_bytes=0)
+    got, stats = _serve(small, reqs, slots=slots)
+    assert got == ref, {k: (ref[k], got[k]) for k in ref if got[k] != ref[k]}
+    assert stats.swap_out_bytes == 0 and stats.swap_in_bytes == 0
+    assert stats.swap_held_bytes == 0
+    assert stats.pages_leaked == 0
+    _check_conservation(stats)
+    _check_no_inversion(stats, slots=slots)
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fuzz_swap_budget_caps_peak_held(seed):
+    """A finite swap_budget_bytes is a hard cap: peak swap_held_bytes
+    never exceeds it, and when the uncapped run's peak was above the
+    cap, the capped run provably restarted at least one lane (the two
+    runs are identical up to the first over-cap eviction)."""
+    cfg, params, model = _setup("qwen2-1.5b")
+    rng = np.random.default_rng(seed)
+    reqs = _random_requests(rng, cfg, int(rng.integers(4, 7)), 2, 8)
+    slots = int(rng.integers(2, 4))
+
+    big = _mk_engine(model, params, num_pages=0)
+    ref, _ = _serve(big, reqs, slots=slots)
+
+    worst_one = paged.pages_for(48, 4)
+    num_pages = paged.RESERVED_PAGES + worst_one + 2
+    free = _mk_engine(model, params, num_pages=num_pages)
+    got0, stats0 = _serve(free, reqs, slots=slots)
+    assert got0 == ref
+
+    budget = max(stats0.swap_held_bytes // 2, 1)
+    capped = _mk_engine(model, params, num_pages=num_pages,
+                        swap_budget_bytes=budget)
+    got, stats = _serve(capped, reqs, slots=slots)
+    assert got == ref, {k: (ref[k], got[k]) for k in ref if got[k] != ref[k]}
+    assert stats.swap_held_bytes <= budget
+    if stats0.swap_held_bytes > budget:
+        assert stats.swap_restarts > 0
+    assert stats.pages_leaked == 0
+    _check_conservation(stats)
+    _check_no_inversion(stats, slots=slots)
