@@ -92,12 +92,27 @@ def _tight_pool(eng: Engine, reqs: list[Request], slots: int) -> int:
 def run(requests: int = 8, slots: int = 4, jit: bool = True,
         arch: str = "qwen2-1.5b", page_size: int = 16,
         prefill_chunk: int = 32, max_len: int = 1024,
+        mesh: str | None = None,
         results_out: dict | None = None) -> list[tuple[str, float, str]]:
     """Returns CSV rows; when ``results_out`` is given it is filled with
-    ``{policy: {mode: EngineStats}}`` for :func:`gate`."""
+    ``{policy: {mode: EngineStats}}`` for :func:`gate`.
+
+    ``mesh`` ("host" or "DxM") adds a **mesh** mode — ``Engine(mesh=...)``
+    serving with sharded weights + KV pools — plus deterministic
+    ``engine/*/mesh/*`` rows from the AOT-compiled sharded decode step
+    (device count, collective bytes, and the ``roofline/`` no-overlap
+    step-time bound the measured step is soft-gated against)."""
     cfg = CONFIGS[arch].reduced()
     params = init_params(cfg, seed=0, dtype=jnp.float32)
     model = Model(cfg, dtype=jnp.float32)
+
+    mesh_obj = None
+    if mesh:
+        from repro.launch.mesh import mesh_from_spec
+        try:
+            mesh_obj = mesh_from_spec(mesh)
+        except ValueError as e:
+            print(f"# --mesh {mesh} skipped: {e}")
 
     rows = []
     print(f"\n# engine bench: {requests} mixed-length requests, "
@@ -129,6 +144,9 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
                                **paged_kw),
             "oversub": oversub,
         }
+        if mesh_obj is not None:
+            engines["mesh"] = Engine(model, p, kernel="fused",
+                                     mesh=mesh_obj, **paged_kw)
         results = {}
         for mode, eng in engines.items():
             # warmup pass with the full prompt-length mix so every jit
@@ -179,6 +197,28 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
                 rows.append((f"engine/{pol}/{mode}/swapbytes",
                              float(st.swap_out_bytes),
                              f"{st.swap_out_bytes}B"))
+        if mesh_obj is not None:
+            # deterministic sharded-step rows from the AOT-compiled HLO:
+            # what the mesh actually costs in collectives, and the
+            # roofline no-overlap bound the measured step is gated against
+            from repro.configs.base import InputShape
+            from repro.models.spec import count_active_params
+            from repro.roofline import analysis as rfa
+            compiled = engines["mesh"].compile_decode_step(slots)
+            flops = rfa.model_flops_estimate(
+                cfg, InputShape("serve_step", max_len, slots, "decode"),
+                count_active_params(cfg))
+            rl = rfa.analyze(compiled, flops, mesh_obj.size)
+            st = results["mesh"]
+            st.roofline_step_s = rl.step_s           # gate() reads these
+            st.roofline_dominant = rl.dominant
+            rows.append((f"engine/{pol}/mesh/devices", float(mesh_obj.size),
+                         results["mesh"].mesh))
+            rows.append((f"engine/{pol}/mesh/collective",
+                         float(rl.collectives.bytes_ici),
+                         f"{rl.collectives.bytes_ici:.0f}B/step"))
+            rows.append((f"engine/{pol}/mesh/roofline",
+                         rl.step_s * 1e6, f"{rl.dominant}-bound"))
         if results_out is not None:
             results_out[pol] = dict(results)
     return rows
@@ -259,6 +299,28 @@ def gate(results: dict, requests: int = 8) -> list[str]:
         if not any(r.queue_wait_s > 0 for r in ov.requests):
             failures.append(f"{pol}: no queue-time stats recorded in the "
                             f"oversubscribed mode")
+        # mesh mode (--mesh): sharded serve must complete the workload
+        # without leaks, and the measured decode step can never beat the
+        # roofline no-overlap lower bound computed from its own compiled
+        # HLO — if it does, the cost accounting (or the sharding) is wrong
+        ms = res.get("mesh")
+        if ms is not None:
+            if len(ms.requests) != requests:
+                failures.append(
+                    f"{pol}: mesh serve completed "
+                    f"{len(ms.requests)}/{requests} requests")
+            if ms.pages_leaked:
+                failures.append(
+                    f"{pol}: mesh serve leaked {ms.pages_leaked} pages")
+            bound = getattr(ms, "roofline_step_s", 0.0)
+            steps = [r.decode_s / r.decode_tokens for r in ms.requests
+                     if r.decode_tokens]
+            measured = float(np.mean(steps)) if steps else 0.0
+            if measured and bound and measured < bound:
+                failures.append(
+                    f"{pol}: measured mesh decode step {measured * 1e6:.1f}"
+                    f"us beats the roofline bound {bound * 1e6:.1f}us — "
+                    f"cost accounting broken")
     return failures
 
 
@@ -274,6 +336,13 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--no-jit", action="store_true")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="add the sharded-serving mode: 'host' or 'DxM' "
+                         "(e.g. 2x4); emits engine/*/mesh/* rows and "
+                         "soft-gates the measured step against roofline/. "
+                         "CPU: set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8 first.  Skipped (with a note) "
+                         "when the devices aren't there")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write rows as a JSON artifact")
     ap.add_argument("--gate", action="store_true",
@@ -286,7 +355,7 @@ def main():
     rows = run(args.requests, args.slots, jit=not args.no_jit,
                arch=args.arch, page_size=args.page_size,
                prefill_chunk=args.prefill_chunk, max_len=args.max_len,
-               results_out=results)
+               mesh=args.mesh, results_out=results)
     if args.json:
         from .run import write_rows_json
         write_rows_json(rows, args.json)

@@ -1,0 +1,134 @@
+"""Refresh or drift-check the committed benchmark snapshots.
+
+``BENCH_engine.json`` and ``BENCH_kernels.json`` live at the repo root
+so every PR carries the benchmark surface it shipped with:
+
+  PYTHONPATH= python scripts/bench_refresh.py --write        # refresh both
+  python scripts/bench_refresh.py --check \
+      --fresh-engine BENCH_engine.fresh.json \
+      --fresh-kernels BENCH_kernels.fresh.json               # CI drift gate
+
+``--write`` reruns the kernel and engine suites (the engine suite with
+``--mesh 2x4`` so the sharded ``engine/*/mesh/*`` rows are part of the
+snapshot) and overwrites the committed files.  ``--check`` diffs a fresh
+CI run against the committed snapshot:
+
+  * the row-name *set* must match exactly — a new or vanished benchmark
+    row means the snapshot was not refreshed with the code change;
+  * rows whose values are deterministic byte/count accounting (not
+    timings) must match exactly: engine ``/mem``, ``/kvtraffic``,
+    ``/preemptions``, ``/swapbytes`` and ``mesh/devices`` values, and
+    the derived ``B/tok`` strings of the ``paged_attn/`` kernel rows.
+
+Timing values (``us_per_call`` of throughput rows, ``mesh/collective``
+and ``mesh/roofline`` which track the XLA version) are exempt.  Exit
+codes: 0 = clean, 3 = drift (CI softens this to a warning), 1 = usage
+or missing file.
+
+The XLA device-count flag is injected before the first jax import so the
+``--write`` path can build the 2x4 CPU mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENGINE_SNAP = os.path.join(ROOT, "BENCH_engine.json")
+KERNELS_SNAP = os.path.join(ROOT, "BENCH_kernels.json")
+MESH_SPEC = "2x4"
+
+# engine rows whose us_per_call field is deterministic accounting
+# (bytes, counts, device totals), not a timing
+_EXACT_VALUE_SUFFIXES = ("/mem", "/kvtraffic", "/preemptions",
+                         "/swapbytes", "/devices")
+
+
+def _load(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        return {row["name"]: row for row in json.load(f)}
+
+
+def _diff(committed: dict, fresh: dict, label: str) -> list[str]:
+    out = []
+    gone = sorted(set(committed) - set(fresh))
+    new = sorted(set(fresh) - set(committed))
+    if gone:
+        out.append(f"{label}: rows in snapshot but not in fresh run: {gone}")
+    if new:
+        out.append(f"{label}: rows in fresh run but not in snapshot: {new}")
+    for name in sorted(set(committed) & set(fresh)):
+        a, b = committed[name], fresh[name]
+        if name.endswith(_EXACT_VALUE_SUFFIXES):
+            if a["us_per_call"] != b["us_per_call"]:
+                out.append(f"{label}: {name} value drifted "
+                           f"{a['us_per_call']} -> {b['us_per_call']}")
+        if name.startswith("paged_attn/") and a["derived"] != b["derived"]:
+            out.append(f"{label}: {name} derived drifted "
+                       f"{a['derived']!r} -> {b['derived']!r}")
+    return out
+
+
+def write() -> None:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    sys.path.insert(0, ROOT)
+    from benchmarks import engine_bench, kernel_bench
+    from benchmarks.run import write_rows_json
+
+    # --only paged, matching CI's kernel-bench step: the committed
+    # snapshot and the fresh CI artifact must cover the same rows
+    write_rows_json(kernel_bench.run_paged(), KERNELS_SNAP)
+    write_rows_json(engine_bench.run(mesh=MESH_SPEC), ENGINE_SNAP)
+
+
+def check(fresh_engine: str | None, fresh_kernels: str | None) -> int:
+    if not fresh_engine and not fresh_kernels:
+        print("--check needs --fresh-engine and/or --fresh-kernels "
+              "(the JSON a CI bench step just wrote)")
+        return 1
+    drift: list[str] = []
+    for snap, fresh, label in ((ENGINE_SNAP, fresh_engine, "engine"),
+                               (KERNELS_SNAP, fresh_kernels, "kernels")):
+        if not fresh:
+            continue
+        for path in (snap, fresh):
+            if not os.path.exists(path):
+                print(f"missing {path} — run --write and commit the snapshot")
+                return 1
+        drift += _diff(_load(snap), _load(fresh), label)
+    for msg in drift:
+        print(f"BENCH DRIFT: {msg}")
+    if drift:
+        print("refresh with: PYTHONPATH= python scripts/bench_refresh.py "
+              "--write   (then commit BENCH_*.json)")
+        return 3
+    print("bench snapshots match the fresh run")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--write", action="store_true",
+                      help="rerun both suites, overwrite committed snapshots")
+    mode.add_argument("--check", action="store_true",
+                      help="diff fresh bench JSON against the snapshots")
+    ap.add_argument("--fresh-engine", default=None, metavar="PATH")
+    ap.add_argument("--fresh-kernels", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    if args.write:
+        write()
+        return 0
+    return check(args.fresh_engine, args.fresh_kernels)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

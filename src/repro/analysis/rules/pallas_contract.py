@@ -14,7 +14,10 @@
 * **Lane alignment** — literal block/scratch minor dims that are not a
   multiple of 128 under-utilise the VPU lanes on the TPU target (tiny
   odd test shapes are runtime values, not literals, so they don't trip
-  this).
+  this).  A kernel launched under ``shard_map`` sees *per-shard* shapes,
+  so ``global // shards`` FloorDiv literals are folded and the quotient
+  checked — a globally aligned dim that shards to an unaligned one is
+  exactly the misalignment the runtime would hide until a real TPU run.
 """
 
 from __future__ import annotations
@@ -184,6 +187,22 @@ class PallasContractRule(Rule):
                 out.append(el)
         return out
 
+    @staticmethod
+    def _minor_literal(node) -> tuple[int, str] | None:
+        """Resolve a minor-dim expression to a literal: a plain int
+        constant, or a constant ``global // shards`` FloorDiv — the
+        per-shard block shape a kernel sees under ``shard_map``."""
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return node.value, ""
+        if (isinstance(node, ast.BinOp) and isinstance(node.op, ast.FloorDiv)
+                and isinstance(node.left, ast.Constant)
+                and isinstance(node.left.value, int)
+                and isinstance(node.right, ast.Constant)
+                and isinstance(node.right.value, int)
+                and node.right.value > 0):
+            return node.left.value // node.right.value, " per shard"
+        return None
+
     def _check_blockspec(self, mod: SourceModule, spec: ast.Call,
                          expected: int | None, lambdas):
         index_map = None
@@ -205,13 +224,13 @@ class PallasContractRule(Rule):
                     f"spec provides {expected} (grid dims + scalar-prefetch "
                     f"operands)")
         if block_shape is not None and len(block_shape.elts) >= 2:
-            last = block_shape.elts[-1]
-            if (isinstance(last, ast.Constant) and isinstance(last.value, int)
-                    and last.value > 1 and last.value % _LANES):
+            lit = self._minor_literal(block_shape.elts[-1])
+            if lit is not None and lit[0] > 1 and lit[0] % _LANES:
                 yield mod.finding(
                     self.name, spec,
-                    f"BlockSpec minor dim {last.value} is not a multiple "
-                    f"of {_LANES} — misaligned with the VPU lanes on TPU")
+                    f"BlockSpec minor dim {lit[0]}{lit[1]} is not a "
+                    f"multiple of {_LANES} — misaligned with the VPU "
+                    f"lanes on TPU")
 
     def _check_scratch(self, mod: SourceModule, sc: ast.expr,
                        traced: set[str]):
@@ -228,14 +247,13 @@ class PallasContractRule(Rule):
                         self.name, sc,
                         f"scratch shape depends on traced argument "
                         f"`{hit[0]}` — scratch shapes must be static")
-            last = shape.elts[-1] if shape.elts else None
-            if (isinstance(last, ast.Constant)
-                    and isinstance(last.value, int)
-                    and last.value > 1 and last.value % _LANES):
+            lit = (self._minor_literal(shape.elts[-1])
+                   if shape.elts else None)
+            if lit is not None and lit[0] > 1 and lit[0] % _LANES:
                 yield mod.finding(
                     self.name, sc,
-                    f"scratch minor dim {last.value} is not a multiple of "
-                    f"{_LANES} — misaligned with the VPU lanes on TPU")
+                    f"scratch minor dim {lit[0]}{lit[1]} is not a multiple "
+                    f"of {_LANES} — misaligned with the VPU lanes on TPU")
         if len(sc.args) >= 2:
             dt = dotted(sc.args[1])
             if dt and _last_segment(dt) in ("bfloat16", "float16", "int8",

@@ -51,9 +51,19 @@ xla):
     is the fast path on hosts without Mosaic, and what ``"auto"`` picks
     whenever the Pallas default would be interpret mode.
 
+Every entry point takes ``mesh=None`` (``Engine(mesh=...)`` threads the
+serving mesh through): with a mesh the Pallas path runs under
+``shard_map`` — head-parallel when the (kv-)head axis divides the
+``model`` mesh axis (each device attends its own head slice of the page
+pools; heads are independent, so there are no collectives), fully
+replicated otherwise — while the XLA twin stays a plain jit body and
+lets GSPMD partition the bounded gather over sharded pool operands.
+
 For full MXU/VPU utilisation on TPU, ``page_size`` should be a multiple of
 128 and head counts multiples of 8; the tests intentionally use tiny odd
-pages, which interpret mode accepts.
+pages, which interpret mode accepts.  Under ``shard_map`` the 128-lane
+alignment contract applies to the *per-shard* shapes (global dim /
+mesh-axis size), which is what the pallas-contract lint rule checks.
 """
 
 from __future__ import annotations
@@ -65,6 +75,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+try:  # moved to the jax namespace in newer releases
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # pragma: no cover
+    from jax import shard_map
 
 from .common import _interpret_default
 
@@ -149,7 +164,8 @@ def paged_attn_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                       active_pages: int | None = None,
                       lane_pages: jax.Array | None = None,
                       impl: str | None = None,
-                      interpret: bool | None = None) -> jax.Array:
+                      interpret: bool | None = None,
+                      mesh=None) -> jax.Array:
     """Fused one-token paged GQA decode.
 
     q: (B, H, D) query row per slot (RoPE already applied, unscaled);
@@ -172,7 +188,7 @@ def paged_attn_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         scale=(q.shape[-1] ** -0.5 if scale is None else scale),
         nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
         interpret=(_interpret_default() if interpret is None else interpret),
-        quant=False)
+        quant=False, mesh=mesh)
 
 
 def _gathered_kv(kv: tuple, btj: jax.Array, quant: bool):
@@ -210,10 +226,11 @@ def _xla_attn(q, ks, vs, ps, pos, *, window, softcap, scale):
 
 
 @partial(jax.jit, static_argnames=("window", "softcap", "scale", "nj",
-                                   "impl", "interpret", "quant"))
+                                   "impl", "interpret", "quant", "mesh"))
 def _attn_core(q, kv, pos_pool, block_table, pos, lane_pages, *,
                window: int, softcap: float, scale: float, nj: int,
-               impl: str, interpret: bool, quant: bool) -> jax.Array:
+               impl: str, interpret: bool, quant: bool,
+               mesh=None) -> jax.Array:
     """Shared GQA flash-decode scaffold.  ``kv`` is ``(k_pool, v_pool)``
     (``quant=False``) or ``(k_qs, k_d, v_qs, v_d)`` (``quant=True``); the
     score/mask/online-softmax body is identical — only the page tile
@@ -224,11 +241,15 @@ def _attn_core(q, kv, pos_pool, block_table, pos, lane_pages, *,
     trailing grid steps revisit the lane's own last page (already
     resident — Pallas skips the copy), and the validity mask gains
     ``j < lane_pages[i]`` so the revisited page is never double-counted.
+
+    ``mesh`` (static): run the Pallas path under ``shard_map`` on it —
+    head-parallel when the kv-head axis divides the ``model`` axis, fully
+    replicated otherwise.  The XLA twin ignores it (GSPMD partitions the
+    bounded gather over sharded operands under the caller's jit).
     """
     b, h, d = q.shape
     tp, hkv = kv[0].shape[1], kv[0].shape[2]
     dv = (kv[2] if quant else kv[1]).shape[-1]
-    rep = h // hkv
     if impl == "xla":
         btj = block_table[:, :nj]
         ks, vs = _gathered_kv(kv, btj, quant)
@@ -243,90 +264,125 @@ def _attn_core(q, kv, pos_pool, block_table, pos, lane_pages, *,
             ps.reshape(b, nj * tp), pos,
             window=window, softcap=softcap, scale=scale)
 
-    def kernel(bt_ref, pos_ref, lp_ref, q_ref, *refs):
-        del bt_ref
-        *kv_refs, pp_ref, o_ref, m_ref, l_ref, acc_ref = refs
-        _init_accumulators(m_ref, l_ref, acc_ref)
+    def shard_run(block_table, pos, lane_pages, q, *rest):
+        """Build + invoke the pallas_call.  Shapes derive from the
+        operands, which are *per-shard* inside shard_map — so the kernel,
+        BlockSpecs and scratch all see the local head slice."""
+        *kv_ops, pos_pool = rest
+        b, h, d = q.shape
+        tp, hkv = kv_ops[0].shape[1], kv_ops[0].shape[2]
+        dv = (kv_ops[2] if quant else kv_ops[1]).shape[-1]
+        rep = h // hkv
+
+        def kernel(bt_ref, pos_ref, lp_ref, q_ref, *refs):
+            del bt_ref
+            *kv_refs, pp_ref, o_ref, m_ref, l_ref, acc_ref = refs
+            _init_accumulators(m_ref, l_ref, acc_ref)
+            if quant:
+                kq_ref, kd_ref, vq_ref, vd_ref = kv_refs
+                kt = kq_ref[0].astype(jnp.float32) * kd_ref[0][..., None]
+
+                def v_pages():
+                    return vq_ref[0].astype(jnp.float32) * vd_ref[0][..., None]
+            else:
+                k_ref, v_ref = kv_refs
+                kt = k_ref[0].astype(jnp.float32)            # (P, Hkv, D)
+
+                def v_pages():
+                    return v_ref[0].astype(jnp.float32)
+
+            qv = q_ref[0].astype(jnp.float32) * scale        # (H, D)
+            q2 = qv.reshape(hkv, rep, d)
+            s = jax.lax.dot_general(                         # (Hkv, rep, P)
+                q2, kt, (((2,), (2,)), ((0,), (1,))),
+                preferred_element_type=jnp.float32).reshape(h, tp)
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            pt = pp_ref[0]                                   # (P,) int32
+            pb = pos_ref[pl.program_id(0)]
+            valid = (pt >= 0) & (pt <= pb)
+            if window:
+                valid &= pt > pb - window
+            # clamped trailing steps revisit the lane's last (live!) page:
+            # mask them out so its keys are not folded in twice
+            valid &= pl.program_id(1) < lp_ref[pl.program_id(0)]
+            s = jnp.where(valid[None, :], s, NEG_INF)
+
+            def v_tile(p):
+                p3 = p.reshape(hkv, rep, tp)
+                return jax.lax.dot_general(                  # (Hkv, rep, Dv)
+                    p3, v_pages(), (((2,), (0,)), ((0,), (1,))),
+                    preferred_element_type=jnp.float32).reshape(h, dv)
+
+            _online_update(s, valid, v_tile, m_ref, l_ref, acc_ref)
+            _finish(o_ref, acc_ref, l_ref, nj)
+
+        # clamp to the lane's last live page: consecutive trailing grid
+        # steps then resolve to the same physical block, which Pallas
+        # keeps resident instead of issuing a fresh DMA
+        pj = lambda i, j, bt, ps, lp: bt[i, jnp.minimum(j, lp[i] - 1)]  # noqa: E731,E501
+        page4 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0, 0, 0)  # noqa: E731,E501
+        page3 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0, 0)     # noqa: E731,E501
         if quant:
-            kq_ref, kd_ref, vq_ref, vd_ref = kv_refs
-            kt = kq_ref[0].astype(jnp.float32) * kd_ref[0][..., None]
-
-            def v_pages():
-                return vq_ref[0].astype(jnp.float32) * vd_ref[0][..., None]
+            kv_specs = [
+                pl.BlockSpec((1, tp, hkv, d), page4),
+                pl.BlockSpec((1, tp, hkv), page3),
+                pl.BlockSpec((1, tp, hkv, dv), page4),
+                pl.BlockSpec((1, tp, hkv), page3),
+            ]
         else:
-            k_ref, v_ref = kv_refs
-            kt = k_ref[0].astype(jnp.float32)                # (P, Hkv, D)
+            kv_specs = [
+                pl.BlockSpec((1, tp, hkv, d), page4),
+                pl.BlockSpec((1, tp, hkv, dv), page4),
+            ]
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(b, nj),
+            in_specs=[
+                pl.BlockSpec((1, h, d), lambda i, j, bt, ps, lp: (i, 0, 0)),
+                *kv_specs,
+                pl.BlockSpec((1, tp),
+                             lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp),
+                                                       0)),
+            ],
+            out_specs=pl.BlockSpec((1, h, dv),
+                                   lambda i, j, bt, ps, lp: (i, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((h, _LANES), jnp.float32),
+                pltpu.VMEM((h, _LANES), jnp.float32),
+                pltpu.VMEM((h, dv), jnp.float32),
+            ],
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((b, h, dv), jnp.float32),
+            interpret=interpret,
+        )(block_table, pos, lane_pages, q, *kv_ops, pos_pool)
 
-            def v_pages():
-                return v_ref[0].astype(jnp.float32)
-
-        qv = q_ref[0].astype(jnp.float32) * scale            # (H, D)
-        q2 = qv.reshape(hkv, rep, d)
-        s = jax.lax.dot_general(                             # (Hkv, rep, P)
-            q2, kt, (((2,), (2,)), ((0,), (1,))),
-            preferred_element_type=jnp.float32).reshape(h, tp)
-        if softcap:
-            s = softcap * jnp.tanh(s / softcap)
-        pt = pp_ref[0]                                       # (P,) int32
-        pb = pos_ref[pl.program_id(0)]
-        valid = (pt >= 0) & (pt <= pb)
-        if window:
-            valid &= pt > pb - window
-        # clamped trailing steps revisit the lane's last (live!) page:
-        # mask them out so its keys are not folded in twice
-        valid &= pl.program_id(1) < lp_ref[pl.program_id(0)]
-        s = jnp.where(valid[None, :], s, NEG_INF)
-
-        def v_tile(p):
-            p3 = p.reshape(hkv, rep, tp)
-            return jax.lax.dot_general(                      # (Hkv, rep, Dv)
-                p3, v_pages(), (((2,), (0,)), ((0,), (1,))),
-                preferred_element_type=jnp.float32).reshape(h, dv)
-
-        _online_update(s, valid, v_tile, m_ref, l_ref, acc_ref)
-        _finish(o_ref, acc_ref, l_ref, nj)
-
-    # clamp to the lane's last live page: consecutive trailing grid steps
-    # then resolve to the same physical block, which Pallas keeps resident
-    # instead of issuing a fresh DMA
-    pj = lambda i, j, bt, ps, lp: bt[i, jnp.minimum(j, lp[i] - 1)]  # noqa: E731,E501
-    page4 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0, 0, 0)  # noqa: E731,E501
-    page3 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0, 0)     # noqa: E731,E501
-    if quant:
-        kv_specs = [
-            pl.BlockSpec((1, tp, hkv, d), page4),
-            pl.BlockSpec((1, tp, hkv), page3),
-            pl.BlockSpec((1, tp, hkv, dv), page4),
-            pl.BlockSpec((1, tp, hkv), page3),
-        ]
+    args = (block_table, pos, lane_pages, q, *kv, pos_pool)
+    if mesh is None:
+        return shard_run(*args)
+    PS = jax.sharding.PartitionSpec
+    msize = mesh.shape.get("model", 1)
+    if msize > 1 and hkv % msize == 0 and h % msize == 0:
+        # embarrassingly parallel over head groups: each device attends
+        # its own kv-head slice of the pools with its own q heads — no
+        # collectives, and per-shard shapes keep the lane contract
+        head4 = PS(None, None, "model", None)
+        head3 = PS(None, None, "model")
+        kv_in = (head4, head3, head4, head3) if quant else (head4, head4)
+        in_specs = (PS(), PS(), PS(), PS(None, "model", None), *kv_in, PS())
+        out_specs = PS(None, "model", None)
     else:
-        kv_specs = [
-            pl.BlockSpec((1, tp, hkv, d), page4),
-            pl.BlockSpec((1, tp, hkv, dv), page4),
-        ]
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(b, nj),
-        in_specs=[
-            pl.BlockSpec((1, h, d), lambda i, j, bt, ps, lp: (i, 0, 0)),
-            *kv_specs,
-            pl.BlockSpec((1, tp),
-                         lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0)),
-        ],
-        out_specs=pl.BlockSpec((1, h, dv),
-                               lambda i, j, bt, ps, lp: (i, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((h, _LANES), jnp.float32),
-            pltpu.VMEM((h, _LANES), jnp.float32),
-            pltpu.VMEM((h, dv), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, dv), jnp.float32),
-        interpret=interpret,
-    )(block_table, pos, lane_pages, q, *kv, pos_pool)
+        # kv heads don't split evenly (GQA/MQA with few heads): run the
+        # whole kernel replicated on every device — redundant compute,
+        # but sharded pool operands are re-gathered and results stay
+        # bitwise identical to the single-device call
+        in_specs = tuple(PS() for _ in args)
+        out_specs = PS()
+    return shard_map(shard_run, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -339,7 +395,8 @@ def paged_mla_decode(q_eff: jax.Array, q_rope: jax.Array,
                      scale: float, active_pages: int | None = None,
                      lane_pages: jax.Array | None = None,
                      impl: str | None = None,
-                     interpret: bool | None = None) -> jax.Array:
+                     interpret: bool | None = None,
+                     mesh=None) -> jax.Array:
     """Fused one-token paged MLA decode, absorbed form.
 
     q_eff: (B, H, R) query pre-multiplied by the absorbed ``kv_b`` key
@@ -359,7 +416,7 @@ def paged_mla_decode(q_eff: jax.Array, q_rope: jax.Array,
         scale=scale,
         nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
         interpret=(_interpret_default() if interpret is None else interpret),
-        quant=False)
+        quant=False, mesh=mesh)
 
 
 def paged_mla_decode_q8(q_eff: jax.Array, q_rope: jax.Array,
@@ -369,7 +426,8 @@ def paged_mla_decode_q8(q_eff: jax.Array, q_rope: jax.Array,
                         scale: float, active_pages: int | None = None,
                         lane_pages: jax.Array | None = None,
                         impl: str | None = None,
-                        interpret: bool | None = None) -> jax.Array:
+                        interpret: bool | None = None,
+                        mesh=None) -> jax.Array:
     """:func:`paged_mla_decode` over q8_0 latent/rope pools.
 
     ``ckv_qs``/``kr_qs``: int8 value pools (num_pages, P, R[dr]);
@@ -385,7 +443,7 @@ def paged_mla_decode_q8(q_eff: jax.Array, q_rope: jax.Array,
         scale=scale, nj=_n_active(block_table, active_pages),
         impl=_resolve_impl(impl),
         interpret=(_interpret_default() if interpret is None else interpret),
-        quant=True)
+        quant=True, mesh=mesh)
 
 
 def _xla_mla(q_eff, q_rope, cs, ks, pos, *, scale):
@@ -402,87 +460,116 @@ def _xla_mla(q_eff, q_rope, cs, ks, pos, *, scale):
 
 
 @partial(jax.jit, static_argnames=("scale", "nj", "impl", "interpret",
-                                   "quant"))
+                                   "quant", "mesh"))
 def _mla_core(q_eff, q_rope, kv, block_table, pos, lane_pages, *,
               scale: float, nj: int, impl: str, interpret: bool,
-              quant: bool) -> jax.Array:
+              quant: bool, mesh=None) -> jax.Array:
     """Shared absorbed-MLA scaffold; ``kv`` is ``(ckv_pool, krope_pool)``
     or the q8_0 quadruple ``(ckv_qs, ckv_d, kr_qs, kr_d)`` (see
     :func:`_attn_core` for the tile-loader / lane-clamp pattern).  MLA
     validity is positional (unclamped ``kidx <= pos``), so lane-clamped
-    trailing revisits are masked with no extra predicate."""
+    trailing revisits are masked with no extra predicate.
+
+    ``mesh`` (static): run the Pallas path under ``shard_map``, splitting
+    the query-head axis over ``model`` when divisible (latent pools are
+    per-token, not per-head, so every device reads them whole)."""
     b, h, r = q_eff.shape
-    dr = q_rope.shape[-1]
-    tp = kv[0].shape[1]
     if impl == "xla":
         del lane_pages  # positional kidx <= pos mask already bounds lanes
+        dr = q_rope.shape[-1]
+        tp = kv[0].shape[1]
         btj = block_table[:, :nj]
         cs, ks = _gathered_kv(kv, btj, quant)
         return _xla_mla(q_eff, q_rope, cs.reshape(b, nj * tp, r),
                         ks.reshape(b, nj * tp, dr), pos, scale=scale)
 
-    def kernel(bt_ref, pos_ref, lp_ref, qe_ref, qr_ref, *refs):
-        del bt_ref, lp_ref
-        *kv_refs, o_ref, m_ref, l_ref, acc_ref = refs
-        _init_accumulators(m_ref, l_ref, acc_ref)
-        if quant:
-            cq_ref, cd_ref, kq_ref, kd_ref = kv_refs
-            ckv = cq_ref[0].astype(jnp.float32) * cd_ref[0][..., None]
-            krope = kq_ref[0].astype(jnp.float32) * kd_ref[0][..., None]
-        else:
-            ckv_ref, kr_ref = kv_refs
-            ckv = ckv_ref[0].astype(jnp.float32)             # (P, R)
-            krope = kr_ref[0].astype(jnp.float32)            # (P, Dr)
-        s = (jnp.dot(qe_ref[0].astype(jnp.float32), ckv.T,
-                     preferred_element_type=jnp.float32)
-             + jnp.dot(qr_ref[0].astype(jnp.float32), krope.T,
-                       preferred_element_type=jnp.float32)) * scale
-        kidx = (pl.program_id(1) * tp
-                + jax.lax.broadcasted_iota(jnp.int32, (tp, 1), 0)[:, 0])
-        valid = kidx <= pos_ref[pl.program_id(0)]
-        s = jnp.where(valid[None, :], s, NEG_INF)
-        _online_update(s, valid, lambda p: jnp.dot(
-            p, ckv, preferred_element_type=jnp.float32),
-            m_ref, l_ref, acc_ref)
-        _finish(o_ref, acc_ref, l_ref, nj)
+    def shard_run(block_table, pos, lane_pages, q_eff, q_rope, *kv_ops):
+        """Build + invoke the pallas_call; shapes derive from operands,
+        which are *per-shard* inside shard_map."""
+        b, h, r = q_eff.shape
+        dr = q_rope.shape[-1]
+        tp = kv_ops[0].shape[1]
 
-    pj = lambda i, j, bt, ps, lp: bt[i, jnp.minimum(j, lp[i] - 1)]  # noqa: E731,E501
-    page3 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0, 0)  # noqa: E731,E501
-    page2 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0)     # noqa: E731,E501
-    if quant:
-        kv_specs = [
-            pl.BlockSpec((1, tp, r), page3),
-            pl.BlockSpec((1, tp), page2),
-            pl.BlockSpec((1, tp, dr), page3),
-            pl.BlockSpec((1, tp), page2),
-        ]
+        def kernel(bt_ref, pos_ref, lp_ref, qe_ref, qr_ref, *refs):
+            del bt_ref, lp_ref
+            *kv_refs, o_ref, m_ref, l_ref, acc_ref = refs
+            _init_accumulators(m_ref, l_ref, acc_ref)
+            if quant:
+                cq_ref, cd_ref, kq_ref, kd_ref = kv_refs
+                ckv = cq_ref[0].astype(jnp.float32) * cd_ref[0][..., None]
+                krope = kq_ref[0].astype(jnp.float32) * kd_ref[0][..., None]
+            else:
+                ckv_ref, kr_ref = kv_refs
+                ckv = ckv_ref[0].astype(jnp.float32)         # (P, R)
+                krope = kr_ref[0].astype(jnp.float32)        # (P, Dr)
+            s = (jnp.dot(qe_ref[0].astype(jnp.float32), ckv.T,
+                         preferred_element_type=jnp.float32)
+                 + jnp.dot(qr_ref[0].astype(jnp.float32), krope.T,
+                           preferred_element_type=jnp.float32)) * scale
+            kidx = (pl.program_id(1) * tp
+                    + jax.lax.broadcasted_iota(jnp.int32, (tp, 1), 0)[:, 0])
+            valid = kidx <= pos_ref[pl.program_id(0)]
+            s = jnp.where(valid[None, :], s, NEG_INF)
+            _online_update(s, valid, lambda p: jnp.dot(
+                p, ckv, preferred_element_type=jnp.float32),
+                m_ref, l_ref, acc_ref)
+            _finish(o_ref, acc_ref, l_ref, nj)
+
+        pj = lambda i, j, bt, ps, lp: bt[i, jnp.minimum(j, lp[i] - 1)]  # noqa: E731,E501
+        page3 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0, 0)  # noqa: E731,E501
+        page2 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0)     # noqa: E731,E501
+        if quant:
+            kv_specs = [
+                pl.BlockSpec((1, tp, r), page3),
+                pl.BlockSpec((1, tp), page2),
+                pl.BlockSpec((1, tp, dr), page3),
+                pl.BlockSpec((1, tp), page2),
+            ]
+        else:
+            kv_specs = [
+                pl.BlockSpec((1, tp, r), page3),
+                pl.BlockSpec((1, tp, dr), page3),
+            ]
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(b, nj),
+            in_specs=[
+                pl.BlockSpec((1, h, r), lambda i, j, bt, ps, lp: (i, 0, 0)),
+                pl.BlockSpec((1, h, dr), lambda i, j, bt, ps, lp: (i, 0, 0)),
+                *kv_specs,
+            ],
+            out_specs=pl.BlockSpec((1, h, r),
+                                   lambda i, j, bt, ps, lp: (i, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((h, _LANES), jnp.float32),
+                pltpu.VMEM((h, _LANES), jnp.float32),
+                pltpu.VMEM((h, r), jnp.float32),
+            ],
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
+            interpret=interpret,
+        )(block_table, pos, lane_pages, q_eff, q_rope, *kv_ops)
+
+    args = (block_table, pos, lane_pages, q_eff, q_rope, *kv)
+    if mesh is None:
+        return shard_run(*args)
+    PS = jax.sharding.PartitionSpec
+    msize = mesh.shape.get("model", 1)
+    if msize > 1 and h % msize == 0:
+        # query heads split across model; latent/rope pools are per-token
+        # (no head axis), so each device reads them whole — no collectives
+        headq = PS(None, "model", None)
+        kv_in = tuple(PS() for _ in kv)
+        in_specs = (PS(), PS(), PS(), headq, headq, *kv_in)
+        out_specs = PS(None, "model", None)
     else:
-        kv_specs = [
-            pl.BlockSpec((1, tp, r), page3),
-            pl.BlockSpec((1, tp, dr), page3),
-        ]
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(b, nj),
-        in_specs=[
-            pl.BlockSpec((1, h, r), lambda i, j, bt, ps, lp: (i, 0, 0)),
-            pl.BlockSpec((1, h, dr), lambda i, j, bt, ps, lp: (i, 0, 0)),
-            *kv_specs,
-        ],
-        out_specs=pl.BlockSpec((1, h, r),
-                               lambda i, j, bt, ps, lp: (i, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((h, _LANES), jnp.float32),
-            pltpu.VMEM((h, _LANES), jnp.float32),
-            pltpu.VMEM((h, r), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
-        interpret=interpret,
-    )(block_table, pos, lane_pages, q_eff, q_rope, *kv)
+        in_specs = tuple(PS() for _ in args)
+        out_specs = PS()
+    return shard_map(shard_run, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -517,7 +604,8 @@ def paged_attn_decode_q8(q: jax.Array, k_qs: jax.Array, k_d: jax.Array,
                          active_pages: int | None = None,
                          lane_pages: jax.Array | None = None,
                          impl: str | None = None,
-                         interpret: bool | None = None) -> jax.Array:
+                         interpret: bool | None = None,
+                         mesh=None) -> jax.Array:
     """:func:`paged_attn_decode` over q8_0 page pools.
 
     ``k_qs``/``v_qs``: int8 value pools, ``k_d``/``v_d``: their per-row
@@ -534,4 +622,4 @@ def paged_attn_decode_q8(q: jax.Array, k_qs: jax.Array, k_d: jax.Array,
         scale=(q.shape[-1] ** -0.5 if scale is None else scale),
         nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
         interpret=(_interpret_default() if interpret is None else interpret),
-        quant=True)
+        quant=True, mesh=mesh)

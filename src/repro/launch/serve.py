@@ -12,8 +12,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import checkpoint as ckpt
@@ -21,10 +19,9 @@ from ..configs import get_config
 from ..core import quantize_params, get_policy, model_size
 from ..models import spec as mspec
 from ..models.model import Model
-from ..parallel import sharding as shard
 from ..serving.engine import Engine, Request
 from ..serving.sampler import SamplerConfig
-from .mesh import make_host_mesh
+from .mesh import describe_mesh, mesh_from_spec
 
 
 def main(argv=None):
@@ -87,6 +84,16 @@ def main(argv=None):
                          "evictions past the cap restart the request "
                          "instead of swapping.  Only meaningful with "
                          "--scheduler preempt")
+    ap.add_argument("--mesh", default="none",
+                    help="serving mesh: 'none' (default, single device), "
+                         "'host' (1 x all local devices) or 'DxM' (e.g. "
+                         "2x4 = data=2, model=4).  The ENGINE lays both "
+                         "the weights and the paged KV pools out on this "
+                         "mesh — there is no separate weight-sharding "
+                         "step, so the two can never disagree.  Requires "
+                         "--page-size > 0; CPU repro: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 before "
+                         "launch")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.6)
@@ -98,7 +105,7 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     policy = get_policy(args.policy)
-    mesh = make_host_mesh()
+    mesh = mesh_from_spec(args.mesh)
 
     if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
         tree, _ = ckpt.restore(args.ckpt_dir)
@@ -113,16 +120,20 @@ def main(argv=None):
           f"{rep.gib:.2f} GiB @ {rep.avg_bits:.2f} bits/weight "
           f"(bf16 would be {rep.total_params * 2 / 1024**3:.2f} GiB)")
     qparams = quantize_params(cfg, params, policy)
-    qshard = shard.tree_shardings(qparams, cfg, mesh)
-    qparams = jax.device_put(qparams, qshard)
-
+    # no weight-sharding step here: the Engine lays the weights out on the
+    # mesh it serves on (Engine(mesh=...) shards, Engine(mesh=None)
+    # rejects pre-sharded params), so the "weights sharded on one mesh,
+    # engine serving unsharded" split is structurally impossible
     model = Model(cfg)
     engine = Engine(model, qparams, max_len=args.max_len,
                     sampler=SamplerConfig(args.temperature, args.top_p),
                     page_size=args.page_size, num_pages=args.num_pages,
                     prefill_chunk=args.prefill_chunk, kernel=args.kernel,
                     kv_quant=args.kv_quant, scheduler=args.scheduler,
-                    swap_budget_bytes=args.swap_budget_bytes)
+                    swap_budget_bytes=args.swap_budget_bytes, mesh=mesh)
+    if mesh is not None:
+        print(f"serving on mesh {describe_mesh(mesh)} "
+              f"({mesh.size} devices: weights + paged KV pools sharded)")
 
     slots = min(args.slots, args.requests)
     if args.oversubscribe and args.page_size:

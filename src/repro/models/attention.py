@@ -272,6 +272,7 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                       active_pages: int | None = None,
                       lane_pages: jax.Array | None = None,
                       kv_quant: str | None = None,
+                      mesh=None,
                       ) -> tuple[jax.Array, dict]:
     """One-token decode against a paged cache.
 
@@ -340,7 +341,7 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
             q[:, 0], kq, kd, vq, vd, new["pos"], block_table, pos,
             window=(cfg.window if local else 0), softcap=cfg.attn_softcap,
             scale=cfg.head_dim ** -0.5, active_pages=active_pages,
-            lane_pages=lane_pages)
+            lane_pages=lane_pages, mesh=mesh)
         o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
         return linear(p["o_proj"], o), new
 
@@ -356,7 +357,7 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
         q[:, 0], new["k"], new["v"], new["pos"], block_table, pos,
         window=(cfg.window if local else 0), softcap=cfg.attn_softcap,
         scale=cfg.head_dim ** -0.5, active_pages=active_pages,
-        lane_pages=lane_pages)
+        lane_pages=lane_pages, mesh=mesh)
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
     return linear(p["o_proj"], o), new
 

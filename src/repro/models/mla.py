@@ -161,6 +161,7 @@ def mla_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                      active_pages: int | None = None,
                      lane_pages: jax.Array | None = None,
                      kv_quant: str | None = None,
+                     mesh=None,
                      ) -> tuple[jax.Array, dict]:
     """Absorbed decode against paged latents.
 
@@ -230,12 +231,12 @@ def mla_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
         lat = paged_attn.paged_mla_decode_q8(
             q_eff.astype(dt), q_rope[:, 0], cq, cd, kq, kd,
             block_table, pos, scale=(dn + dr) ** -0.5,
-            active_pages=active_pages, lane_pages=lane_pages)
+            active_pages=active_pages, lane_pages=lane_pages, mesh=mesh)
     else:
         lat = paged_attn.paged_mla_decode(
             q_eff.astype(dt), q_rope[:, 0], new["c_kv"], new["k_rope"],
             block_table, pos, scale=(dn + dr) ** -0.5,
-            active_pages=active_pages, lane_pages=lane_pages)
+            active_pages=active_pages, lane_pages=lane_pages, mesh=mesh)
     o = jnp.einsum("bhr,rhd->bhd", lat.astype(dt), w_vb,
                    preferred_element_type=jnp.float32)        # (B,H,dv)
     o = o.reshape(b, 1, nh * dv).astype(x.dtype)

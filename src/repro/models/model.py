@@ -321,7 +321,8 @@ class Model:
                           kernel: str | None = None,
                           active_pages: tuple[int, int] | None = None,
                           lane_pages=None,
-                          kv_quant: str | None = None):
+                          kv_quant: str | None = None,
+                          mesh=None):
         """One decode step against a paged cache.
 
         ``block_tables``: {"full": (B, n) int32, "ring": (B, n') int32}
@@ -341,11 +342,14 @@ class Model:
         longest lane).  ``kv_quant``: the cache quantization spec the
         pools were initialised with — the matching fused q8 kernels (or
         dequantizing gather reference) are selected automatically.
+        ``mesh``: the device mesh the engine serves on (``None`` =
+        single-device) — forwarded to the fused kernels, which run under
+        ``shard_map`` on it so sharded pool operands stay correct.
         """
         return self.decode_step(
             params, cache, tokens, pos,
             paged=(block_tables, page_size, max_len, kernel, active_pages,
-                   kv_quant, lane_pages),
+                   kv_quant, lane_pages, mesh),
             live=live)
 
     def prefill_chunk(self, params, cache, tokens, start, chunk_len, *,

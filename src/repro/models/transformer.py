@@ -83,8 +83,8 @@ def decode_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
     """One-token decode through one layer.  Returns (x, new_cache).
 
     ``paged``: optional ``(block_tables, page_size, max_len, kernel,
-    active_pages, kv_quant, lane_pages)`` — attention and MLA caches are
-    then page pools indexed through the slot block tables
+    active_pages, kv_quant, lane_pages, mesh)`` — attention and MLA caches
+    are then page pools indexed through the slot block tables
     (``block_tables["full"]`` / ``["ring"]``); recurrent state is a dense
     passthrough either way.  ``kernel`` picks fused-Pallas vs
     gather-reference decode (None = env default); ``active_pages`` is an
@@ -103,7 +103,7 @@ def decode_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
         local = kind == "local_attn"
         if paged is not None:
             (block_tables, _, max_len, kernel, active, kv_quant,
-             lane_pages) = paged
+             lane_pages, mesh) = paged
             # MLA latents always span the full horizon (no ring bound)
             use_ring = local and not cfg.mla
             tbl_kind = "ring" if use_ring else "full"
@@ -117,12 +117,12 @@ def decode_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
                 delta, cache_new = mla.mla_decode_paged(
                     p, cfg, x, cache, pos, bt, max_len=max_len, live=live,
                     kernel=kernel, active_pages=ap, lane_pages=lp,
-                    kv_quant=kv_quant)
+                    kv_quant=kv_quant, mesh=mesh)
             else:
                 delta, cache_new = attention.attn_decode_paged(
                     p, cfg, x, cache, pos, bt, local=local, max_len=max_len,
                     live=live, kernel=kernel, active_pages=ap, lane_pages=lp,
-                    kv_quant=kv_quant)
+                    kv_quant=kv_quant, mesh=mesh)
         elif cfg.mla:
             delta, cache_new = mla.mla_decode(p, cfg, x, cache, pos,
                                               live=live)

@@ -215,5 +215,64 @@ def cache_shardings(tree: dict[str, Any], cfg: ModelConfig,
     return out
 
 
+def paged_cache_shardings(tree: dict[str, Any], cfg: ModelConfig,
+                          mesh: Mesh, *,
+                          pool_leaves: frozenset | set) -> dict[str, Any]:
+    """NamedShardings for the pooled paged-cache tree (``Engine(mesh=...)``).
+
+    ``pool_leaves`` names the leaves whose leading dim is the shared page
+    pool (the engine derives it from ``paged_cache_specs`` — see
+    ``Engine._pool_leaves``); everything else is a dense per-slot leaf
+    (recurrent h/conv/mlstm states with leading dim = slots).
+
+    Page pools:
+      * kv-headed pools (``k``/``v``/``k_qs``/``v_qs`` and their
+        ``k_d``/``v_d`` scale rows): shard the kv-head axis on ``model``
+        when it divides evenly — heads attend independently, so neither the
+        fused nor the XLA decode needs collectives over the pool.
+        Otherwise (GQA with few KV heads) fall back to sharding the *page*
+        axis across the data axes: gathers/scatters through the block table
+        are pure data movement, so results stay bitwise identical.
+      * latent pools (MLA ``c_kv``/``k_rope`` + their q8 twins): no head
+        axis — shard the page axis on ``model`` (the memory-scaling layout
+        ROADMAP item 1 calls for) when the pool divides, else the data
+        axes, else replicate.
+      * ``pos`` pools: replicated (tiny; every lane's mask reads them).
+    Dense slot leaves: slot (batch) dim on the data axes when divisible,
+    else replicated.  Stacked (scan) trees carry a leading repeats dim
+    that is never sharded.
+    """
+    import re as _re
+    msize = mesh.shape.get("model", 1)
+    daxes = data_axes(mesh)
+    dsize = _mesh_size(mesh, daxes) if daxes else 1
+    out: dict[str, Any] = {}
+    for key, leaf in tree.items():
+        shape = tuple(leaf.shape)
+        stacked = bool(_re.search(r"/G\d+/u\d+/", key))
+        body = list(shape[1:]) if stacked else list(shape)
+        parts: list = [None] * len(body)
+        name = key.rsplit("/", 1)[-1]
+        if key in pool_leaves:
+            if name in ("k", "v", "k_qs", "v_qs", "k_d", "v_d"):
+                if msize > 1 and body[2] % msize == 0:
+                    parts[2] = "model"
+                elif daxes and dsize > 1 and body[0] % dsize == 0:
+                    parts[0] = daxes
+            elif name in ("c_kv", "k_rope", "c_kv_qs", "k_rope_qs",
+                          "c_kv_d", "k_rope_d"):
+                if msize > 1 and body[0] % msize == 0:
+                    parts[0] = "model"
+                elif daxes and dsize > 1 and body[0] % dsize == 0:
+                    parts[0] = daxes
+            # pos pools stay replicated
+        else:
+            parts[0] = batch_partition(mesh, body[0])
+        if stacked:
+            parts = [None] + parts
+        out[key] = NamedSharding(mesh, P(*parts))
+    return out
+
+
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())

@@ -74,7 +74,9 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import os
 import time
+import warnings
 from collections import deque
 from functools import partial
 from typing import Any
@@ -90,6 +92,23 @@ from .sampler import (SamplerConfig, request_key, sample, sample_per_slot,
                       stream_key)
 
 _RECURRENT_KINDS = ("rglru", "mlstm", "slstm")
+
+# scheduler="preempt" host swap-store cap when swap_budget_bytes is not
+# given: this fraction of physical RAM.  An unbounded swap store can OOM
+# the host under sustained preemption pressure (every evicted lane parks
+# its whole KV working set in host memory), so the default is bounded;
+# pass swap_budget_bytes explicitly to raise or effectively disable it.
+SWAP_BUDGET_FRACTION = 0.25
+
+
+def _default_swap_budget() -> int | None:
+    """SWAP_BUDGET_FRACTION of host RAM, or ``None`` (= unbounded, the old
+    behaviour) when the platform can't report physical memory."""
+    try:
+        return int(os.sysconf("SC_PHYS_PAGES") * os.sysconf("SC_PAGE_SIZE")
+                   * SWAP_BUDGET_FRACTION)
+    except (ValueError, OSError, AttributeError):
+        return None
 
 
 def _bucket_pages(n: int, cap: int) -> int:
@@ -205,6 +224,7 @@ class EngineStats:
     num_pages: int = 0
     page_bytes: int = 0                  # bytes per page across all leaves
     kv_quant: str = ""                   # cache quantization ("" = f32/bf16)
+    mesh: str = ""                       # serving mesh, "DxM" ("" = 1 device)
     peak_pages: int = 0
     pages_leaked: int = 0                # pages still held after the call
     dense_cache_bytes: int = 0           # slots x max_len layout, for compare
@@ -303,6 +323,8 @@ class EngineStats:
             f"concurrency max/mean: {self.max_concurrency}/"
             f"{self.mean_concurrency:.2f}",
         ]
+        if self.mesh:
+            lines.append(f"mesh: {self.mesh} (sharded weights + KV pools)")
         if self.page_size:
             lines.append(
                 f"pages: {self.peak_pages}/"
@@ -337,6 +359,7 @@ class EngineStats:
 
 
 _FREE, _PREFILL, _LIVE = 0, 1, 2
+_UNSET = object()  # "argument not passed" sentinel for Engine._constrained
 
 
 class _Slot:
@@ -447,7 +470,24 @@ class Engine:
     scratch instead (``EngineStats.swap_restarts``) — still bit-exact,
     since chunk boundaries and the per-request sample streams are
     deterministic.  ``EngineStats.swap_held_bytes`` reports the peak
-    held bytes, which never exceeds the cap.
+    held bytes, which never exceeds the cap.  Default: a
+    ``SWAP_BUDGET_FRACTION`` slice of host RAM (the first eviction that
+    restarts because of the *default* cap warns once); pass a value to
+    override.
+
+    ``mesh`` shards serving across a device mesh (requires
+    ``page_size > 0``): the engine lays the **weights** out per
+    ``parallel.sharding.SERVE_RULES`` (heads/experts on the ``model``
+    axis) and the pooled paged KV cache per
+    ``parallel.sharding.paged_cache_shardings`` (kv-head axis on
+    ``model`` when divisible, page axis on the data axes otherwise), and
+    the fused Pallas kernels run under ``shard_map`` on the same mesh.
+    The engine owns the layout end-to-end, so the mesh the weights are
+    sharded over and the mesh the engine serves on can never disagree;
+    conversely ``mesh=None`` (default, bitwise the old behaviour)
+    *rejects* params that arrive sharded across devices.  Serve output
+    is bitwise identical to the single-device engine on CPU meshes
+    (tests/test_sharded_serving.py).
     """
 
     SCHEDULERS = ("reserve", "preempt")
@@ -457,7 +497,7 @@ class Engine:
                  jit: bool = True, page_size: int = 0, num_pages: int = 0,
                  prefill_chunk: int = 0, kernel: str | None = None,
                  kv_quant: str | None = None, scheduler: str = "reserve",
-                 swap_budget_bytes: int | None = None):
+                 swap_budget_bytes: int | None = None, mesh=None):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -482,8 +522,38 @@ class Engine:
                                  "scheduler='preempt'")
             if swap_budget_bytes < 0:
                 raise ValueError("swap_budget_bytes must be >= 0")
+        self._swap_budget_defaulted = False
+        if scheduler == "preempt" and swap_budget_bytes is None:
+            swap_budget_bytes = _default_swap_budget()
+            self._swap_budget_defaulted = swap_budget_bytes is not None
+        self._warned_swap_budget = False
         self.swap_budget_bytes = swap_budget_bytes
         self.scheduler = scheduler
+        if mesh is not None and not page_size:
+            raise ValueError("Engine(mesh=...) shards the pooled paged KV "
+                             "cache and requires page_size > 0")
+        self.mesh = mesh
+        if mesh is not None:
+            # the engine owns the weight layout: lay the params out on the
+            # mesh it serves on, so weight sharding and engine sharding
+            # cannot disagree
+            from ..parallel import sharding as _sh
+            self.params = jax.device_put(
+                params,
+                _sh.tree_shardings(params, model.cfg, mesh,
+                                   plan=getattr(model, "plan", None)))
+        else:
+            for leaf in jax.tree_util.tree_leaves(params):
+                ds = getattr(getattr(leaf, "sharding", None),
+                             "device_set", None)
+                if ds is not None and len(ds) > 1:
+                    raise ValueError(
+                        f"params arrive sharded across {len(ds)} devices "
+                        "but the engine has no mesh — an unsharded engine "
+                        "over sharded weights silently re-gathers every "
+                        "weight each step.  Pass Engine(mesh=...) (the "
+                        "engine lays the weights out itself), or hand it "
+                        "single-device params")
         self.kernel = kernel or default_paged_kernel()
         if self.kernel not in ("fused", "gather"):
             raise ValueError(f"unknown paged decode kernel {self.kernel!r}")
@@ -519,7 +589,16 @@ class Engine:
 
         decode_paged = partial(model.decode_step_paged, page_size=page_size,
                                max_len=max_len, kernel=self.kernel,
-                               kv_quant=self.kv_quant)
+                               kv_quant=self.kv_quant, mesh=self.mesh)
+        chunk_fn = partial(model.prefill_chunk, max_len=max_len,
+                           page_size=page_size, kv_quant=self.kv_quant)
+        # serve() fills this in with the pool layout before the first
+        # traced step; the wrappers read it at trace time (deterministic
+        # per cache shape, so retraces agree)
+        self._cache_shardings: dict[str, Any] | None = None
+        if self.mesh is not None:
+            decode_paged = self._constrained(decode_paged)
+            chunk_fn = self._constrained(chunk_fn)
         if jit:
             self._decode = jax.jit(model.decode_step)
             # active_pages is a static (n_full, n_ring) page bound for the
@@ -527,17 +606,48 @@ class Engine:
             # distinct traces logarithmic in max_len/page_size
             self._decode_paged = jax.jit(decode_paged,
                                          static_argnames=("active_pages",))
-            self._chunk = jax.jit(
-                partial(model.prefill_chunk, max_len=max_len,
-                        page_size=page_size, kv_quant=self.kv_quant))
+            self._chunk = jax.jit(chunk_fn)
             self._scrub = jax.jit(scrub)
         else:
             self._decode = model.decode_step
             self._decode_paged = decode_paged
-            self._chunk = partial(model.prefill_chunk, max_len=max_len,
-                                  page_size=page_size,
-                                  kv_quant=self.kv_quant)
+            self._chunk = chunk_fn
             self._scrub = scrub
+
+    def _constrained(self, fn):
+        """Wrap a ``(params, cache, ...) -> (out, new_cache)`` step for
+        ``Engine(mesh=...)``:
+
+        * **weights** are constrained replicated *inside* the step — they
+          live sharded across the mesh (capacity) and stream in via
+          all-gather, so every weight contraction is computed whole.
+          Splitting the contraction instead (Megatron-style psum on
+          o_proj/down_proj) is faster per step but reassociates the f32
+          reduction (~1e-5 logit drift, enough to flip near-tied greedy
+          argmaxes); the engine picks bit-exactness — sharded serve
+          output is bitwise identical to the single-device engine.
+        * the **new cache** leaves carry explicit
+          ``with_sharding_constraint``s from ``self._cache_shardings``,
+          pinning the pool layout across steps instead of letting GSPMD
+          drift it.
+        """
+        rep = jax.sharding.NamedSharding(self.mesh,
+                                         jax.sharding.PartitionSpec())
+
+        def wrapped(params, cache, *args, active_pages=_UNSET, **kwargs):
+            if active_pages is not _UNSET:
+                kwargs["active_pages"] = active_pages
+            params = jax.tree_util.tree_map(
+                lambda w: jax.lax.with_sharding_constraint(w, rep), params)
+            out, new_cache = fn(params, cache, *args, **kwargs)
+            sh = self._cache_shardings
+            if sh:
+                new_cache = {
+                    k: (jax.lax.with_sharding_constraint(v, sh[k])
+                        if k in sh else v)
+                    for k, v in new_cache.items()}
+            return out, new_cache
+        return wrapped
 
     # -- one-shot batch generation ------------------------------------------
     def generate(self, prompts: list[list[int]], max_new: int,
@@ -641,6 +751,10 @@ class Engine:
         if use_paged:
             num_pages = self.num_pages or (
                 paged.RESERVED_PAGES + slots * (n_full + n_ring))
+            if self.mesh is not None:
+                # page-axis shardings need every mesh axis to divide the
+                # pool evenly; padding with never-allocated pages is free
+                num_pages += -num_pages % self.mesh.size
             pool = PagePool(num_pages)
             cache = model.init_paged_cache(num_pages, P, slots, dtype=dtype,
                                            kv_quant=self.kv_quant)
@@ -664,7 +778,7 @@ class Engine:
         pool_axis = 1 if model.scan else 0
         pool_leaves: list[str] = []
         slot_leaves: list[str] = []
-        if use_paged and preempt:
+        if use_paged and (preempt or self.mesh is not None):
             r = paged.RESERVED_PAGES
             lo_specs = model.paged_cache_specs(r, P, slots, dtype=dtype,
                                                kv_quant=self.kv_quant)
@@ -674,6 +788,19 @@ class Engine:
                                  if lo_specs[k].shape != hi_specs[k].shape)
             slot_leaves = sorted(k for k in lo_specs
                                  if lo_specs[k].shape == hi_specs[k].shape)
+
+        if use_paged and self.mesh is not None:
+            # lay the pools out on the serving mesh and pin the layout for
+            # the traced steps (the _constrained wrappers read this)
+            from ..parallel.sharding import paged_cache_shardings
+            specs = model.paged_cache_specs(num_pages, P, slots, dtype=dtype,
+                                            kv_quant=self.kv_quant)
+            sh = paged_cache_shardings(specs, model.cfg, self.mesh,
+                                       pool_leaves=frozenset(pool_leaves))
+            self._cache_shardings = sh
+            cache = jax.device_put(cache, {k: sh[k] for k in cache})
+            stats.mesh = "x".join(str(self.mesh.shape[a])
+                                  for a in self.mesh.axis_names)
 
         # host swap-store cap (swap_budget_bytes): a lane's swap size is
         # exactly pages_held x per-page bytes + its dense slot rows, so the
@@ -854,6 +981,17 @@ class Engine:
                 # deterministic, so the restarted run re-emits the same
                 # tokens — only latency is lost, never exactness.
                 stats.swap_restarts += 1
+                if (self._swap_budget_defaulted
+                        and not self._warned_swap_budget):
+                    self._warned_swap_budget = True
+                    warnings.warn(
+                        "preemption fell back to evict-to-restart because "
+                        "the DEFAULT swap budget "
+                        f"({self.swap_budget_bytes} B = "
+                        f"{SWAP_BUDGET_FRACTION:.0%} of host RAM) is full; "
+                        "pass Engine(swap_budget_bytes=...) to raise the "
+                        "cap (restarts stay bit-exact but cost latency)",
+                        stacklevel=2)
             if lane.state == _LIVE and not over_budget:
                 ids = lane.pages_full + lane.pages_ring
                 pool_rows = {
@@ -1275,6 +1413,64 @@ class Engine:
         agg.wall_s = time.perf_counter() - t_start
         self.last_stats = agg
         return done
+
+    def compile_decode_step(self, slots: int, num_pages: int | None = None):
+        """AOT-compile one batched paged decode step — the steady-state
+        serving hot loop at its worst-case page horizon — and return the
+        ``jax.stages.Compiled``.  The bench layer reads its HLO and cost
+        analysis (``benchmarks/engine_bench.py --mesh`` gates the measured
+        step time against ``roofline.analysis`` on exactly this
+        executable).  Under ``Engine(mesh=...)`` the input avals carry the
+        same shardings ``serve`` lays the cache out with, so the compiled
+        module is the sharded one.  Requires ``jit=True`` and
+        ``page_size > 0``."""
+        if not self.page_size:
+            raise ValueError("compile_decode_step requires the paged cache "
+                             "(page_size > 0)")
+        if not hasattr(self._decode_paged, "lower"):
+            raise ValueError("compile_decode_step requires jit=True")
+        P = self.page_size
+        n_full = paged.pages_for(self.max_len, P) if self._has_full else 0
+        n_ring = paged.pages_for(self._ring_len, P) if self._has_ring else 0
+        num_pages = num_pages or self.num_pages or (
+            paged.RESERVED_PAGES + slots * (n_full + n_ring))
+        if self.mesh is not None:
+            num_pages += -num_pages % self.mesh.size
+        specs = self.model.paged_cache_specs(num_pages, P, slots,
+                                             dtype=self.model.dtype,
+                                             kv_quant=self.kv_quant)
+        sh = None
+        if self.mesh is not None:
+            from ..parallel.sharding import paged_cache_shardings
+            r = paged.RESERVED_PAGES
+            lo = self.model.paged_cache_specs(r, P, slots,
+                                              dtype=self.model.dtype,
+                                              kv_quant=self.kv_quant)
+            hi = self.model.paged_cache_specs(r + 1, P, slots,
+                                              dtype=self.model.dtype,
+                                              kv_quant=self.kv_quant)
+            sh = paged_cache_shardings(
+                specs, self.model.cfg, self.mesh,
+                pool_leaves=frozenset(k for k in lo
+                                      if lo[k].shape != hi[k].shape))
+            self._cache_shardings = sh
+        cache = {k: jax.ShapeDtypeStruct(
+                     s.shape, s.dtype, sharding=sh[k] if sh else None)
+                 for k, s in specs.items()}
+        i32 = partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+        toks, pos = i32((slots,)), i32((slots,))
+        tables = {"full": i32((slots, max(n_full, 1))),
+                  "ring": i32((slots, max(n_ring, 1)))}
+        live = jax.ShapeDtypeStruct((slots,), jnp.bool_)
+        active = None
+        lane_pages = None
+        if self.kernel == "fused":
+            active = (_bucket_pages(n_full, n_full),
+                      _bucket_pages(n_ring, n_ring))
+            lane_pages = {"full": i32((slots,)), "ring": i32((slots,))}
+        return self._decode_paged.lower(
+            self.params, cache, toks, pos, tables, live=live,
+            active_pages=active, lane_pages=lane_pages).compile()
 
     # -- internals -----------------------------------------------------------
     def _kind_page_bytes(self) -> tuple[int, int]:

@@ -75,3 +75,16 @@ def misaligned_scratch(x):
         scratch_shapes=[pltpu.VMEM((8, 64), jnp.float32)],  # EXPECT[pallas-contract]
         out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
     )(x)
+
+
+def per_shard_misaligned(x):
+    # under shard_map the kernel sees PER-SHARD shapes: 256 // 4 = 64
+    # lanes, misaligned even though the global 256 is fine
+    return pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 256 // 4), lambda i: (i, 0))],  # EXPECT[pallas-contract]
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((8, 192 // 3), jnp.float32)],  # EXPECT[pallas-contract]
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)

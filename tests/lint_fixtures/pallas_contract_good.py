@@ -62,3 +62,15 @@ def scalar_minor_dim(x):
         scratch_shapes=[pltpu.VMEM((8, 1), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((8, 1), jnp.float32),
     )(x)
+
+
+def per_shard_aligned(x):
+    # shard_map head split: 512 // 4 = 128 per shard stays lane-aligned
+    return pl.pallas_call(
+        _kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((8, 512 // 4), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((8, 256 // 2), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)
