@@ -92,7 +92,7 @@ def _tight_pool(eng: Engine, reqs: list[Request], slots: int) -> int:
 def run(requests: int = 8, slots: int = 4, jit: bool = True,
         arch: str = "qwen2-1.5b", page_size: int = 16,
         prefill_chunk: int = 32, max_len: int = 1024,
-        mesh: str | None = None,
+        mesh: str | None = None, chaos: int | None = None,
         results_out: dict | None = None) -> list[tuple[str, float, str]]:
     """Returns CSV rows; when ``results_out`` is given it is filled with
     ``{policy: {mode: EngineStats}}`` for :func:`gate`.
@@ -101,7 +101,14 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
     serving with sharded weights + KV pools — plus deterministic
     ``engine/*/mesh/*`` rows from the AOT-compiled sharded decode step
     (device count, collective bytes, and the ``roofline/`` no-overlap
-    step-time bound the measured step is soft-gated against)."""
+    step-time bound the measured step is soft-gated against).
+
+    ``chaos`` (a seed) adds a **chaos** mode: the oversubscribed preempt
+    engine serving under ``FaultPlan.random(seed)`` — the throughput
+    delta vs **oversub** is the measured graceful-degradation overhead,
+    and :func:`gate` checks the robustness invariants (all requests
+    terminal, zero leaks, balanced swap accounting) on the faulted run.
+    Default rows are unchanged when ``chaos`` is None."""
     cfg = CONFIGS[arch].reduced()
     params = init_params(cfg, seed=0, dtype=jnp.float32)
     model = Model(cfg, dtype=jnp.float32)
@@ -144,6 +151,14 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
                                **paged_kw),
             "oversub": oversub,
         }
+        if chaos is not None:
+            from repro.serving.faults import FaultPlan
+            chaos_eng = Engine(
+                model, p, kernel="fused", scheduler="preempt",
+                faults=FaultPlan.random(chaos, rids=list(range(requests))),
+                **paged_kw)
+            chaos_eng.num_pages = oversub.num_pages
+            engines["chaos"] = chaos_eng
         if mesh_obj is not None:
             engines["mesh"] = Engine(model, p, kernel="fused",
                                      mesh=mesh_obj, **paged_kw)
@@ -153,7 +168,7 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
             # trace (incl. the sequential mode's per-length prefill shapes
             # and the fused kernels' live-horizon buckets) is compiled
             # before the timed serve
-            classes = 2 if mode == "oversub" else 1
+            classes = 2 if mode in ("oversub", "chaos") else 1
             warm = _requests(requests, cfg.vocab_size, seed=1,
                              classes=classes)
             reqs = _requests(requests, cfg.vocab_size, classes=classes)
@@ -197,6 +212,18 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
                 rows.append((f"engine/{pol}/{mode}/swapbytes",
                              float(st.swap_out_bytes),
                              f"{st.swap_out_bytes}B"))
+            if mode == "chaos":
+                hist = " ".join(f"{k}:{v}"
+                                for k, v in sorted(st.status_counts.items()))
+                rows.append((f"engine/{pol}/chaos/faults",
+                             float(st.faults_injected),
+                             f"{st.faults_injected}injected"))
+                rows.append((f"engine/{pol}/chaos/statuses",
+                             float(sum(1 for r in st.requests
+                                       if r.status != "ok")), hist))
+                rows.append((f"engine/{pol}/chaos/slowsteps",
+                             float(st.slow_steps),
+                             f"{st.slow_steps}slow"))
         if mesh_obj is not None:
             # deterministic sharded-step rows from the AOT-compiled HLO:
             # what the mesh actually costs in collectives, and the
@@ -299,6 +326,35 @@ def gate(results: dict, requests: int = 8) -> list[str]:
         if not any(r.queue_wait_s > 0 for r in ov.requests):
             failures.append(f"{pol}: no queue-time stats recorded in the "
                             f"oversubscribed mode")
+        # chaos mode (--chaos): the faulted serve must hold the
+        # robustness invariants — every request reaches a terminal
+        # status, no page leaks, and swap accounting balances including
+        # deliberately dropped rows (docs/chaos.md)
+        ch = res.get("chaos")
+        if ch is not None:
+            terminal = ("ok", "timeout", "cancelled", "failed", "shed")
+            if len(ch.requests) != requests:
+                failures.append(
+                    f"{pol}: chaos serve completed "
+                    f"{len(ch.requests)}/{requests} requests")
+            bad = [r.rid for r in ch.requests if r.status not in terminal]
+            if bad:
+                failures.append(
+                    f"{pol}: chaos requests {bad} ended without a "
+                    f"terminal status")
+            if ch.pages_leaked:
+                failures.append(
+                    f"{pol}: chaos serve leaked {ch.pages_leaked} pages")
+            if ch.swap_out_bytes != ch.swap_in_bytes + ch.swap_dropped_bytes:
+                failures.append(
+                    f"{pol}: chaos swap accounting unbalanced "
+                    f"({ch.swap_out_bytes} out vs {ch.swap_in_bytes} in "
+                    f"+ {ch.swap_dropped_bytes} dropped)")
+            if ch.swap_held_end_bytes or ch.swap_disk_end_bytes:
+                failures.append(
+                    f"{pol}: chaos serve still holds swap bytes at return "
+                    f"({ch.swap_held_end_bytes} host, "
+                    f"{ch.swap_disk_end_bytes} disk)")
         # mesh mode (--mesh): sharded serve must complete the workload
         # without leaks, and the measured decode step can never beat the
         # roofline no-overlap lower bound computed from its own compiled
@@ -343,6 +399,12 @@ def main():
                          "CPU: set XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=8 first.  Skipped (with a note) "
                          "when the devices aren't there")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="add the chaos mode: the oversubscribed preempt "
+                         "engine under FaultPlan.random(SEED); emits "
+                         "engine/*/chaos/* rows and gates the robustness "
+                         "invariants.  Default rows are unchanged when "
+                         "omitted")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write rows as a JSON artifact")
     ap.add_argument("--gate", action="store_true",
@@ -355,7 +417,7 @@ def main():
     rows = run(args.requests, args.slots, jit=not args.no_jit,
                arch=args.arch, page_size=args.page_size,
                prefill_chunk=args.prefill_chunk, max_len=args.max_len,
-               mesh=args.mesh, results_out=results)
+               mesh=args.mesh, chaos=args.chaos, results_out=results)
     if args.json:
         from .run import write_rows_json
         write_rows_json(rows, args.json)

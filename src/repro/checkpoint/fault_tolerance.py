@@ -32,35 +32,50 @@ class WorkerStatus:
     step_time: float = 0.0
 
 
+def straggler_threshold(step_times, factor: float) -> float:
+    """Slow-step cutoff: ``factor x median`` of the positive samples in
+    ``step_times`` (0.0 when there are none — callers treat that as "no
+    baseline yet, nothing is slow").  This is the one straggler rule in
+    the repo: :meth:`HeartbeatMonitor.stragglers` applies it across
+    training workers and the serving engine's step watchdog applies it
+    across its own recent decode steps (``EngineStats.slow_steps``).
+    """
+    times = sorted(t for t in step_times if t > 0)
+    if not times:
+        return 0.0
+    return factor * times[len(times) // 2]
+
+
 class HeartbeatMonitor:
     def __init__(self, n_workers: int, deadline_s: float = 300.0,
-                 straggler_factor: float = 2.0):
-        now = time.time()
+                 straggler_factor: float = 2.0, now: float | None = None):
+        # ``now`` (here and on beat/dead_workers) exists so tests can
+        # drive the clock; production callers omit it
+        now = time.time() if now is None else now
         self.workers = {i: WorkerStatus(i, now, -1) for i in range(n_workers)}
         self.deadline_s = deadline_s
         self.straggler_factor = straggler_factor
 
-    def beat(self, worker_id: int, step: int) -> None:
+    def beat(self, worker_id: int, step: int,
+             now: float | None = None) -> None:
         w = self.workers[worker_id]
-        now = time.time()
+        now = time.time() if now is None else now
         if w.last_step >= 0:
             w.step_time = now - w.last_seen
         w.last_seen = now
         w.last_step = step
 
-    def dead_workers(self) -> list[int]:
-        now = time.time()
+    def dead_workers(self, now: float | None = None) -> list[int]:
+        now = time.time() if now is None else now
         return [i for i, w in self.workers.items()
                 if now - w.last_seen > self.deadline_s]
 
     def stragglers(self) -> list[int]:
-        times = sorted(w.step_time for w in self.workers.values()
-                       if w.step_time > 0)
-        if not times:
-            return []
-        median = times[len(times) // 2]
+        cut = straggler_threshold(
+            [w.step_time for w in self.workers.values()],
+            self.straggler_factor)
         return [i for i, w in self.workers.items()
-                if w.step_time > self.straggler_factor * median > 0]
+                if w.step_time > cut > 0]
 
 
 def elastic_remesh(n_alive: int, model_parallel: int) -> tuple[int, int]:

@@ -94,6 +94,19 @@ def main(argv=None):
                          "--page-size > 0; CPU repro: set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8 before "
                          "launch")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline from serve start; requests "
+                         "that exceed it retire with status='timeout'")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission cap: requests past this bound are load-"
+                         "shed immediately with status='shed' instead of "
+                         "queueing")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="serve under a seeded random fault plan (swap "
+                         "failures, allocator outages, latency spikes, "
+                         "page corruption, NaN logits, cancels) and report "
+                         "what was injected; same seed, same schedule.  "
+                         "See docs/chaos.md")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.6)
@@ -125,12 +138,21 @@ def main(argv=None):
     # rejects pre-sharded params), so the "weights sharded on one mesh,
     # engine serving unsharded" split is structurally impossible
     model = Model(cfg)
+    plan = None
+    if args.chaos is not None:
+        from ..serving.faults import FaultPlan
+        plan = FaultPlan.random(args.chaos,
+                                rids=list(range(args.requests)))
+        print(f"chaos mode: seed {args.chaos}, "
+              f"{len(plan.faults)} faults armed "
+              f"({', '.join(f.kind for f in plan.faults)})")
     engine = Engine(model, qparams, max_len=args.max_len,
                     sampler=SamplerConfig(args.temperature, args.top_p),
                     page_size=args.page_size, num_pages=args.num_pages,
                     prefill_chunk=args.prefill_chunk, kernel=args.kernel,
                     kv_quant=args.kv_quant, scheduler=args.scheduler,
-                    swap_budget_bytes=args.swap_budget_bytes, mesh=mesh)
+                    swap_budget_bytes=args.swap_budget_bytes, mesh=mesh,
+                    faults=plan, max_queue=args.max_queue)
     if mesh is not None:
         print(f"serving on mesh {describe_mesh(mesh)} "
               f"({mesh.size} devices: weights + paged KV pools sharded)")
@@ -154,7 +176,8 @@ def main(argv=None):
                     prompt=list(rng.integers(4, cfg.vocab_size,
                                              rng.integers(4, 12))),
                     max_new=args.max_new,
-                    priority=i % max(args.priority_classes, 1))
+                    priority=i % max(args.priority_classes, 1),
+                    deadline_s=args.deadline_s)
             for i in range(args.requests)]
     if args.sequential:
         done = engine.serve_sequential(reqs, seed=args.seed)
@@ -162,8 +185,14 @@ def main(argv=None):
         done = engine.serve(reqs, slots=slots,
                             seed=args.seed)
     for r in done:
-        print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}")
-    print(engine.last_stats.report())
+        tag = "" if r.status in ("", "ok") else f"  [{r.status}]"
+        print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}{tag}")
+    stats = engine.last_stats
+    print(stats.report())
+    if plan is not None:
+        hits = ", ".join(f"{f['kind']}@{f['step']}" for f in stats.fault_log)
+        print(f"chaos: {stats.faults_injected} faults landed"
+              + (f" ({hits})" if hits else ""))
     return done
 
 

@@ -1,2 +1,3 @@
 from .engine import Engine, EngineStats, PagePool, Request, RequestStats
+from .faults import Fault, FaultPlan
 from .sampler import SamplerConfig, sample, sample_per_slot

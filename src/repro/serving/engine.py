@@ -85,6 +85,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..checkpoint.fault_tolerance import straggler_threshold
 from ..models import paged, xlstm
 from ..models.attention import cache_len, default_paged_kernel
 from ..models.model import Model
@@ -92,6 +93,21 @@ from .sampler import (SamplerConfig, request_key, sample, sample_per_slot,
                       stream_key)
 
 _RECURRENT_KINDS = ("rglru", "mlstm", "slstm")
+
+# swap-in failure handling (scheduler="preempt"): a failed re-admission
+# of a swapped-out lane is retried with exponential backoff; once the
+# retries are spent the host copy is dropped and the request restarts
+# from its (deterministic) chunked prefill instead
+SWAP_IN_RETRIES = 3
+SWAP_IN_BACKOFF_S = 0.002
+
+# step watchdog: a decode step counts as "slow" when it exceeds
+# watchdog_factor x the rolling median of recent steps (the same
+# straggler rule checkpoint.fault_tolerance.HeartbeatMonitor applies to
+# training workers); the median needs a few samples before it means
+# anything, and the window is bounded so the baseline tracks drift
+WATCHDOG_MIN_SAMPLES = 4
+WATCHDOG_WINDOW = 64
 
 # scheduler="preempt" host swap-store cap when swap_budget_bytes is not
 # given: this fraction of physical RAM.  An unbounded swap store can OOM
@@ -180,6 +196,8 @@ class RequestStats:
     decode_tokens: int = 0
     priority: int = 0
     preemptions: int = 0         # times this request was swapped/kicked out
+    # terminal status: "ok" | "timeout" | "cancelled" | "failed" | "shed"
+    status: str = "ok"
 
     @property
     def decode_tok_s(self) -> float:
@@ -202,6 +220,11 @@ class Request:
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
     stats: RequestStats | None = None
+    # wall-clock SLO measured from the serve call's start: past it the
+    # request retires with status="timeout" wherever it sits (lane,
+    # queue, or swapped out).  None = no deadline.
+    deadline_s: float | None = None
+    status: str = ""             # terminal status once done (see RequestStats)
 
 
 @dataclasses.dataclass
@@ -243,6 +266,22 @@ class EngineStats:
     swap_in_bytes: int = 0               # KV bytes injected back on resume
     swap_held_bytes: int = 0             # peak host bytes held by swapped lanes
     swap_restarts: int = 0               # LIVE lanes restarted: swap over cap
+    # request lifecycle + fault plane (Engine(faults=...), deadline_s,
+    # cancel(), load shedding) — all zero on a fault-free, unshed run
+    faults_injected: int = 0             # FaultPlan firings this serve call
+    fault_log: list[dict] = dataclasses.field(default_factory=list)
+    alloc_stalls: int = 0                # decode steps stalled: allocator fault
+    nan_quarantines: int = 0             # lanes retired on non-finite logits
+    pages_corrupted: int = 0             # corrupt_page faults landed
+    slow_steps: int = 0                  # watchdog: steps > factor x median
+    swap_failures: int = 0               # injected swap-out failures (restart)
+    swap_retries: int = 0                # failed swap-in attempts retried
+    swap_dropped_bytes: int = 0          # swap rows discarded, never resumed
+    swap_spills: int = 0                 # lanes spilled to disk (swap_dir)
+    swap_disk_bytes: int = 0             # total bytes written to spill files
+    swap_disk_held_bytes: int = 0        # peak bytes held in spill files
+    swap_held_end_bytes: int = 0         # host swap bytes still held at return
+    swap_disk_end_bytes: int = 0         # spill bytes still held at return
     # per-iteration scheduler snapshots, recorded after the admission
     # phase: {"queued": [(prio, seq, rid, pages_needed)], "active":
     # [(prio, seq, rid, pages_held)], "free_pages": int, "free_slots":
@@ -297,9 +336,20 @@ class EngineStats:
         return self.decode_kv_bytes / max(self.decoded_tokens, 1)
 
     @property
-    def class_stats(self) -> dict[int, dict[str, float]]:
+    def status_counts(self) -> dict[str, int]:
+        """Terminal-status histogram over the call's requests — every
+        request lands in exactly one bucket of
+        ``ok | timeout | cancelled | failed | shed``."""
+        out: dict[str, int] = {}
+        for r in self.requests:
+            out[r.status] = out.get(r.status, 0) + 1
+        return out
+
+    @property
+    def class_stats(self) -> dict[int, dict[str, Any]]:
         """Per-priority-class SLO aggregates: mean queue wait, mean
-        admission (TTFT) and preemption count over completed requests."""
+        admission (TTFT), preemption count and the terminal-status
+        histogram over completed requests."""
         by: dict[int, list[RequestStats]] = {}
         for r in self.requests:
             by.setdefault(r.priority, []).append(r)
@@ -309,6 +359,8 @@ class EngineStats:
                 "mean_queue_wait_s": sum(r.queue_wait_s for r in rs) / len(rs),
                 "mean_admission_s": sum(r.admission_s for r in rs) / len(rs),
                 "preemptions": sum(r.preemptions for r in rs),
+                "statuses": {st: sum(1 for r in rs if r.status == st)
+                             for st in sorted({r.status for r in rs})},
             }
             for prio, rs in sorted(by.items())
         }
@@ -338,6 +390,25 @@ class EngineStats:
             lines.append(
                 f"decode reads {self.kv_bytes_per_decoded_token:.0f} "
                 f"KV-B/decoded-token over {self.decoded_tokens} tokens")
+        sc = self.status_counts
+        if set(sc) - {"ok"}:
+            lines.append("status: " + "  ".join(
+                f"{st}={n}" for st, n in sorted(sc.items())))
+        if self.faults_injected:
+            lines.append(
+                f"chaos: {self.faults_injected} faults injected — "
+                f"{self.alloc_stalls} alloc stalls, "
+                f"{self.nan_quarantines} quarantined, "
+                f"{self.pages_corrupted} pages corrupted, "
+                f"{self.swap_failures} swap-out failures, "
+                f"{self.swap_retries} swap-in retries, "
+                f"{self.slow_steps} slow steps")
+        if self.swap_spills:
+            lines.append(
+                f"swap spill: {self.swap_spills} lanes to disk, "
+                f"{self.swap_disk_bytes} B written (peak held "
+                f"{self.swap_disk_held_bytes} B, end "
+                f"{self.swap_disk_end_bytes} B)")
         if self.preemptions or self.scheduler == "preempt":
             lines.append(
                 f"scheduler {self.scheduler}: {self.preemptions} preemptions, "
@@ -345,16 +416,20 @@ class EngineStats:
                 f"{self.swap_in_bytes} B (peak held {self.swap_held_bytes} B, "
                 f"{self.swap_restarts} budget restarts)")
             for prio, cs in self.class_stats.items():
+                st = " ".join(f"{k}:{v}"
+                              for k, v in cs["statuses"].items())
                 lines.append(
                     f"  class {prio}: {cs['n']} reqs, queue "
                     f"{cs['mean_queue_wait_s'] * 1e3:.1f}ms, TTFT "
                     f"{cs['mean_admission_s'] * 1e3:.1f}ms, "
-                    f"{cs['preemptions']:.0f} preemptions")
+                    f"{cs['preemptions']:.0f} preemptions  [{st}]")
         for r in sorted(self.requests, key=lambda r: r.rid):
+            tag = "" if r.status == "ok" else f"  [{r.status}]"
             lines.append(
                 f"  req {r.rid}: wait {r.queue_wait_s * 1e3:.1f}ms  "
                 f"prefill {r.prefill_s * 1e3:.1f}ms  "
-                f"decode {r.decode_tokens} tok @ {r.decode_tok_s:.1f} tok/s")
+                f"decode {r.decode_tokens} tok @ {r.decode_tok_s:.1f} tok/s"
+                f"{tag}")
         return "\n".join(lines)
 
 
@@ -420,6 +495,9 @@ class _Swapped:
     pool_rows: dict[str, np.ndarray]     # leaf -> (n_pages_held, P, ...)
     slot_rows: dict[str, np.ndarray]     # leaf -> this slot's dense row
     t_enq: float = 0.0                   # when it went back on the queue
+    spill_path: str | None = None        # rows parked on disk (swap_dir)
+    saved_bytes: int = 0                 # row bytes at spill time
+    retries: int = 0                     # failed swap-in attempts so far
 
     @property
     def n_pages(self) -> int:
@@ -427,6 +505,8 @@ class _Swapped:
 
     @property
     def nbytes(self) -> int:
+        if self.saved_bytes:   # spilled: the rows live on disk, not in RAM
+            return self.saved_bytes
         return (sum(a.nbytes for a in self.pool_rows.values())
                 + sum(a.nbytes for a in self.slot_rows.values()))
 
@@ -475,6 +555,21 @@ class Engine:
     restarts because of the *default* cap warns once); pass a value to
     override.
 
+    Request lifecycle + fault plane: ``faults`` takes a seeded
+    :class:`~repro.serving.faults.FaultPlan` whose injections (swap
+    failures, allocator exhaustion, latency spikes, page corruption,
+    NaN logits, scheduled cancels) the serve loop degrades through
+    gracefully instead of crashing — see ``serve``'s docstring and
+    ``docs/chaos.md``.  ``max_queue`` / ``class_queues`` bound admission
+    (excess requests retire with ``status="shed"``), ``swap_dir`` lets
+    the preempt scheduler spill over-budget swap-outs to disk instead of
+    restarting them, and ``watchdog_factor`` sets the slow-step cutoff
+    (``EngineStats.slow_steps``) as a multiple of the rolling median
+    decode-step time — the same straggler rule
+    ``checkpoint.fault_tolerance.HeartbeatMonitor`` applies to training
+    workers.  :meth:`cancel` retires a request anywhere in its
+    lifecycle; ``Request.deadline_s`` does the same on a clock.
+
     ``mesh`` shards serving across a device mesh (requires
     ``page_size > 0``): the engine lays the **weights** out per
     ``parallel.sharding.SERVE_RULES`` (heads/experts on the ``model``
@@ -497,7 +592,10 @@ class Engine:
                  jit: bool = True, page_size: int = 0, num_pages: int = 0,
                  prefill_chunk: int = 0, kernel: str | None = None,
                  kv_quant: str | None = None, scheduler: str = "reserve",
-                 swap_budget_bytes: int | None = None, mesh=None):
+                 swap_budget_bytes: int | None = None, mesh=None,
+                 faults=None, max_queue: int | None = None,
+                 class_queues: dict[int, int] | None = None,
+                 swap_dir: str | None = None, watchdog_factor: float = 4.0):
         self.model = model
         self.params = params
         self.max_len = max_len
@@ -529,6 +627,27 @@ class Engine:
         self._warned_swap_budget = False
         self.swap_budget_bytes = swap_budget_bytes
         self.scheduler = scheduler
+        # fault-injection plane + request lifecycle (see serve())
+        self.faults = faults
+        if max_queue is not None and max_queue < 0:
+            raise ValueError("max_queue must be >= 0")
+        self.max_queue = max_queue
+        self.class_queues = dict(class_queues) if class_queues else None
+        if self.class_queues and any(v < 0
+                                     for v in self.class_queues.values()):
+            raise ValueError("class_queues caps must be >= 0")
+        if swap_dir is not None:
+            if scheduler != "preempt":
+                raise ValueError("swap_dir spills the preemption "
+                                 "scheduler's host swap store to disk; it "
+                                 "requires scheduler='preempt'")
+            os.makedirs(swap_dir, exist_ok=True)
+        self.swap_dir = swap_dir
+        if watchdog_factor <= 1.0:
+            raise ValueError("watchdog_factor must be > 1 (it multiplies "
+                             "the median step time)")
+        self.watchdog_factor = watchdog_factor
+        self._cancel_rids: set[int] = set()
         if mesh is not None and not page_size:
             raise ValueError("Engine(mesh=...) shards the pooled paged KV "
                              "cache and requires page_size > 0")
@@ -587,6 +706,20 @@ class Engine:
                         else v.at[ids].set(-1))
                     for k, v in pos_leaves.items()}
 
+        def scrub_all(pool_subtree, ids):
+            """Fault-mode release: zero EVERY pool leaf of the freed pages
+            (pos entries to -1, K/V payloads and q8 scales to 0).  With a
+            fault plan active a freed page may have been poisoned with
+            Inf/NaN; the pos=-1 mask alone is not enough, because masked
+            attention still multiplies the stale payload by zero and
+            ``0 * inf = nan`` would leak into the page's next owner."""
+            out = {}
+            for k, v in pool_subtree.items():
+                fill = -1 if k.endswith("/pos") else 0
+                out[k] = (v.at[:, ids].set(fill) if pool_axis
+                          else v.at[ids].set(fill))
+            return out
+
         decode_paged = partial(model.decode_step_paged, page_size=page_size,
                                max_len=max_len, kernel=self.kernel,
                                kv_quant=self.kv_quant, mesh=self.mesh)
@@ -608,11 +741,13 @@ class Engine:
                                          static_argnames=("active_pages",))
             self._chunk = jax.jit(chunk_fn)
             self._scrub = jax.jit(scrub)
+            self._scrub_all = jax.jit(scrub_all)
         else:
             self._decode = model.decode_step
             self._decode_paged = decode_paged
             self._chunk = chunk_fn
             self._scrub = scrub
+            self._scrub_all = scrub_all
 
     def _constrained(self, fn):
         """Wrap a ``(params, cache, ...) -> (out, new_cache)`` step for
@@ -648,6 +783,16 @@ class Engine:
                     for k, v in new_cache.items()}
             return out, new_cache
         return wrapped
+
+    def cancel(self, rid: int) -> None:
+        """Request cancellation of request ``rid``.  The serve loop's
+        per-iteration sweep retires it with ``status="cancelled"``
+        wherever it sits: a running lane releases its pages, a queued
+        entry is dropped, and a swapped-out lane frees its host rows (or
+        deletes its disk spill) without ever being re-admitted.  Callable
+        before :meth:`serve` or during it (a ``FaultPlan`` ``cancel``
+        fault calls this at a chosen step); unknown rids are a no-op."""
+        self._cancel_rids.add(rid)
 
     # -- one-shot batch generation ------------------------------------------
     def generate(self, prompts: list[list[int]], max_new: int,
@@ -707,17 +852,71 @@ class Engine:
         runs dry the lowest-class / youngest lane is evicted (KV pages
         swapped to host memory) and re-enters the queue at its original
         rank — see the class docstring.
+
+        Request lifecycle: every request ends in exactly one terminal
+        ``status`` — ``"ok"``, ``"timeout"`` (``Request.deadline_s``
+        elapsed, measured from the serve call's start), ``"cancelled"``
+        (:meth:`cancel`), ``"failed"`` (non-finite logits quarantined the
+        lane, or the request can never fit the pool / ``max_len``), or
+        ``"shed"`` (admission-side load shedding past ``max_queue`` /
+        ``class_queues``).  ``serve`` itself never raises mid-batch for a
+        per-request condition: one bad request retires with its status
+        while the rest of the batch decodes on, and with
+        ``Engine(faults=...)`` every injected failure degrades the same
+        way (``EngineStats.fault_log`` records what actually landed).
         """
         t_start = time.perf_counter()
         stats = EngineStats()
         stats.scheduler = self.scheduler
         preempt = self.scheduler == "preempt"
+        plan = self.faults
+        if plan is not None:
+            plan.reset()   # each serve call replays the same fault schedule
+        it = -1            # engine iteration: the fault plan's step axis
+
+        def fire(kind: str, rid: int | None = None):
+            return plan.fire(kind, it, rid) if plan is not None else None
+
         lanes = [_Slot() for _ in range(slots)]
         done: list[Request] = []
         use_paged = self.page_size > 0
         P = self.page_size
         C = self.prefill_chunk
         model, dtype = self.model, self.model.dtype
+
+        def terminate(req: Request, status: str,
+                      queue_wait: float = 0.0) -> None:
+            """Retire a request with a non-"ok" terminal status from
+            wherever it sits (shedding, a queue reap, lane quarantine)."""
+            if req.stats is None:
+                req.stats = RequestStats(rid=req.rid, priority=req.priority,
+                                         queue_wait_s=queue_wait)
+            req.stats.status = status
+            req.status = status
+            req.done = True
+            self._cancel_rids.discard(req.rid)
+            stats.requests.append(req.stats)
+            stats.total_tokens += len(req.out)
+            done.append(req)
+
+        # -- admission-side load shedding (max_queue / class_queues caps):
+        # requests past the bounds retire immediately with status="shed"
+        # instead of waiting out a queue the engine already knows is over
+        # capacity; earlier arrivals win, per class and overall
+        admitted: list[Request] = []
+        class_n: dict[int, int] = {}
+        for req in requests:
+            req.done, req.status, req.stats, req.out = False, "", None, []
+            over = (self.max_queue is not None
+                    and len(admitted) >= self.max_queue)
+            cap = (self.class_queues or {}).get(req.priority)
+            over = over or (cap is not None
+                            and class_n.get(req.priority, 0) >= cap)
+            if over:
+                terminate(req, "shed")
+            else:
+                class_n[req.priority] = class_n.get(req.priority, 0) + 1
+                admitted.append(req)
 
         # reserve mode: plain FIFO deque.  preempt mode: a (priority,
         # seq, tick) heap — seq is the arrival rank, so FIFO within a
@@ -734,12 +933,11 @@ class Engine:
             enq_t[seq] = time.perf_counter()
 
         if preempt:
-            for i, req in enumerate(requests):
-                req.stats = None     # re-serving restarts its accounting
+            for i, req in enumerate(admitted):
                 requeue(req, req.priority, i)
                 enq_t[i] = t_start
         else:
-            queue = deque(requests)
+            queue = deque(admitted)
 
         def pending() -> bool:
             return bool(pqueue) if preempt else bool(queue)
@@ -778,7 +976,8 @@ class Engine:
         pool_axis = 1 if model.scan else 0
         pool_leaves: list[str] = []
         slot_leaves: list[str] = []
-        if use_paged and (preempt or self.mesh is not None):
+        if use_paged and (preempt or self.mesh is not None
+                          or plan is not None):
             r = paged.RESERVED_PAGES
             lo_specs = model.paged_cache_specs(r, P, slots, dtype=dtype,
                                                kv_quant=self.kv_quant)
@@ -807,6 +1006,8 @@ class Engine:
         # budget check runs BEFORE any device_get — an over-budget victim
         # discards its KV and restarts instead of swapping
         swap_held = 0
+        disk_held = 0                    # bytes parked in swap_dir spill files
+        step_times: list[float] = []     # rolling decode-step watchdog window
         swap_page_b = swap_slot_b = 0
         if use_paged and preempt:
             swap_page_b = sum(int(cache[k].nbytes) // num_pages
@@ -877,6 +1078,10 @@ class Engine:
             if not use_paged or hi <= lo:
                 return True
             targets = _chunk_page_targets(s, lo, hi)
+            if targets and not alloc_ok:
+                # injected allocator exhaustion: skip this chunk — the
+                # lane stays in _PREFILL and retries next iteration
+                return False
             if preempt and len(targets) > free_pages():
                 if not free_up(len(targets), lane.key):
                     preempt_lane(s)
@@ -888,21 +1093,24 @@ class Engine:
                 lane.reserve_remaining -= 1
             return True
 
-        def alloc_decode_pages(live_s: np.ndarray) -> None:
+        def alloc_decode_pages(live_s: np.ndarray) -> bool:
             """Decode-time allocation, batched: each live lane writes one
             token this step, so it needs at most one new full + one new
             ring page.  The boundary-crossing masks are computed vectorized
             over all lanes and ONE allocator call covers the whole step.
             Under scheduler="preempt" a dry pool evicts the worst-ranked
             active lane (lowest class, youngest) and retries — the
-            best-ranked lane can always progress."""
+            best-ranked lane can always progress.  Returns True when an
+            injected allocator-exhaustion fault blocked the step's page
+            claims — the caller stalls the whole decode step and retries
+            next iteration."""
             if not use_paged or live_s.size == 0:
-                return
+                return False
             while True:
                 live_s = np.array([s for s in live_s if lanes[s].live],
                                   np.int32)
                 if live_s.size == 0:
-                    return
+                    return False
                 posv = np.array([lanes[s].pos for s in live_s], np.int32)
                 want: list[tuple[np.ndarray, int, int, bool]] = []
                 if n_full:
@@ -915,6 +1123,8 @@ class Engine:
                     need = bt_ring[live_s, lp] < paged.RESERVED_PAGES
                     want += [(bt_ring, s, l, False)
                              for s, l in zip(live_s[need], lp[need])]
+                if want and not alloc_ok:
+                    return True
                 if not preempt or len(want) <= free_pages():
                     break
                 active = [s for s, l in enumerate(lanes) if l.state != _FREE]
@@ -925,6 +1135,7 @@ class Engine:
                 lane = lanes[s]
                 (lane.pages_full if is_full else lane.pages_ring).append(pid)
                 lane.reserve_remaining -= 1
+            return False
 
         def release(lane: _Slot, s: int) -> None:
             nonlocal cache
@@ -934,12 +1145,20 @@ class Engine:
                     ids = np.full(max(n_full + n_ring, 1),
                                   paged.GARBAGE_PAGE, np.int32)
                     ids[:len(pages)] = pages
-                    pos_leaves = {k: v for k, v in cache.items()
-                                  if k.endswith("/pos")}
-                    if pos_leaves:
-                        cache = dict(
-                            cache, **self._scrub(pos_leaves,
-                                                 jnp.asarray(ids)))
+                    if plan is not None and pool_leaves:
+                        # fault plans can poison page payloads (Inf/NaN);
+                        # full-scrub freed pages so the poison can never
+                        # recycle into a later owner through the free list
+                        cache = dict(cache, **self._scrub_all(
+                            {k: cache[k] for k in pool_leaves},
+                            jnp.asarray(ids)))
+                    else:
+                        pos_leaves = {k: v for k, v in cache.items()
+                                      if k.endswith("/pos")}
+                        if pos_leaves:
+                            cache = dict(
+                                cache, **self._scrub(pos_leaves,
+                                                     jnp.asarray(ids)))
                 pool.free(lane.pages_full)
                 pool.free(lane.pages_ring)
                 bt_full[s, :] = paged.GARBAGE_PAGE
@@ -950,6 +1169,8 @@ class Engine:
 
         def finish(req: Request, rst: RequestStats):
             req.done = True
+            req.status = rst.status = "ok"
+            self._cancel_rids.discard(req.rid)
             req.stats = rst
             stats.requests.append(rst)
             stats.total_tokens += len(req.out)
@@ -967,7 +1188,7 @@ class Engine:
             same cache contents.  Either way the original arrival rank is
             kept, so the request re-enters the queue where it left.
             """
-            nonlocal swap_held
+            nonlocal swap_held, disk_held
             lane = lanes[s]
             req, seq = lane.req, lane.seq
             stats.preemptions += 1
@@ -975,13 +1196,24 @@ class Engine:
             over_budget = (
                 lane.state == _LIVE and self.swap_budget_bytes is not None
                 and swap_held + swap_size(lane) > self.swap_budget_bytes)
-            if over_budget:
-                # the host swap store is full: evict-to-restart.  Chunked
-                # prefill boundaries and the per-request sample streams are
-                # deterministic, so the restarted run re-emits the same
-                # tokens — only latency is lost, never exactness.
+            # past the host budget the rows spill to disk when a swap_dir
+            # is configured; with no spill dir (or on an injected
+            # swap-out failure) the lane falls back to evict-to-restart
+            spill = over_budget and self.swap_dir is not None
+            swap_fail = (lane.state == _LIVE
+                         and fire("swap_out_fail", req.rid) is not None)
+            if swap_fail:
+                stats.swap_failures += 1
+            restart = (lane.state != _LIVE or swap_fail
+                       or (over_budget and not spill))
+            if lane.state == _LIVE and restart:
+                # evict-to-restart.  Chunked prefill boundaries and the
+                # per-request sample streams are deterministic, so the
+                # restarted run re-emits the same tokens — only latency
+                # is lost, never exactness.
                 stats.swap_restarts += 1
-                if (self._swap_budget_defaulted
+                if (over_budget and not swap_fail
+                        and self._swap_budget_defaulted
                         and not self._warned_swap_budget):
                     self._warned_swap_budget = True
                     warnings.warn(
@@ -992,7 +1224,7 @@ class Engine:
                         "pass Engine(swap_budget_bytes=...) to raise the "
                         "cap (restarts stay bit-exact but cost latency)",
                         stacklevel=2)
-            if lane.state == _LIVE and not over_budget:
+            if not restart:
                 ids = lane.pages_full + lane.pages_ring
                 pool_rows = {
                     k: jax.device_get(paged.extract_pages(
@@ -1009,9 +1241,37 @@ class Engine:
                     pages_ring=list(lane.pages_ring),
                     bt_full=bt_full[s].copy(), bt_ring=bt_ring[s].copy(),
                     pool_rows=pool_rows, slot_rows=slot_rows)
+                if spill:
+                    # park the rows in a file and drop the host copies:
+                    # the host store stays under budget and the lane
+                    # still resumes bit-exactly (np round-trips the
+                    # int8 / f32 / pos arrays losslessly)
+                    fn = os.path.join(
+                        self.swap_dir,
+                        f"swap-{req.rid}-{seq}-{stats.swap_spills}.npz")
+                    # byte-view every array: extension dtypes (bf16)
+                    # don't survive the npy format, raw bytes always do;
+                    # swap-in views them back with the cache leaf dtype
+                    arrs = {f"p::{k}": np.ascontiguousarray(v)
+                            .view(np.uint8)
+                            for k, v in sw.pool_rows.items()}
+                    arrs.update({f"s::{k}": np.ascontiguousarray(v)
+                                 .view(np.uint8)
+                                 for k, v in sw.slot_rows.items()})
+                    np.savez(fn, **arrs)
+                    sw.saved_bytes = sw.nbytes
+                    sw.pool_rows, sw.slot_rows = {}, {}
+                    sw.spill_path = fn
+                    stats.swap_spills += 1
+                    stats.swap_disk_bytes += sw.saved_bytes
+                    disk_held += sw.saved_bytes
+                    stats.swap_disk_held_bytes = max(
+                        stats.swap_disk_held_bytes, disk_held)
+                else:
+                    swap_held += sw.nbytes
+                    stats.swap_held_bytes = max(stats.swap_held_bytes,
+                                                swap_held)
                 stats.swap_out_bytes += sw.nbytes
-                swap_held += sw.nbytes
-                stats.swap_held_bytes = max(stats.swap_held_bytes, swap_held)
                 item: Any = sw
             else:
                 req.out = []
@@ -1025,7 +1285,22 @@ class Engine:
             id -> new id, and scatter the saved rows back.  Attention only
             reads pages through the block table, so the new physical
             layout is invisible — outputs stay bitwise identical."""
-            nonlocal cache, swap_held
+            nonlocal cache, swap_held, disk_held
+            if sw.spill_path is not None:
+                # rows were parked on disk past the host budget: load
+                # them back (lossless round-trip) and delete the file
+                with np.load(sw.spill_path) as z:
+                    sw.pool_rows = {
+                        k[3:]: z[k].view(np.dtype(cache[k[3:]].dtype))
+                        for k in z.files if k.startswith("p::")}
+                    sw.slot_rows = {
+                        k[3:]: z[k].view(np.dtype(cache[k[3:]].dtype))
+                        for k in z.files if k.startswith("s::")}
+                os.remove(sw.spill_path)
+                disk_held -= sw.nbytes
+                sw.spill_path = None
+            else:
+                swap_held -= sw.nbytes
             new_ids = pool.alloc_many(sw.n_pages)
             m = {old: new for old, new in
                  zip(sw.pages_full + sw.pages_ring, new_ids)}
@@ -1047,7 +1322,6 @@ class Engine:
             lane.pages_ring = [m[p] for p in sw.pages_ring]
             lane.reserve_remaining = 0
             stats.swap_in_bytes += sw.nbytes
-            swap_held -= sw.nbytes
             req.stats.queue_wait_s += time.perf_counter() - enq_t[seq]
 
         def free_up(need: int, key: tuple[int, int]) -> bool:
@@ -1071,7 +1345,84 @@ class Engine:
                 preempt_lane(s)
             return True
 
+        def drop_item(item: Any) -> None:
+            """Discard a queued ``_Swapped``'s host rows / disk spill (the
+            request was cancelled, timed out, or exhausted its swap-in
+            retries while parked) — the bytes are accounted as dropped so
+            ``swap_out == swap_in + swap_dropped`` always balances."""
+            nonlocal swap_held, disk_held
+            if not isinstance(item, _Swapped):
+                return
+            stats.swap_dropped_bytes += item.nbytes
+            if item.spill_path is not None:
+                disk_held -= item.nbytes
+                try:
+                    os.remove(item.spill_path)
+                except OSError:
+                    pass
+                item.spill_path = None
+            else:
+                swap_held -= item.nbytes
+            item.pool_rows, item.slot_rows = {}, {}
+
+        def doomed(req: Request, now: float) -> str | None:
+            if req.rid in self._cancel_rids:
+                return "cancelled"
+            if (req.deadline_s is not None
+                    and now - t_start > req.deadline_s):
+                return "timeout"
+            return None
+
+        def reap(now: float) -> None:
+            """Per-iteration lifecycle sweep: retire cancelled / past-
+            deadline requests wherever they sit — running lanes release
+            their pages, queued entries drop out (a swapped-out entry
+            frees its host rows / spill file and is never re-admitted)."""
+            for s, lane in enumerate(lanes):
+                if lane.state == _FREE:
+                    continue
+                status = doomed(lane.req, now)
+                if status:
+                    req = lane.req
+                    release(lane, s)
+                    terminate(req, status)
+            if preempt:
+                keep = []
+                for entry in pqueue:
+                    prio, seq, _, item = entry
+                    req = item.req if isinstance(item, _Swapped) else item
+                    status = doomed(req, now)
+                    if status:
+                        drop_item(item)
+                        terminate(req, status,
+                                  queue_wait=now - enq_t.get(seq, now))
+                    else:
+                        keep.append(entry)
+                if len(keep) != len(pqueue):
+                    pqueue[:] = keep
+                    heapq.heapify(pqueue)
+            else:
+                for req in [r for r in queue if doomed(r, now)]:
+                    queue.remove(req)
+                    terminate(req, doomed(req, now),
+                              queue_wait=now - t_start)
+
         while pending() or any(s.state != _FREE for s in lanes):
+            it += 1
+            # scheduled cancellations fire as real cancel() calls — the
+            # deterministic chaos path for mid-flight cancellation
+            while True:
+                f = fire("cancel")
+                if f is None:
+                    break
+                self.cancel(f.rid)
+            reap(time.perf_counter())
+            # one injected allocator outage blocks every allocation
+            # attempt this iteration (prefill chunks skip, decode
+            # stalls); progress resumes when the fault's charges run out
+            alloc_ok = fire("alloc_fail") is None
+            if not alloc_ok:
+                stats.alloc_stalls += 1
             # -- admission: claim free slots for queued requests -------------
             if preempt:
                 # slot preemption: a queued request of a strictly better
@@ -1088,17 +1439,21 @@ class Engine:
                     prio, seq, _, item = pqueue[0]
                     req = item.req if isinstance(item, _Swapped) else item
                     n = len(req.prompt)
-                    if n + 1 > self.max_len:
-                        raise ValueError(
-                            f"prompt of {n} tokens leaves no room to decode "
-                            f"within max_len={self.max_len}")
+                    infeasible = n + 1 > self.max_len
+                    if use_paged and not infeasible:
+                        infeasible = (worst_pages(n, req.max_new)
+                                      > pool.capacity)
+                    if infeasible:
+                        # can never run within max_len / the page pool:
+                        # retire THIS request with status="failed"
+                        # instead of poisoning the whole batch
+                        heapq.heappop(pqueue)
+                        drop_item(item)
+                        terminate(req, "failed",
+                                  queue_wait=time.perf_counter()
+                                  - enq_t.get(seq, t_start))
+                        continue
                     if use_paged:
-                        worst = worst_pages(n, req.max_new)
-                        if worst > pool.capacity:
-                            raise ValueError(
-                                f"request needs up to {worst} pages but the "
-                                f"pool holds {pool.capacity}; raise "
-                                f"num_pages or max_len/page_size")
                         # no worst-case reservation: admit whenever the
                         # request's IMMEDIATE need fits (evicting worse
                         # lanes if it must) — later shortfalls preempt
@@ -1107,6 +1462,22 @@ class Engine:
                     heapq.heappop(pqueue)
                     now = time.perf_counter()
                     if isinstance(item, _Swapped):
+                        if fire("swap_in_fail", req.rid) is not None:
+                            # injected swap-in failure: bounded retry
+                            # with backoff, then drop the host copy and
+                            # restart via (deterministic) chunked prefill
+                            item.retries += 1
+                            stats.swap_retries += 1
+                            if item.retries < SWAP_IN_RETRIES:
+                                time.sleep(SWAP_IN_BACKOFF_S
+                                           * 2 ** (item.retries - 1))
+                                requeue(item, prio, seq)
+                            else:
+                                drop_item(item)
+                                stats.swap_restarts += 1
+                                req.out = []
+                                requeue(req, prio, seq)
+                            continue
                         swap_in(lane, s, item, seq)
                         continue
                     req.out = []  # (re)start: output accumulates from zero
@@ -1129,17 +1500,15 @@ class Engine:
                     if lane.state != _FREE or not queue:
                         continue
                     n = len(queue[0].prompt)
-                    if n + 1 > self.max_len:
-                        raise ValueError(
-                            f"prompt of {n} tokens leaves no room to decode "
-                            f"within max_len={self.max_len}")
                     need = worst_pages(n, queue[0].max_new)
+                    if (n + 1 > self.max_len
+                            or (use_paged and need > pool.capacity)):
+                        # can never fit max_len / the pool: retire with
+                        # status="failed", keep serving the rest
+                        terminate(queue.popleft(), "failed",
+                                  queue_wait=time.perf_counter() - t_start)
+                        continue
                     if use_paged:
-                        if need > pool.capacity:
-                            raise ValueError(
-                                f"request needs up to {need} pages but the "
-                                f"pool holds {pool.capacity}; raise "
-                                f"num_pages or max_len/page_size")
                         outstanding = sum(l.reserve_remaining for l in lanes)
                         if (pool.capacity - pool.in_use - outstanding) < need:
                             break  # wait for retirements to free pages
@@ -1172,6 +1541,10 @@ class Engine:
                                for l in lanes if l.state != _FREE],
                     "free_pages": free_pages(),
                     "free_slots": sum(l.state == _FREE for l in lanes),
+                    # rids parked in the queue as swapped-out host copies
+                    # (chaos tests aim cancel faults at these windows)
+                    "swapped": sorted(e[3].req.rid for e in pqueue
+                                      if isinstance(e[3], _Swapped)),
                 })
 
             # -- one batched prefill chunk over all admitting lanes ----------
@@ -1202,7 +1575,7 @@ class Engine:
                     self.params, cache, jnp.asarray(toks), jnp.asarray(start),
                     jnp.asarray(clen), **kwargs)
                 stats.prefill_iterations += 1
-                first_toks = None
+                first_toks = first_bad = None
                 for s in prefilling:
                     lane = lanes[s]
                     if lane.state != _PREFILL or not clen[s]:
@@ -1211,23 +1584,38 @@ class Engine:
                     if lane.prefill_pos < len(lane.req.prompt):
                         continue  # more chunks to stream
                     if first_toks is None:
+                        # non-finite-logit flags ride the same transfer
+                        # as the sampled tokens (quarantine detector)
+                        bad = ~jnp.all(
+                            jnp.isfinite(logits.astype(jnp.float32)),
+                            axis=-1)
                         if self.sampler.greedy:
-                            first_toks = np.asarray(
-                                jnp.argmax(logits, axis=-1))
+                            cand = jnp.argmax(logits, axis=-1)
                         else:
                             keys = jnp.stack(
                                 [stream_key(l.req_key, 0)
                                  if l.req_key is not None
                                  else jnp.zeros(2, jnp.uint32) for l in lanes])
-                            first_toks = np.asarray(
-                                sample_per_slot(logits, keys, self.sampler))
-                    tok = int(first_toks[s])
+                            cand = sample_per_slot(logits, keys, self.sampler)
+                        packed = np.asarray(jnp.concatenate(
+                            [cand.astype(jnp.int32),
+                             bad.astype(jnp.int32)]))
+                        first_toks, first_bad = (packed[:slots],
+                                                 packed[slots:])
                     req = lane.req
                     # prefill wall time = admission -> first token (chunk
                     # compute + any decode iterations interleaved between
                     # this prompt's chunks); first_toks forced the device
                     req.stats.prefill_s = (time.perf_counter() - t_start
                                            - req.stats.queue_wait_s)
+                    if first_bad[s]:
+                        # non-finite prefill logits: quarantine only this
+                        # lane (pages scrubbed + freed, status="failed")
+                        stats.nan_quarantines += 1
+                        release(lane, s)
+                        terminate(req, "failed")
+                        continue
+                    tok = int(first_toks[s])
                     req.out.append(tok)
                     budget = min(req.max_new, self.max_len - len(req.prompt))
                     if tok == self.eos_id or len(req.out) >= budget:
@@ -1240,8 +1628,13 @@ class Engine:
 
             # decode-time page allocation may itself preempt lanes under
             # scheduler="preempt", so allocate BEFORE freezing the live set
-            alloc_decode_pages(np.array(
-                [s for s, l in enumerate(lanes) if l.live], np.int32))
+            if alloc_decode_pages(np.array(
+                    [s for s, l in enumerate(lanes) if l.live], np.int32)):
+                # allocator fault: the missing pages are exactly this
+                # step's write targets, so the whole decode step stalls
+                # one iteration — pure latency, no lane state advances,
+                # outputs stay bitwise identical
+                continue
             live = [s for s in lanes if s.live]
             if not live:
                 continue
@@ -1256,11 +1649,46 @@ class Engine:
                 + sum(l.prefill_pos for l in lanes if l.state == _PREFILL))
             if use_paged:
                 stats.pages_in_use_per_iteration.append(pool.in_use)
+            if plan is not None and use_paged:
+                # corrupt_page faults poison one held page of the target
+                # lane across every payload pool leaf (pos rows stay —
+                # the page must still LOOK valid): the lane's next logits
+                # go non-finite and the quarantine below must contain the
+                # blast radius to that lane alone
+                for s, lane in enumerate(lanes):
+                    if not lane.live or not (lane.pages_full
+                                             or lane.pages_ring):
+                        continue
+                    f = fire("corrupt_page", lane.req.rid)
+                    if f is None:
+                        continue
+                    stats.pages_corrupted += 1
+                    pid = (lane.pages_full or lane.pages_ring)[0]
+                    upd = {}
+                    for k in pool_leaves:
+                        if k.endswith("/pos"):
+                            continue
+                        v = cache[k]
+                        if jnp.issubdtype(v.dtype, jnp.floating):
+                            fill = jnp.asarray(
+                                f.value if f.value is not None
+                                else jnp.inf, v.dtype)
+                        else:   # q8 int8 payloads: scales carry the inf
+                            fill = jnp.asarray(jnp.iinfo(v.dtype).max,
+                                               v.dtype)
+                        upd[k] = (v.at[:, pid].set(fill) if pool_axis
+                                  else v.at[pid].set(fill))
+                    cache = dict(cache, **upd)
             toks = jnp.asarray([s.tok for s in lanes], jnp.int32)
             pos = jnp.asarray([s.pos if s.live else 0 for s in lanes],
                               jnp.int32)
             live_mask = jnp.asarray([s.live for s in lanes])
             t0 = time.perf_counter()
+            lat = fire("latency")
+            if lat is not None:
+                # injected step-latency spike, inside the timed window so
+                # the step watchdog sees it like a real stall
+                time.sleep(lat.value if lat.value is not None else 0.02)
             if use_paged:
                 active = None
                 lane_pages = None
@@ -1308,6 +1736,17 @@ class Engine:
                 logits, cache = self._decode(self.params, cache, toks, pos,
                                              live=live_mask)
             stats.decoded_tokens += len(live)
+            if plan is not None:
+                # nan_logits faults overwrite the target lane's logits
+                # row before sampling — the detector below must catch it
+                for s, lane in enumerate(lanes):
+                    if not lane.live:
+                        continue
+                    f = fire("nan_logits", lane.req.rid)
+                    if f is not None:
+                        logits = logits.at[s].set(jnp.asarray(
+                            f.value if f.value is not None else jnp.nan,
+                            logits.dtype))
             if self.sampler.greedy:
                 next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             else:
@@ -1315,10 +1754,25 @@ class Engine:
                     [stream_key(l.req_key, l.n_out) if l.live
                      else jnp.zeros(2, jnp.uint32) for l in lanes])
                 next_tok = sample_per_slot(logits, keys, self.sampler)
+            # per-lane non-finite-logit flags ride the same transfer as
+            # the sampled tokens (quarantine detector, always on)
+            bad = ~jnp.all(jnp.isfinite(logits.astype(jnp.float32)),
+                           axis=-1)
             # one materialisation per step; doubles as the timing barrier
             # repro-lint: disable=host-sync-in-hot-path (honest step timing)
-            host_tok = np.asarray(jax.block_until_ready(next_tok))
+            packed = np.asarray(jax.block_until_ready(jnp.concatenate(
+                [next_tok.astype(jnp.int32), bad.astype(jnp.int32)])))
+            host_tok, host_bad = packed[:slots], packed[slots:]
             dt = time.perf_counter() - t0
+            # step watchdog: HeartbeatMonitor's straggler rule over the
+            # engine's own recent decode steps
+            step_times.append(dt)
+            del step_times[:-WATCHDOG_WINDOW]
+            if len(step_times) >= WATCHDOG_MIN_SAMPLES:
+                cut = straggler_threshold(step_times[:-1],
+                                          self.watchdog_factor)
+                if dt > cut > 0:
+                    stats.slow_steps += 1
 
             # -- emit + retire ----------------------------------------------
             for s, lane in enumerate(lanes):
@@ -1327,6 +1781,14 @@ class Engine:
                 req = lane.req
                 rst = req.stats
                 rst.decode_s += dt
+                if host_bad[s]:
+                    # non-finite logits: quarantine ONLY this lane —
+                    # pages scrubbed + freed, status="failed"; every
+                    # other lane decodes on untouched
+                    stats.nan_quarantines += 1
+                    release(lane, s)
+                    terminate(req, "failed")
+                    continue
                 rst.decode_tokens += 1
                 tok = int(host_tok[s])
                 req.out.append(tok)
@@ -1341,6 +1803,14 @@ class Engine:
         if use_paged:
             stats.peak_pages = pool.peak_in_use
             stats.pages_leaked = pool.in_use
+        if plan is not None:
+            stats.faults_injected = len(plan.injected)
+            stats.fault_log = list(plan.injected)
+        stats.swap_held_end_bytes = swap_held
+        stats.swap_disk_end_bytes = disk_held
+        # every request is terminal now; cancels for unknown or already
+        # finished rids must not leak into the next serve call
+        self._cancel_rids.clear()
         stats.wall_s = time.perf_counter() - t_start
         self.last_stats = stats
         return done

@@ -1,0 +1,516 @@
+"""Chaos suite: the serving engine under a deterministic fault plane.
+
+Every test here serves a workload while a seeded :class:`FaultPlan`
+injects failures (swap-out/swap-in errors, allocator exhaustion, latency
+spikes, corrupted KV pages, NaN logits, cancellations) and then checks
+the graceful-degradation contract from ``docs/chaos.md``:
+
+* ``serve()`` **returns** — it never raises, no matter the schedule;
+* every request ends in **exactly one terminal status** out of
+  ``ok | timeout | cancelled | failed | shed``;
+* **page conservation** — free + held == usable pool at every scheduler
+  trace snapshot, and zero pages leaked at the end;
+* **swap accounting balances** — bytes swapped out equal bytes swapped
+  in plus bytes deliberately dropped, and host/disk swap holdings
+  return to zero;
+* **bystander bitwise parity** — requests not targeted by an
+  output-dirtying fault (``FaultPlan.dirty_rids()``) produce tokens
+  bitwise identical to a fault-free run, for f32 and q8_0 KV pools.
+
+Fuzz seeds derive from ``REPRO_CHAOS_SEED`` (default 0) so CI pins one
+schedule set and a failure reproduces from the seed alone.  When
+``REPRO_CHAOS_REPORT`` names a path, the suite writes a JSON report of
+every fault injected and every invariant checked (uploaded as a CI
+artifact by the ``chaos`` job).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from test_paged_cache import _setup
+
+from repro.checkpoint.fault_tolerance import (HeartbeatMonitor,
+                                              straggler_threshold)
+from repro.models import paged
+from repro.serving import Engine, Fault, FaultPlan, SamplerConfig
+from repro.serving.engine import Request
+
+_GREEDY = SamplerConfig(greedy=True)
+TERMINAL = ("ok", "timeout", "cancelled", "failed", "shed")
+
+CHAOS_SEED = int(os.environ.get("REPRO_CHAOS_SEED", "0"))
+
+# accumulated by _record(), flushed to REPRO_CHAOS_REPORT at teardown
+_REPORT: dict = {"seed": CHAOS_SEED, "runs": []}
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _chaos_report():
+    yield
+    path = os.environ.get("REPRO_CHAOS_REPORT")
+    if path:
+        with open(path, "w") as f:
+            json.dump(_REPORT, f, indent=2, sort_keys=True)
+
+
+def _record(name, stats, plan=None, extra=None):
+    _REPORT["runs"].append({
+        "test": name,
+        "faults_injected": stats.faults_injected,
+        "fault_log": stats.fault_log,
+        "statuses": stats.status_counts,
+        "pages_leaked": stats.pages_leaked,
+        "swap": {"out": stats.swap_out_bytes, "in": stats.swap_in_bytes,
+                 "dropped": stats.swap_dropped_bytes,
+                 "held_end": stats.swap_held_end_bytes,
+                 "disk_end": stats.swap_disk_end_bytes},
+        "dirty_rids": sorted(plan.dirty_rids()) if plan else [],
+        **(extra or {}),
+    })
+
+
+# -- workloads -------------------------------------------------------------
+# tight: pool pressure forces preemptions + swap traffic (preempt mode)
+# loose: everything fits; used for lifecycle tests with no swap noise
+
+def _tight_requests(cfg, n=6):
+    rng = np.random.default_rng(3)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(6, 14))
+        reqs.append(dict(
+            rid=i,
+            prompt=[int(t) for t in rng.integers(4, cfg.vocab_size, plen)],
+            max_new=8, priority=i % 3))
+    return reqs
+
+
+def _loose_requests(cfg, n=4, max_new=5):
+    rng = np.random.default_rng(7)
+    return [dict(rid=i,
+                 prompt=[int(t)
+                         for t in rng.integers(4, cfg.vocab_size, 9)],
+                 max_new=max_new, priority=i % 2) for i in range(n)]
+
+
+def _mk(model, params, *, num_pages, scheduler="preempt", kv_quant=None,
+        swap_budget_bytes=1 << 30, **kw):
+    return Engine(model, params, max_len=48, page_size=4, kernel="gather",
+                  jit=False, sampler=_GREEDY, kv_quant=kv_quant,
+                  num_pages=num_pages, scheduler=scheduler,
+                  swap_budget_bytes=(swap_budget_bytes
+                                     if scheduler == "preempt" else None),
+                  **kw)
+
+
+def _serve(eng, req_dicts, slots=4, seed=0, deadlines=None):
+    reqs = []
+    for d in req_dicts:
+        r = Request(**d)
+        if deadlines and d["rid"] in deadlines:
+            r.deadline_s = deadlines[d["rid"]]
+        reqs.append(r)
+    done = eng.serve(reqs, slots=slots, seed=seed)
+    return {r.rid: list(r.out) for r in done}, eng.last_stats, done
+
+
+def _usable(stats):
+    return stats.num_pages - paged.RESERVED_PAGES
+
+
+def _check_invariants(stats, done, n_req):
+    # every request reaches exactly one terminal status, exactly once
+    assert len(done) == n_req and len(stats.requests) == n_req
+    assert sorted(r.rid for r in done) == sorted(
+        rs.rid for rs in stats.requests)
+    for r in done:
+        assert r.done and r.status in TERMINAL, (r.rid, r.status)
+        assert r.stats.status == r.status
+    # zero leaks + conservation at every post-admission snapshot
+    assert stats.pages_leaked == 0
+    for snap in stats.sched_trace:
+        held = sum(h for _, _, _, h in snap["active"])
+        assert snap["free_pages"] + held == _usable(stats), snap
+    # swap transactions balance and nothing is still held
+    assert stats.swap_out_bytes == (stats.swap_in_bytes
+                                    + stats.swap_dropped_bytes)
+    assert stats.swap_held_end_bytes == 0
+    assert stats.swap_disk_end_bytes == 0
+
+
+def _check_bystanders(out, ref_out, done, ref_done, dirty):
+    ref_status = {r.rid: r.status for r in ref_done}
+    for r in done:
+        if r.rid in dirty:
+            continue
+        assert out[r.rid] == ref_out[r.rid], f"rid {r.rid} diverged"
+        assert r.status == ref_status[r.rid], (r.rid, r.status)
+
+
+# fault-free reference outputs, cached per (scheduler, kv_quant, workload)
+_REFS: dict = {}
+
+
+def _ref(model, params, *, workload, num_pages, scheduler, kv_quant,
+         slots=4):
+    key = (workload, num_pages, scheduler, kv_quant, slots)
+    if key not in _REFS:
+        cfg = _setup("qwen2-1.5b")[0]
+        reqs = (_tight_requests(cfg) if workload == "tight"
+                else _loose_requests(cfg))
+        eng = _mk(model, params, num_pages=num_pages, scheduler=scheduler,
+                  kv_quant=kv_quant)
+        _REFS[key] = _serve(eng, reqs, slots=slots)
+    return _REFS[key]
+
+
+# -- FaultPlan unit tests --------------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("oom")
+    with pytest.raises(ValueError, match="cancel faults must name"):
+        Fault("cancel")
+    with pytest.raises(ValueError, match="count must be"):
+        Fault("latency", count=0)
+    assert Fault("alloc_fail", count=3).remaining == 3
+
+
+def test_fault_plan_fire_reset_and_dirty():
+    plan = FaultPlan([Fault("swap_in_fail", step=5, rid=2, count=2),
+                      Fault("nan_logits", step=0, rid=1)])
+    # not armed before its step; armed from the step onward
+    assert plan.fire("swap_in_fail", 4, 2) is None
+    assert plan.fire("swap_in_fail", 5, 2) is not None
+    # rid pinning: a different rid's event does not match
+    assert plan.fire("swap_in_fail", 9, 0) is None
+    # a rid-less event matches any fault of the kind (wildcard)
+    assert plan.fire("swap_in_fail", 9) is not None
+    # charges exhausted
+    assert plan.fire("swap_in_fail", 9, 2) is None
+    assert plan.fire("nan_logits", 3, 1) is not None
+    assert [f["kind"] for f in plan.injected] == [
+        "swap_in_fail", "swap_in_fail", "nan_logits"]
+    # only DIRTY_KINDS mark rids as legitimately divergent
+    assert plan.dirty_rids() == {1}
+    assert plan.pending == []
+    plan.reset()
+    assert plan.injected == [] and len(plan.pending) == 2
+    assert plan.fire("swap_in_fail", 5, 2) is not None
+
+
+def test_fault_plan_random_deterministic():
+    a = FaultPlan.random(CHAOS_SEED + 11, rids=[0, 1, 2])
+    b = FaultPlan.random(CHAOS_SEED + 11, rids=[0, 1, 2])
+    assert a.faults == b.faults
+    assert 1 <= len(a.faults) <= 4
+    for f in a.faults:
+        assert 0 <= f.step < 24 and 1 <= f.count <= 3
+        if f.rid is not None:
+            assert f.rid in (0, 1, 2)
+
+
+# -- HeartbeatMonitor / straggler math (satellite 1) -----------------------
+
+def test_straggler_threshold():
+    assert straggler_threshold([], 4.0) == 0.0
+    assert straggler_threshold([0.0, -1.0], 4.0) == 0.0  # no positives
+    assert straggler_threshold([1.0, 2.0, 3.0], 2.0) == 4.0  # 2 x median
+    assert straggler_threshold([5.0, 1.0], 3.0) == 15.0  # upper median
+
+
+def test_heartbeat_dead_workers():
+    mon = HeartbeatMonitor(2, deadline_s=10.0, now=100.0)
+    mon.beat(0, step=1, now=100.0)
+    mon.beat(1, step=1, now=104.0)
+    assert mon.dead_workers(now=109.0) == []
+    assert mon.dead_workers(now=111.0) == [0]
+    assert sorted(mon.dead_workers(now=120.0)) == [0, 1]
+    mon.beat(0, step=2, now=120.0)   # resurrection via a fresh beat
+    assert mon.dead_workers(now=125.0) == [1]
+
+
+def test_heartbeat_stragglers():
+    mon = HeartbeatMonitor(3, deadline_s=1e9, straggler_factor=3.0,
+                           now=0.0)
+    # per-worker step_time is the gap between consecutive beats; beats 2+
+    # establish it (the first beat has no predecessor)
+    for t, w in [(1.0, 0), (1.1, 1), (1.2, 2),
+                 (2.0, 0), (2.1, 1), (9.2, 2)]:
+        mon.beat(w, step=int(t), now=t)
+    assert mon.stragglers() == [2]
+    # no positive baseline => nothing is slow
+    assert HeartbeatMonitor(2, now=0.0).stragglers() == []
+
+
+# -- flagship fuzz: random schedules x schedulers x KV dtypes --------------
+
+@pytest.mark.parametrize("scheduler,kv_quant", [
+    ("preempt", None), ("preempt", "q8_0"), ("reserve", None)])
+def test_chaos_fuzz(scheduler, kv_quant):
+    cfg, params, model = _setup("qwen2-1.5b")
+    reqs = _tight_requests(cfg)
+    num_pages = 12 if scheduler == "preempt" else 40
+    ref_out, _, ref_done = _ref(model, params, workload="tight",
+                                num_pages=num_pages, scheduler=scheduler,
+                                kv_quant=kv_quant)
+    for i in range(3):
+        seed = CHAOS_SEED * 1000 + i
+        plan = FaultPlan.random(seed, rids=[d["rid"] for d in reqs])
+        eng = _mk(model, params, num_pages=num_pages, scheduler=scheduler,
+                  kv_quant=kv_quant, faults=plan)
+        out, stats, done = _serve(eng, reqs)   # must never raise
+        _check_invariants(stats, done, len(reqs))
+        _check_bystanders(out, ref_out, done, ref_done,
+                          plan.dirty_rids())
+        assert stats.faults_injected == len(stats.fault_log)
+        _record(f"fuzz[{scheduler},{kv_quant},seed={seed}]", stats, plan)
+
+
+def test_chaos_replay_identical():
+    """The same engine + plan replays bit-identically across serve calls
+    (the plan resets at the top of each serve)."""
+    cfg, params, model = _setup("qwen2-1.5b")
+    reqs = _tight_requests(cfg)
+    plan = FaultPlan.random(CHAOS_SEED * 1000, rids=[0, 1, 2, 3, 4, 5])
+    eng = _mk(model, params, num_pages=12, faults=plan)
+    out1, st1, _ = _serve(eng, reqs)
+    log1 = list(st1.fault_log)
+    out2, st2, _ = _serve(eng, reqs)
+    assert out1 == out2
+    assert log1 == st2.fault_log
+    _record("replay", st2, plan)
+
+
+# -- quarantine: NaN logits + corrupted pages ------------------------------
+
+def test_nan_logits_quarantines_one_lane():
+    cfg, params, model = _setup("qwen2-1.5b")
+    reqs = _loose_requests(cfg)
+    ref_out, _, ref_done = _ref(model, params, workload="loose",
+                                num_pages=24, scheduler="preempt",
+                                kv_quant=None)
+    plan = FaultPlan([Fault("nan_logits", step=2, rid=1)])
+    eng = _mk(model, params, num_pages=24, faults=plan)
+    out, stats, done = _serve(eng, reqs)
+    _check_invariants(stats, done, len(reqs))
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[1].status == "failed"
+    assert stats.nan_quarantines == 1
+    _check_bystanders(out, ref_out, done, ref_done, {1})
+    _record("nan_logits", stats, plan)
+
+
+@pytest.mark.parametrize("kv_quant", [None, "q8_0"])
+def test_corrupt_page_quarantined_and_scrubbed(kv_quant):
+    """A poisoned KV page turns the victim's logits non-finite; the
+    detector retires only that lane and the freed pages are scrubbed, so
+    recycled pages cannot re-poison bystanders."""
+    cfg, params, model = _setup("qwen2-1.5b")
+    reqs = _loose_requests(cfg)
+    ref_out, _, ref_done = _ref(model, params, workload="loose",
+                                num_pages=24, scheduler="preempt",
+                                kv_quant=kv_quant)
+    plan = FaultPlan([Fault("corrupt_page", step=2, rid=0)])
+    eng = _mk(model, params, num_pages=24, kv_quant=kv_quant, faults=plan)
+    out, stats, done = _serve(eng, reqs)
+    _check_invariants(stats, done, len(reqs))
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].status == "failed"
+    assert stats.pages_corrupted == 1 and stats.nan_quarantines == 1
+    _check_bystanders(out, ref_out, done, ref_done, {0})
+    _record(f"corrupt_page[{kv_quant}]", stats, plan)
+
+
+# -- lifecycle: deadline, cancel, shedding ---------------------------------
+
+def test_deadline_times_out():
+    cfg, params, model = _setup("qwen2-1.5b")
+    reqs = _loose_requests(cfg)
+    ref_out, _, ref_done = _ref(model, params, workload="loose",
+                                num_pages=24, scheduler="preempt",
+                                kv_quant=None)
+    eng = _mk(model, params, num_pages=24)
+    out, stats, done = _serve(eng, reqs, deadlines={2: 0.0})
+    _check_invariants(stats, done, len(reqs))
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[2].status == "timeout" and by_rid[2].out == []
+    _check_bystanders(out, ref_out, done, ref_done, {2})
+    assert stats.status_counts == {"ok": 3, "timeout": 1}
+    _record("deadline", stats)
+
+
+def test_cancel_before_serve():
+    cfg, params, model = _setup("qwen2-1.5b")
+    reqs = _loose_requests(cfg)
+    ref_out, _, ref_done = _ref(model, params, workload="loose",
+                                num_pages=24, scheduler="preempt",
+                                kv_quant=None)
+    eng = _mk(model, params, num_pages=24)
+    eng.cancel(3)
+    out, stats, done = _serve(eng, reqs)
+    _check_invariants(stats, done, len(reqs))
+    assert {r.rid: r.status for r in done}[3] == "cancelled"
+    _check_bystanders(out, ref_out, done, ref_done, {3})
+    # the consumed cancel must not leak into the next serve call
+    out2, st2, done2 = _serve(eng, reqs)
+    assert all(r.status == "ok" for r in done2) and out2 == ref_out
+    _record("cancel_before_serve", stats)
+
+
+def test_load_shedding():
+    cfg, params, model = _setup("qwen2-1.5b")
+    reqs = _loose_requests(cfg, n=4)
+    eng = _mk(model, params, num_pages=24, max_queue=2)
+    out, stats, done = _serve(eng, reqs)
+    _check_invariants(stats, done, len(reqs))
+    # earlier arrivals win the queue slots; the rest shed before admission
+    assert [r.status for r in sorted(done, key=lambda r: r.rid)] == [
+        "ok", "ok", "shed", "shed"]
+    assert all(out[r.rid] == [] for r in done if r.status == "shed")
+    _record("shed_max_queue", stats)
+
+
+def test_load_shedding_per_class():
+    cfg, params, model = _setup("qwen2-1.5b")
+    reqs = _loose_requests(cfg, n=4)   # priorities alternate 0,1,0,1
+    eng = _mk(model, params, num_pages=24, class_queues={0: 1, 1: 2})
+    out, stats, done = _serve(eng, reqs)
+    _check_invariants(stats, done, len(reqs))
+    st = {r.rid: r.status for r in done}
+    assert st == {0: "ok", 1: "ok", 2: "shed", 3: "ok"}
+    assert stats.class_stats[0]["statuses"] == {"ok": 1, "shed": 1}
+    _record("shed_per_class", stats)
+
+
+# -- swap-path degradation (preempt scheduler) -----------------------------
+
+def test_swap_out_failure_falls_back_to_restart():
+    cfg, params, model = _setup("qwen2-1.5b")
+    reqs = _tight_requests(cfg)
+    ref_out, _, ref_done = _ref(model, params, workload="tight",
+                                num_pages=12, scheduler="preempt",
+                                kv_quant=None)
+    plan = FaultPlan([Fault("swap_out_fail", step=0, count=2)])
+    eng = _mk(model, params, num_pages=12, faults=plan)
+    out, stats, done = _serve(eng, reqs)
+    _check_invariants(stats, done, len(reqs))
+    assert stats.swap_failures == 2 and stats.swap_restarts >= 2
+    # evict-to-restart replays the deterministic chunked prefill: no
+    # fault here may change any output bit
+    _check_bystanders(out, ref_out, done, ref_done, set())
+    _record("swap_out_fail", stats, plan)
+
+
+@pytest.mark.parametrize("charges,expect_restart", [(1, False), (50, True)])
+def test_swap_in_retry_then_restart(charges, expect_restart):
+    cfg, params, model = _setup("qwen2-1.5b")
+    reqs = _tight_requests(cfg)
+    ref_out, _, ref_done = _ref(model, params, workload="tight",
+                                num_pages=12, scheduler="preempt",
+                                kv_quant=None)
+    plan = FaultPlan([Fault("swap_in_fail", step=0, count=charges)])
+    eng = _mk(model, params, num_pages=12, faults=plan)
+    out, stats, done = _serve(eng, reqs)
+    _check_invariants(stats, done, len(reqs))
+    assert stats.swap_retries >= 1
+    if expect_restart:
+        # retries exhaust, host copies drop, prefill restarts take over
+        assert stats.swap_restarts >= 1
+        assert stats.swap_dropped_bytes > 0
+    else:
+        assert stats.swap_dropped_bytes == 0
+    _check_bystanders(out, ref_out, done, ref_done, set())
+    _record(f"swap_in_fail[{charges}]", stats, plan)
+
+
+def test_alloc_stall_recovers_bitwise():
+    cfg, params, model = _setup("qwen2-1.5b")
+    reqs = _tight_requests(cfg)
+    ref_out, _, ref_done = _ref(model, params, workload="tight",
+                                num_pages=12, scheduler="preempt",
+                                kv_quant=None)
+    plan = FaultPlan([Fault("alloc_fail", step=2, count=2)])
+    eng = _mk(model, params, num_pages=12, faults=plan)
+    out, stats, done = _serve(eng, reqs)
+    _check_invariants(stats, done, len(reqs))
+    assert stats.alloc_stalls == 2
+    _check_bystanders(out, ref_out, done, ref_done, set())
+    _record("alloc_stall", stats, plan)
+
+
+def test_cancel_while_swapped_frees_host_rows():
+    """Satellite 3: a request cancelled while swapped out frees its host
+    rows, is never re-admitted, and swap holdings drain to zero.  Phase
+    one (fault-free dry run) reads the scheduler trace to find an
+    iteration where a victim sits swapped in the queue; phase two aims a
+    cancel fault at exactly that window."""
+    cfg, params, model = _setup("qwen2-1.5b")
+    reqs = _tight_requests(cfg)
+    _, dry_stats, _ = _ref(model, params, workload="tight",
+                           num_pages=12, scheduler="preempt",
+                           kv_quant=None)
+    hit = next(((i, snap["swapped"][0])
+                for i, snap in enumerate(dry_stats.sched_trace)
+                if snap["swapped"]), None)
+    assert hit is not None, "workload must produce a swapped-out victim"
+    it, victim = hit
+    # snapshots are post-admission: at iteration it+1 the cancel sweep
+    # runs before admission, so the victim is still parked in the queue
+    plan = FaultPlan([Fault("cancel", step=it + 1, rid=victim)])
+    eng = _mk(model, params, num_pages=12, faults=plan)
+    out, stats, done = _serve(eng, reqs)
+    _check_invariants(stats, done, len(reqs))
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[victim].status == "cancelled"
+    assert stats.swap_dropped_bytes > 0       # host rows were freed
+    assert stats.swap_held_end_bytes == 0     # ... and fully drained
+    for snap in stats.sched_trace[it + 1:]:   # never re-admitted
+        assert victim not in [rid for _, _, rid, _ in snap["active"]]
+        assert victim not in snap["swapped"]
+    _record("cancel_while_swapped", stats, plan)
+
+
+def test_swap_spill_to_disk_bitwise(tmp_path):
+    """Satellite 2: past ``swap_budget_bytes`` the preempt scheduler
+    spills page rows to ``swap_dir`` files instead of forcing
+    evict-to-restart; swap-in from disk is bitwise lossless (bf16/int8
+    included) and spill files are deleted once consumed."""
+    cfg, params, model = _setup("qwen2-1.5b")
+    reqs = _tight_requests(cfg)
+    ref_out, _, ref_done = _ref(model, params, workload="tight",
+                                num_pages=12, scheduler="preempt",
+                                kv_quant=None)
+    eng = _mk(model, params, num_pages=12, swap_budget_bytes=0,
+              swap_dir=str(tmp_path))
+    out, stats, done = _serve(eng, reqs)
+    _check_invariants(stats, done, len(reqs))
+    assert stats.swap_spills > 0 and stats.swap_disk_bytes > 0
+    assert stats.swap_disk_end_bytes == 0
+    assert list(tmp_path.iterdir()) == []     # spill files cleaned up
+    _check_bystanders(out, ref_out, done, ref_done, set())
+    _record("swap_spill", stats, extra={
+        "spills": stats.swap_spills, "disk_bytes": stats.swap_disk_bytes})
+
+
+def test_watchdog_counts_injected_slow_step():
+    """A latency spike far above the median step time lands in
+    ``slow_steps`` via the HeartbeatMonitor straggler math (eager decode
+    steps on the reduced config run ~0.1-0.4 s, so the spike must
+    dominate them)."""
+    cfg, params, model = _setup("qwen2-1.5b")
+    # enough decode steps for the watchdog's min-sample baseline before
+    # the spike lands
+    reqs = _loose_requests(cfg, max_new=12)
+    plan = FaultPlan([Fault("latency", step=6, count=1, value=3.0)])
+    eng = _mk(model, params, num_pages=24, faults=plan,
+              watchdog_factor=2.0)
+    out, stats, done = _serve(eng, reqs)
+    _check_invariants(stats, done, len(reqs))
+    assert stats.faults_injected == 1
+    assert stats.slow_steps >= 1
+    assert all(r.status == "ok" for r in done)
+    _record("watchdog", stats, plan)

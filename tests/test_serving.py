@@ -405,8 +405,10 @@ def test_per_request_sampling_stream_is_batch_independent():
 
 def test_capped_page_pool_defers_admission():
     """A pool too small for full concurrency serialises admissions (worst
-    case reserved up front) instead of exhausting mid-serve; a request that
-    can never fit raises up front."""
+    case reserved up front) instead of exhausting mid-serve; a request
+    that can never fit retires with status="failed" instead of taking
+    down the serve call (the request-lifecycle contract — serve never
+    raises mid-batch for a per-request condition)."""
     from repro.serving import Request
     cfg = CONFIGS["qwen2-1.5b"].reduced()
     params = init_params(cfg, seed=0, dtype=jnp.float32)
@@ -421,9 +423,13 @@ def test_capped_page_pool_defers_admission():
     assert done == {r.rid: r.out for r in eng.serve_sequential(mk())}
     assert stats.pages_leaked == 0
     assert stats.max_concurrency == 1  # reservations force serialisation
-    with pytest.raises(ValueError, match="pages"):
-        eng.num_pages = 4  # 2 data pages < one request's worst case
-        eng.serve([Request(rid=0, prompt=[5, 6, 7], max_new=40)], slots=1)
+    eng.num_pages = 4  # 2 data pages < one request's worst case
+    doomed, ok = (Request(rid=0, prompt=[5, 6, 7], max_new=40),
+                  Request(rid=1, prompt=[5, 6, 7], max_new=4))
+    out = eng.serve([doomed, ok], slots=1)
+    assert doomed.status == "failed" and doomed.out == []
+    assert ok.status == "ok" and len(ok.out) == 4  # batch survives
+    assert sorted(r.rid for r in out) == [0, 1]
     eng.num_pages = 10
 
 
@@ -502,20 +508,22 @@ def test_page_pool_exhaustion_is_atomic():
 
 
 def test_engine_admission_exhaustion_no_partial_state():
-    """Filling the page pool must fail cleanly at admission: an infeasible
-    request raises before any page is allocated or block table touched,
-    and the same engine then serves a feasible workload with zero leaked
-    pages.  Feasible-but-concurrent requests never exhaust the pool —
-    admission defers on the worst-case reservation instead."""
+    """Filling the page pool must fail cleanly at admission: an
+    infeasible request retires with status="failed" before any page is
+    allocated or block table touched, and the same engine then serves a
+    feasible workload with zero leaked pages.  Feasible-but-concurrent
+    requests never exhaust the pool — admission defers on the worst-case
+    reservation instead."""
     from repro.serving import Request
     cfg, params, model = _setup("qwen2-1.5b")
     eng = Engine(model, params, max_len=48, jit=False,
                  sampler=SamplerConfig(greedy=True), page_size=8,
                  num_pages=6, prefill_chunk=6)   # 4 data pages
     # worst case for this request: pages_for(4 + 40 clamped to 48) = 6 > 4
-    with pytest.raises(ValueError, match="pages"):
-        eng.serve([Request(rid=0, prompt=[5, 6, 7, 8], max_new=44)],
-                  slots=1)
+    doomed = Request(rid=0, prompt=[5, 6, 7, 8], max_new=44)
+    eng.serve([doomed], slots=1)
+    assert doomed.status == "failed" and doomed.out == []
+    assert eng.last_stats.pages_leaked == 0
     # the failed admission left nothing behind: the very same engine
     # serves a feasible workload, matches the sequential baseline and
     # returns every page
