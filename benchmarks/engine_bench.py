@@ -16,7 +16,16 @@ model:
   * **kv-quant** — the paged cache with q8_0-quantized pools
     (``Engine(kv_quant="q8_0")``): int8 values + per-row f32 scales read
     in place by the fused q8 kernels — the B/livetok and kvB/tok columns
-    should drop to ~0.27x the f32 paged mode's, and
+    should drop to ~0.27x the f32 paged mode's,
+  * **kv-q4** / **kv-dq** — the sub-byte tiers: ``kv_quant="q4_0"``
+    packs two int4 codes per byte (pool bytes gated at <= 0.16x f32) and
+    ``kv_quant="dq"`` applies the dynamic per-layer bitwidth policy
+    (sensitive layers stay q8_0; gated at <= 0.35x f32).  The kv-dq
+    engine also runs ``quant_probe=True`` and emits the sampled
+    quantized-vs-f32 logit gap as ``engine/*/dq/*`` rows — on this
+    bench's random-init weights the per-lane relative gap runs far
+    above what trained weights show (tests pin ~1e-2 there), so read
+    the logitgap row comparatively, not as an accuracy claim, and
   * **oversub** — the paged cache under ``scheduler="preempt"`` with the
     pool deliberately undersized (one request's worst case + one page
     per extra slot) and two priority classes: the engine must finish
@@ -149,6 +158,10 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
             "paged-gather": Engine(model, p, kernel="gather", **paged_kw),
             "kv-quant": Engine(model, p, kernel="fused", kv_quant="q8_0",
                                **paged_kw),
+            "kv-q4": Engine(model, p, kernel="fused", kv_quant="q4_0",
+                            **paged_kw),
+            "kv-dq": Engine(model, p, kernel="fused", kv_quant="dq",
+                            quant_probe=True, **paged_kw),
             "oversub": oversub,
         }
         if chaos is not None:
@@ -203,6 +216,21 @@ def run(requests: int = 8, slots: int = 4, jit: bool = True,
                              blt, f"{blt:.0f}B/livetok"))
                 rows.append((f"engine/{pol}/{mode}/kvtraffic",
                              kvt, f"{kvt:.0f}B/dectok"))
+            if mode in ("kv-q4", "kv-dq"):
+                # pool-byte ratio vs the f32 paged mode — the number
+                # gate() bounds (q4_0 <= 0.16x, dq <= 0.35x)
+                ratio = st.page_bytes / max(results["paged"].page_bytes, 1)
+                rows.append((f"engine/{pol}/dq/{mode}-pagebytes",
+                             float(st.page_bytes), f"{ratio:.3f}x-f32"))
+            if mode == "kv-dq":
+                # sampled quantized-vs-f32 logit gap from the shadow
+                # cache probe (Engine(quant_probe=True))
+                rows.append((f"engine/{pol}/dq/logitgap",
+                             st.quant_logit_gap_max * 1e6,
+                             f"{st.quant_logit_gap_max:.2e}relmax"))
+                rows.append((f"engine/{pol}/dq/probesteps",
+                             float(st.quant_probe_steps),
+                             f"{st.quant_probe_steps}steps"))
             if mode == "oversub":
                 rows.append((f"engine/{pol}/{mode}/queue",
                              queue_ms * 1e3, f"{queue_ms:.1f}ms"))
@@ -301,6 +329,23 @@ def gate(results: dict, requests: int = 8) -> list[str]:
                 f"{kvq.kv_bytes_per_decoded_token:.0f} KV-B/token, above "
                 f"0.30x the f32 paged mode's "
                 f"{pg.kv_bytes_per_decoded_token:.0f}")
+        # sub-byte tiers: nibble-packed q4_0 pools must land at or below
+        # 0.16x the f32 pools, and the dynamic-bitwidth dq policy (which
+        # keeps the sensitive layers at q8_0) at or below 0.35x
+        kv4 = res["kv-q4"]
+        if kv4.page_bytes > 0.16 * pg.page_bytes:
+            failures.append(
+                f"{pol}: q4_0 page holds {kv4.page_bytes} B, above 0.16x "
+                f"the f32 page's {pg.page_bytes} B")
+        kvd = res["kv-dq"]
+        if kvd.page_bytes > 0.35 * pg.page_bytes:
+            failures.append(
+                f"{pol}: dq page holds {kvd.page_bytes} B, above 0.35x "
+                f"the f32 page's {pg.page_bytes} B")
+        if kvd.quant_probe_steps == 0:
+            failures.append(
+                f"{pol}: kv-dq ran with quant_probe=True but recorded no "
+                f"probe steps — the error-budget telemetry is dead")
         # oversubscribed preempt scheduler: every request must complete
         # despite the pool holding a fraction of the steady-state demand,
         # swap accounting must balance, and queue-time stats must be
@@ -410,7 +455,9 @@ def main():
     ap.add_argument("--gate", action="store_true",
                     help="exit 3 if continuous < sequential throughput, "
                          "paged > dense bytes/live-token, fused < gather "
-                         "decode, or q8_0 kvB/tok > 0.30x the f32 pools "
+                         "decode, q8_0 kvB/tok > 0.30x the f32 pools, or "
+                         "the packed pools miss their byte budgets "
+                         "(q4_0 > 0.16x, dq > 0.35x f32 page bytes) "
                          "(CI soft gate)")
     args = ap.parse_args()
     results: dict = {}
@@ -430,8 +477,8 @@ def main():
             # other non-zero exit (crash, import error) stays hard-red
             raise SystemExit(3)
         print("perf gate OK: continuous >= sequential, paged <= dense "
-              "bytes/live-token, fused >= gather decode, q8_0 <= 0.30x "
-              "f32 pool bytes")
+              "bytes/live-token, fused >= gather decode, q8_0 <= 0.30x, "
+              "q4_0 <= 0.16x, dq <= 0.35x f32 pool bytes")
 
 
 if __name__ == "__main__":

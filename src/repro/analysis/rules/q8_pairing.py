@@ -1,16 +1,23 @@
 """q8-leaf-pairing: every ``*_qs`` int8 leaf needs a matching ``*_d``.
 
-The q8_0 cache layout stores values as int8 pools plus per-row f32 scale
-pools; readers (fused kernels, ``gather_pages_q8``, swap) address the
-pair by naming convention — ``k_qs``/``k_d``, ``c_kv_qs``/``c_kv_d``.  A
-spec or init dict that ships a ``*_qs`` leaf without its ``*_d`` sibling
-(or with inconsistent shapes/dtypes) dequantizes garbage at read time
-without any shape error, because the pools are independent dict leaves.
+Every quantized cache layout — q8_0, nibble-packed q4_0, and the mixed
+per-layer "dq" layouts — stores values as int8 pools plus per-row f32
+scale pools; readers (fused kernels, ``gather_pages_quant``, swap)
+address the pair by naming convention — ``k_qs``/``k_d``,
+``c_kv_qs``/``c_kv_d``.  A spec or init dict that ships a ``*_qs`` leaf
+without its ``*_d`` sibling (or with inconsistent shapes/dtypes)
+dequantizes garbage at read time without any shape error, because the
+pools are independent dict leaves.  The pairing contract is bitwidth-
+agnostic: q4_0 packs two codes per int8 byte (the trailing axis halves)
+but keeps one f32 scale per row, so the scale shape is still the value
+shape minus the trailing (block) axis.
 
 Checked on every dict literal that contains a ``*_qs`` key: the ``*_d``
 sibling must exist, the scale shape must equal the value shape minus the
-trailing (block) axis, the value dtype must be int8 and the scale dtype
-float32.
+trailing axis, the value dtype must be int8 and the scale dtype float32.
+Symmetrically, a ``*_d`` leaf in such a dict with no ``*_qs`` mate is an
+orphan scale — it silently shadows (or survives the removal of) a value
+pool, so it is flagged too.
 """
 
 from __future__ import annotations
@@ -59,8 +66,9 @@ def _leaf_dtype(value: ast.expr) -> str | None:
 
 class Q8LeafPairingRule(Rule):
     name = "q8-leaf-pairing"
-    description = ("every *_qs int8 cache leaf must have a *_d f32 scale "
-                   "leaf with the value shape minus the block axis")
+    description = ("every *_qs int8 cache leaf (q8_0 or nibble-packed "
+                   "q4_0) must pair with a *_d f32 scale leaf with the "
+                   "value shape minus the block axis, and vice versa")
 
     def check_module(self, mod: SourceModule):
         for node in ast.walk(mod.tree):
@@ -77,6 +85,17 @@ class Q8LeafPairingRule(Rule):
             if base is not None:
                 leaves[base] = value
                 keynodes[base] = key
+        # orphan scales: only meaningful in dicts that quantize at all —
+        # a plain "*_d" key elsewhere (deltas, durations) is fine
+        if any(b.endswith("_qs") for b in leaves):
+            for base in leaves:
+                if (base.endswith("_d")
+                        and f"{base[:-len('_d')]}_qs" not in leaves):
+                    yield mod.finding(
+                        self.name, keynodes[base],
+                        f"scale leaf `{base}` has no matching "
+                        f"`{base[:-len('_d')]}_qs` value leaf in this "
+                        f"cache dict (orphan scale)")
         for base, value in leaves.items():
             if not base.endswith("_qs"):
                 continue

@@ -13,22 +13,42 @@ bandwidth scales with *live* pages, not ``slots x max_len``.
 
 Two kernel scaffolds — GQA (:func:`_attn_core`) and absorbed MLA
 (:func:`_mla_core`) — are each parameterized over a K/V *tile loader*
-(plain f32 pages vs int8+per-row-scale pages dequantised on the VPU), so
-one score/mask/online-softmax body serves four public entry points:
+(plain f32 pages, or int8+per-row-scale pages dequantised on the VPU:
+q8_0, or nibble-packed q4_0 unpacked with arithmetic shifts), so one
+score/mask/online-softmax body serves all the public decode entries:
 
   * :func:`paged_attn_decode` — GQA/MHA over K/V/pos pools, full horizon or
     sliding window (``window > 0``); the validity mask comes from the
     page's ``pos`` entries, so ring wraparound needs no special casing.
-  * :func:`paged_attn_decode_q8` — the same attention over q8_0 K/V pools
-    (int8 values + one f32 scale per (token, head) row, block =
-    ``head_dim``), the fast path behind ``Engine(kv_quant="q8_0")``:
-    pages stream in packed and dequantisation happens inside the
-    online-softmax loop, cutting decode page traffic ~4x vs f32 pools.
+  * :func:`paged_attn_decode_quant` — the same attention over quantized
+    K/V pools (int8 values + one f32 scale per (token, head) row, block =
+    ``head_dim``; q4_0 packs two int4 values per byte), the fast path
+    behind ``Engine(kv_quant=...)``: pages stream in packed and
+    dequantisation happens inside the online-softmax loop, cutting decode
+    page traffic ~4x (q8_0) / ~7x (q4_0) vs f32 pools.
+    :func:`paged_attn_decode_q8` is the mode-pinned q8_0 alias.
   * :func:`paged_mla_decode` — absorbed MLA over latent/rope pools; scores
     and the output both live in latent space (the ``kv_b`` projection is
     folded in by the caller), validity is positional (``idx <= pos``).
-  * :func:`paged_mla_decode_q8` — absorbed MLA over q8_0 latent/rope pools
-    (one scale per (token,) row, block = the latent/rope width).
+  * :func:`paged_mla_decode_quant` — absorbed MLA over quantized
+    latent/rope pools (one scale per (token,) row, block = the
+    latent/rope width); the latent and rope leaves may carry *different*
+    modes (the "dq" per-layer policy keeps MLA latents q8_0 while rope
+    keys drop to q4_0).  :func:`paged_mla_decode_q8` pins both to q8_0.
+
+The same scaffolds extend to *chunked prefill*:
+:func:`paged_attn_prefill_quant` / :func:`paged_mla_prefill_quant` attend
+a whole (B, C)-token chunk against the quantized pools **after** the
+chunk's rows were quantized once and scattered into their pages
+(write-then-attend).  The grid is the same ``(slot, logical_page)``; each
+step scores all C chunk queries against one page tile, with a per-row
+``(C, P)`` validity mask (written ∧ causal ∧ ``logical_idx <= qpos`` —
+the logical-index term keeps stale rows beyond a lane's frontier out even
+when their stored positions look plausible).  This closes the last dense
+dequant: packed pages stay packed end to end, and because the page
+enumeration order is independent of the chunk split, serve output is
+bitwise identical across ``--prefill-chunk`` values for quantized
+full-table layers (ring layers keep the gather path).
 
 ``active_pages`` bounds the page loop: the serving engine knows the
 largest live horizon across its lanes each iteration and passes a bucketed
@@ -129,15 +149,18 @@ def _finish(o_ref, acc_ref, l_ref, nj: int):
 
 
 def _online_update(s, valid, v_tile, m_ref, l_ref, acc_ref):
-    """One page tile of the running softmax.  s: (H, P) f32 masked scores
-    (NEG_INF where invalid); valid: (P,) bool; v_tile(p) -> (H, Dv) given
-    the probability tile."""
+    """One page tile of the running softmax.  s: (rows, P) f32 masked
+    scores (NEG_INF where invalid); valid: (P,) bool shared by every row,
+    or (rows, P) per-row (the chunked-prefill kernels, where each query
+    row sits at its own position); v_tile(p) -> (rows, Dv) given the
+    probability tile."""
     m_prev = m_ref[:, 0:1]
     l_prev = l_ref[:, 0:1]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
     # NEG_INF is a finite sentinel: exp(s - m_new) is 1, not 0, for fully
     # masked tiles — mask the probabilities explicitly instead
-    p = jnp.where(valid[None, :], jnp.exp(s - m_new), 0.0)
+    mask = valid if valid.ndim == s.ndim else valid[None, :]
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = jnp.broadcast_to(l_prev * corr + p.sum(1, keepdims=True),
                                   l_ref.shape)
@@ -188,20 +211,34 @@ def paged_attn_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         scale=(q.shape[-1] ** -0.5 if scale is None else scale),
         nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
         interpret=(_interpret_default() if interpret is None else interpret),
-        quant=False, mesh=mesh)
+        quant=None, mesh=mesh)
 
 
-def _gathered_kv(kv: tuple, btj: jax.Array, quant: bool):
+def _dequant(qs: jax.Array, d: jax.Array, mode: str) -> jax.Array:
+    """Dequantize one tile/leaf: int8 values x per-row f32 scale.
+
+    ``mode="q4_0"`` first unpacks two int4 nibbles per byte
+    (:func:`unpack_q4_rows`) — the trailing axis doubles.  This is the
+    in-kernel tile loader *and* the bounded-gather dequant, so the two
+    impls see bit-identical f32 values.
+    """
+    if mode == "q4_0":
+        qs = unpack_q4_rows(qs)
+    return qs.astype(jnp.float32) * d.astype(jnp.float32)[..., None]
+
+
+def _gathered_kv(kv: tuple, btj: jax.Array, quant):
     """Bounded gather of the K/V leaves through ``btj`` logical pages —
     f32, dequantised in the gathered (page-bounded) layout when ``quant``
-    so only the live pages are ever expanded."""
+    so only the live pages are ever expanded.  ``quant`` is ``None``
+    (f32 leaves), a mode string shared by both leaves, or a per-leaf
+    ``(mode_a, mode_b)`` pair (MLA latent/rope under the "dq" policy)."""
     if quant:
-        kq, kd, vq, vd = kv
-        k = kq[btj].astype(jnp.float32) * kd[btj].astype(jnp.float32)[..., None]
-        v = vq[btj].astype(jnp.float32) * vd[btj].astype(jnp.float32)[..., None]
-    else:
-        k, v = (x[btj].astype(jnp.float32) for x in kv)
-    return k, v
+        ma, mb = (quant, quant) if isinstance(quant, str) else quant
+        aq, ad, bq, bd = kv
+        return (_dequant(aq[btj], ad[btj], ma),
+                _dequant(bq[btj], bd[btj], mb))
+    return tuple(x[btj].astype(jnp.float32) for x in kv)
 
 
 def _xla_attn(q, ks, vs, ps, pos, *, window, softcap, scale):
@@ -229,12 +266,15 @@ def _xla_attn(q, ks, vs, ps, pos, *, window, softcap, scale):
                                    "impl", "interpret", "quant", "mesh"))
 def _attn_core(q, kv, pos_pool, block_table, pos, lane_pages, *,
                window: int, softcap: float, scale: float, nj: int,
-               impl: str, interpret: bool, quant: bool,
+               impl: str, interpret: bool, quant: str | None,
                mesh=None) -> jax.Array:
     """Shared GQA flash-decode scaffold.  ``kv`` is ``(k_pool, v_pool)``
-    (``quant=False``) or ``(k_qs, k_d, v_qs, v_d)`` (``quant=True``); the
+    (``quant=None``) or ``(k_qs, k_d, v_qs, v_d)`` with ``quant`` naming
+    the storage mode ("q8_0" | "q4_0" — q4 leaves are nibble-packed, so
+    their trailing axis is half the head dim); the
     score/mask/online-softmax body is identical — only the page tile
-    loader changes (f32 load vs int8 * per-row scale on the VPU).
+    loader changes (f32 load vs int8 * per-row scale on the VPU, with an
+    arithmetic-shift nibble unpack first for q4_0).
 
     ``lane_pages`` (B,) int32 in ``[1, nj]`` further bounds each lane:
     index maps clamp the page lookup to ``min(j, lane_pages[i] - 1)`` so
@@ -250,6 +290,8 @@ def _attn_core(q, kv, pos_pool, block_table, pos, lane_pages, *,
     b, h, d = q.shape
     tp, hkv = kv[0].shape[1], kv[0].shape[2]
     dv = (kv[2] if quant else kv[1]).shape[-1]
+    if quant == "q4_0":
+        dv *= 2                     # packed leaf: two values per byte
     if impl == "xla":
         btj = block_table[:, :nj]
         ks, vs = _gathered_kv(kv, btj, quant)
@@ -272,6 +314,8 @@ def _attn_core(q, kv, pos_pool, block_table, pos, lane_pages, *,
         b, h, d = q.shape
         tp, hkv = kv_ops[0].shape[1], kv_ops[0].shape[2]
         dv = (kv_ops[2] if quant else kv_ops[1]).shape[-1]
+        if quant == "q4_0":
+            dv *= 2
         rep = h // hkv
 
         def kernel(bt_ref, pos_ref, lp_ref, q_ref, *refs):
@@ -280,10 +324,10 @@ def _attn_core(q, kv, pos_pool, block_table, pos, lane_pages, *,
             _init_accumulators(m_ref, l_ref, acc_ref)
             if quant:
                 kq_ref, kd_ref, vq_ref, vd_ref = kv_refs
-                kt = kq_ref[0].astype(jnp.float32) * kd_ref[0][..., None]
+                kt = _dequant(kq_ref[0], kd_ref[0], quant)
 
                 def v_pages():
-                    return vq_ref[0].astype(jnp.float32) * vd_ref[0][..., None]
+                    return _dequant(vq_ref[0], vd_ref[0], quant)
             else:
                 k_ref, v_ref = kv_refs
                 kt = k_ref[0].astype(jnp.float32)            # (P, Hkv, D)
@@ -324,10 +368,12 @@ def _attn_core(q, kv, pos_pool, block_table, pos, lane_pages, *,
         page4 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0, 0, 0)  # noqa: E731,E501
         page3 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0, 0)     # noqa: E731,E501
         if quant:
+            # spec shapes follow the *stored* leaves (packed trailing
+            # axis for q4_0) — the kernel unpacks after the DMA
             kv_specs = [
-                pl.BlockSpec((1, tp, hkv, d), page4),
+                pl.BlockSpec((1, tp, hkv, kv_ops[0].shape[-1]), page4),
                 pl.BlockSpec((1, tp, hkv), page3),
-                pl.BlockSpec((1, tp, hkv, dv), page4),
+                pl.BlockSpec((1, tp, hkv, kv_ops[2].shape[-1]), page4),
                 pl.BlockSpec((1, tp, hkv), page3),
             ]
         else:
@@ -416,7 +462,40 @@ def paged_mla_decode(q_eff: jax.Array, q_rope: jax.Array,
         scale=scale,
         nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
         interpret=(_interpret_default() if interpret is None else interpret),
-        quant=False, mesh=mesh)
+        quant=None, mesh=mesh)
+
+
+def paged_mla_decode_quant(q_eff: jax.Array, q_rope: jax.Array,
+                           ckv_qs: jax.Array, ckv_d: jax.Array,
+                           kr_qs: jax.Array, kr_d: jax.Array,
+                           block_table: jax.Array, pos: jax.Array, *,
+                           scale: float,
+                           latent_mode: str = "q8_0",
+                           rope_mode: str = "q8_0",
+                           active_pages: int | None = None,
+                           lane_pages: jax.Array | None = None,
+                           impl: str | None = None,
+                           interpret: bool | None = None,
+                           mesh=None) -> jax.Array:
+    """:func:`paged_mla_decode` over quantized latent/rope pools.
+
+    ``ckv_qs``/``kr_qs``: int8 value pools (num_pages, P, R[dr] — halved
+    when that leaf is q4_0, two nibbles per byte); ``ckv_d``/``kr_d``:
+    per-(page, token) f32 scales (num_pages, P) — block = the latent/rope
+    width.  ``latent_mode``/``rope_mode`` may differ: the "dq" per-layer
+    policy keeps MLA latents (the dominant error path measured in the
+    PR 5 budgets) at q8_0 while rope keys drop to q4_0.  Dequantisation
+    happens inside the online-softmax loop; numerically exact w.r.t.
+    attending the dequantised pools.
+    """
+    return _mla_core(
+        q_eff, q_rope, (ckv_qs, ckv_d, kr_qs, kr_d), block_table, pos,
+        _lane_bound(lane_pages, q_eff.shape[0],
+                    _n_active(block_table, active_pages)),
+        scale=scale, nj=_n_active(block_table, active_pages),
+        impl=_resolve_impl(impl),
+        interpret=(_interpret_default() if interpret is None else interpret),
+        quant=(latent_mode, rope_mode), mesh=mesh)
 
 
 def paged_mla_decode_q8(q_eff: jax.Array, q_rope: jax.Array,
@@ -428,22 +507,14 @@ def paged_mla_decode_q8(q_eff: jax.Array, q_rope: jax.Array,
                         impl: str | None = None,
                         interpret: bool | None = None,
                         mesh=None) -> jax.Array:
-    """:func:`paged_mla_decode` over q8_0 latent/rope pools.
-
-    ``ckv_qs``/``kr_qs``: int8 value pools (num_pages, P, R[dr]);
-    ``ckv_d``/``kr_d``: per-(page, token) f32 scales (num_pages, P) —
-    block = the latent/rope width.  Dequantisation happens inside the
-    online-softmax loop; numerically exact w.r.t. attending the
-    dequantised pools.
-    """
-    return _mla_core(
-        q_eff, q_rope, (ckv_qs, ckv_d, kr_qs, kr_d), block_table, pos,
-        _lane_bound(lane_pages, q_eff.shape[0],
-                    _n_active(block_table, active_pages)),
-        scale=scale, nj=_n_active(block_table, active_pages),
-        impl=_resolve_impl(impl),
-        interpret=(_interpret_default() if interpret is None else interpret),
-        quant=True, mesh=mesh)
+    """:func:`paged_mla_decode_quant` with both leaves pinned to q8_0
+    (the original PR 5 entry point, kept for callers and parity suites
+    that address the uniform-q8 layout by name)."""
+    return paged_mla_decode_quant(
+        q_eff, q_rope, ckv_qs, ckv_d, kr_qs, kr_d, block_table, pos,
+        scale=scale, latent_mode="q8_0", rope_mode="q8_0",
+        active_pages=active_pages, lane_pages=lane_pages, impl=impl,
+        interpret=interpret, mesh=mesh)
 
 
 def _xla_mla(q_eff, q_rope, cs, ks, pos, *, scale):
@@ -463,10 +534,12 @@ def _xla_mla(q_eff, q_rope, cs, ks, pos, *, scale):
                                    "quant", "mesh"))
 def _mla_core(q_eff, q_rope, kv, block_table, pos, lane_pages, *,
               scale: float, nj: int, impl: str, interpret: bool,
-              quant: bool, mesh=None) -> jax.Array:
+              quant: tuple | None, mesh=None) -> jax.Array:
     """Shared absorbed-MLA scaffold; ``kv`` is ``(ckv_pool, krope_pool)``
-    or the q8_0 quadruple ``(ckv_qs, ckv_d, kr_qs, kr_d)`` (see
-    :func:`_attn_core` for the tile-loader / lane-clamp pattern).  MLA
+    (``quant=None``) or the quadruple ``(ckv_qs, ckv_d, kr_qs, kr_d)``
+    with ``quant=(latent_mode, rope_mode)`` naming each leaf pair's
+    storage mode (see :func:`_attn_core` for the tile-loader /
+    lane-clamp pattern).  MLA
     validity is positional (unclamped ``kidx <= pos``), so lane-clamped
     trailing revisits are masked with no extra predicate.
 
@@ -496,8 +569,8 @@ def _mla_core(q_eff, q_rope, kv, block_table, pos, lane_pages, *,
             _init_accumulators(m_ref, l_ref, acc_ref)
             if quant:
                 cq_ref, cd_ref, kq_ref, kd_ref = kv_refs
-                ckv = cq_ref[0].astype(jnp.float32) * cd_ref[0][..., None]
-                krope = kq_ref[0].astype(jnp.float32) * kd_ref[0][..., None]
+                ckv = _dequant(cq_ref[0], cd_ref[0], quant[0])
+                krope = _dequant(kq_ref[0], kd_ref[0], quant[1])
             else:
                 ckv_ref, kr_ref = kv_refs
                 ckv = ckv_ref[0].astype(jnp.float32)         # (P, R)
@@ -519,10 +592,11 @@ def _mla_core(q_eff, q_rope, kv, block_table, pos, lane_pages, *,
         page3 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0, 0)  # noqa: E731,E501
         page2 = lambda i, j, bt, ps, lp: (pj(i, j, bt, ps, lp), 0)     # noqa: E731,E501
         if quant:
+            # packed trailing axes for q4_0 leaves — unpack is in-kernel
             kv_specs = [
-                pl.BlockSpec((1, tp, r), page3),
+                pl.BlockSpec((1, tp, kv_ops[0].shape[-1]), page3),
                 pl.BlockSpec((1, tp), page2),
-                pl.BlockSpec((1, tp, dr), page3),
+                pl.BlockSpec((1, tp, kv_ops[2].shape[-1]), page3),
                 pl.BlockSpec((1, tp), page2),
             ]
         else:
@@ -573,7 +647,7 @@ def _mla_core(q_eff, q_rope, kv, block_table, pos, lane_pages, *,
 
 
 # ---------------------------------------------------------------------------
-# q8_0 quantized K/V page pools (Engine(kv_quant="q8_0"))
+# quantized K/V page pools (Engine(kv_quant="q8_0" | "q4_0" | "dq"))
 # ---------------------------------------------------------------------------
 
 def quantize_kv_page_pool(pool: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -596,6 +670,94 @@ def quantize_kv_page_pool(pool: jax.Array) -> tuple[jax.Array, jax.Array]:
     return qs, d
 
 
+def pack_q4_rows(qs: jax.Array) -> jax.Array:
+    """Pack int4-valued int8 rows two-per-byte along the trailing axis.
+
+    qs: (..., D) int8 with every value in [-8, 7] (the q4_0 quantizer
+    stays in [-7, 7]); D must be even.  Byte ``i`` holds element ``2i``
+    in its low nibble and element ``2i + 1`` in its high nibble — the
+    GGUF q4_0 convention (SNIPPETS.md Snippet 3), so
+    :func:`unpack_q4_rows` restores the original element order with two
+    arithmetic shifts and an interleave.
+    """
+    width = qs.shape[-1]
+    if width % 2:
+        raise ValueError(f"q4_0 packing needs an even trailing dim; "
+                         f"got {width}")
+    lo = jnp.bitwise_and(qs[..., 0::2], 0x0F)
+    hi = jnp.left_shift(qs[..., 1::2], 4)
+    return jnp.bitwise_or(lo, hi).astype(jnp.int8)
+
+
+def unpack_q4_rows(packed: jax.Array) -> jax.Array:
+    """Invert :func:`pack_q4_rows`: (..., D/2) int8 -> (..., D) int8.
+
+    Pure int8 arithmetic (VPU-friendly, runs inside the kernel tile
+    loaders): ``(b << 4) >> 4`` sign-extends the low nibble, ``b >> 4``
+    the high one; a stack + reshape restores the even/odd interleave.
+    """
+    lo = jnp.right_shift(jnp.left_shift(packed, 4), 4)
+    hi = jnp.right_shift(packed, 4)
+    return jnp.stack([lo, hi], axis=-1).reshape(
+        *packed.shape[:-1], 2 * packed.shape[-1])
+
+
+def quantize_kv_page_pool_q4(pool: jax.Array
+                             ) -> tuple[jax.Array, jax.Array]:
+    """q4_0-style per-row quantization: symmetric int4 in [-7, 7].
+
+    Same row blocking as :func:`quantize_kv_page_pool` (``d = max|x|/7``
+    per trailing-axis row) but the int values are nibble-packed two per
+    byte (:func:`pack_q4_rows`), so the stored leaf's trailing axis is
+    ``D // 2`` — ~7x less page traffic than f32 pools at ~16x the q8_0
+    error ceiling (1/14 vs 1/254 of the row amplitude).
+    """
+    x = pool.astype(jnp.float32)
+    d = jnp.max(jnp.abs(x), axis=-1) / 7.0
+    safe = jnp.maximum(d, 1e-30)
+    qs = jnp.clip(jnp.round(x / safe[..., None]), -7, 7).astype(jnp.int8)
+    return pack_q4_rows(qs), d
+
+
+def _check_mode(mode: str) -> str:
+    if mode not in ("q8_0", "q4_0"):
+        raise ValueError(f"unknown kv-quant storage mode {mode!r}")
+    return mode
+
+
+def paged_attn_decode_quant(q: jax.Array, k_qs: jax.Array, k_d: jax.Array,
+                            v_qs: jax.Array, v_d: jax.Array,
+                            pos_pool: jax.Array, block_table: jax.Array,
+                            pos: jax.Array, *, mode: str = "q8_0",
+                            window: int = 0,
+                            softcap: float = 0.0,
+                            scale: float | None = None,
+                            active_pages: int | None = None,
+                            lane_pages: jax.Array | None = None,
+                            impl: str | None = None,
+                            interpret: bool | None = None,
+                            mesh=None) -> jax.Array:
+    """:func:`paged_attn_decode` over quantized page pools.
+
+    ``k_qs``/``v_qs``: int8 value pools (trailing axis halved under
+    ``mode="q4_0"`` — two nibbles per byte), ``k_d``/``v_d``: their
+    per-row scales (see :func:`quantize_kv_page_pool` /
+    :func:`quantize_kv_page_pool_q4`).  Pages stream in packed;
+    dequantisation happens inside the online-softmax loop (VPU), so the
+    HBM traffic per page is ~1/4 (q8_0) / ~1/7 (q4_0) of the f32 pools'.
+    Numerically exact w.r.t. attending the dequantised pools.
+    """
+    return _attn_core(
+        q, (k_qs, k_d, v_qs, v_d), pos_pool, block_table, pos,
+        _lane_bound(lane_pages, q.shape[0],
+                    _n_active(block_table, active_pages)),
+        window=window, softcap=softcap,
+        scale=(q.shape[-1] ** -0.5 if scale is None else scale),
+        nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
+        interpret=(_interpret_default() if interpret is None else interpret),
+        quant=_check_mode(mode), mesh=mesh)
+
+
 def paged_attn_decode_q8(q: jax.Array, k_qs: jax.Array, k_d: jax.Array,
                          v_qs: jax.Array, v_d: jax.Array,
                          pos_pool: jax.Array, block_table: jax.Array,
@@ -606,20 +768,297 @@ def paged_attn_decode_q8(q: jax.Array, k_qs: jax.Array, k_d: jax.Array,
                          impl: str | None = None,
                          interpret: bool | None = None,
                          mesh=None) -> jax.Array:
-    """:func:`paged_attn_decode` over q8_0 page pools.
+    """:func:`paged_attn_decode_quant` pinned to q8_0 (the original PR 5
+    entry point, kept for callers that address the layout by name)."""
+    return paged_attn_decode_quant(
+        q, k_qs, k_d, v_qs, v_d, pos_pool, block_table, pos, mode="q8_0",
+        window=window, softcap=softcap, scale=scale,
+        active_pages=active_pages, lane_pages=lane_pages, impl=impl,
+        interpret=interpret, mesh=mesh)
 
-    ``k_qs``/``v_qs``: int8 value pools, ``k_d``/``v_d``: their per-row
-    scales (see :func:`quantize_kv_page_pool`).  Pages stream in packed;
-    dequantisation happens inside the online-softmax loop (VPU), so the
-    HBM traffic per page is ~1/4 of the f32 pools'.  Numerically exact
-    w.r.t. attending the dequantised pools.
+
+# ---------------------------------------------------------------------------
+# fused chunked prefill over quantized pools (write-then-attend)
+# ---------------------------------------------------------------------------
+
+def paged_attn_prefill_quant(q: jax.Array, k_qs: jax.Array, k_d: jax.Array,
+                             v_qs: jax.Array, v_d: jax.Array,
+                             pos_pool: jax.Array, block_table: jax.Array,
+                             qpos: jax.Array, *, mode: str = "q8_0",
+                             window: int = 0, softcap: float = 0.0,
+                             scale: float | None = None,
+                             active_pages: int | None = None,
+                             impl: str | None = None,
+                             interpret: bool | None = None) -> jax.Array:
+    """Fused chunked-prefill GQA over quantized page pools.
+
+    The caller has already quantized this chunk's K/V rows **once** and
+    scattered them into the pools (write-then-attend, see
+    models/attention.py); this kernel then attends every chunk query
+    against the pools in place — no dense dequantised view is ever
+    materialised, closing the prefill half of the packed-pages story.
+
+    q: (B, C, H, D) chunk queries (RoPE applied, unscaled); qpos: (B, C)
+    int32 absolute query positions, ``-1`` for padded rows (their outputs
+    are all-masked zeros).  A key row is attendable for query (b, c) iff
+    it is written (``pos >= 0``), causal (``pos <= qpos[b, c]``), inside
+    the window when one applies, and its *logical* index is
+    ``<= qpos[b, c]`` — full-table pools store position == logical index,
+    so the last term masks stale rows beyond the lane's frontier left by
+    a previous page occupant (the paged analogue of the gather path's
+    ``pos < start`` frontier check).  Because the page enumeration is
+    fixed by the block table — independent of how the prompt was split
+    into chunks — outputs are bitwise chunk-size invariant: pages past a
+    query's horizon are fully masked, and fully-masked tiles are exact
+    no-ops in the online softmax.
+
+    Returns (B, C, H, Dv) f32.  Ring (windowed-local) tables must keep
+    the gather path: their stored positions are not logical indices.
     """
-    return _attn_core(
-        q, (k_qs, k_d, v_qs, v_d), pos_pool, block_table, pos,
-        _lane_bound(lane_pages, q.shape[0],
-                    _n_active(block_table, active_pages)),
+    nj = _n_active(block_table, active_pages)
+    return _attn_prefill_core(
+        q, (k_qs, k_d, v_qs, v_d), pos_pool, block_table,
+        qpos.astype(jnp.int32),
         window=window, softcap=softcap,
         scale=(q.shape[-1] ** -0.5 if scale is None else scale),
-        nj=_n_active(block_table, active_pages), impl=_resolve_impl(impl),
+        nj=nj, impl=_resolve_impl(impl),
         interpret=(_interpret_default() if interpret is None else interpret),
-        quant=True, mesh=mesh)
+        quant=_check_mode(mode))
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "scale", "nj",
+                                   "impl", "interpret", "quant"))
+def _attn_prefill_core(q, kv, pos_pool, block_table, qpos, *,
+                       window: int, softcap: float, scale: float, nj: int,
+                       impl: str, interpret: bool,
+                       quant: str) -> jax.Array:
+    """Multi-query variant of :func:`_attn_core` for chunked prefill.
+
+    Grid is the same ``(slot, logical_page)``; each step scores all C
+    chunk queries against one page tile with a per-row (C, P) validity
+    mask.  Rows are laid out ``(hkv, C, rep)`` so the score/probability
+    contractions stay grouped by kv head; the finish step transposes the
+    accumulator back to (C, H, Dv).  No lane clamp: every logical page in
+    ``[0, nj)`` is either allocated to the lane or the NULL page (whose
+    rows are unwritten, ``pos = -1``), and revisit-dedup does not apply
+    because prefill reads each page exactly once.
+    """
+    b, c, h, d = q.shape
+    tp, hkv = kv[0].shape[1], kv[0].shape[2]
+    rep = h // hkv
+    dv = kv[2].shape[-1] * (2 if quant == "q4_0" else 1)
+    if impl == "xla":
+        btj = block_table[:, :nj]
+        ks, vs = _gathered_kv(kv, btj, quant)
+        ks = ks.reshape(b, nj * tp, hkv, d)
+        vs = vs.reshape(b, nj * tp, hkv, dv)
+        ps = pos_pool[btj].reshape(b, nj * tp)
+        kidx = jnp.arange(nj * tp)
+        valid = ((ps[:, None, :] >= 0)
+                 & (ps[:, None, :] <= qpos[:, :, None])
+                 & (kidx[None, None, :] <= qpos[:, :, None]))
+        if window:
+            valid &= ps[:, None, :] > qpos[:, :, None] - window
+        qg = (q.astype(jnp.float32) * scale).reshape(b, c, hkv, rep, d)
+        s = jnp.einsum("bckrd,blkd->bckrl", qg, ks,
+                       preferred_element_type=jnp.float32)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        # NEG_INF is finite, so a fully-masked row (padded chunk query)
+        # softmaxes to uniform, not zero — zero it explicitly to match
+        # the kernel's all-masked-row output.  For rows with any valid
+        # key this is a bitwise no-op: exp(NEG_INF - m) underflows to 0.
+        w = jnp.where(valid[:, :, None, None, :], w, 0.0)
+        o = jnp.einsum("bckrl,blkd->bckrd", w, vs,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(b, c, h, dv)
+
+    rows = hkv * c * rep
+
+    def kernel(bt_ref, qp_ref, q_ref, kq_ref, kd_ref, vq_ref, vd_ref,
+               pp_ref, o_ref, m_ref, l_ref, acc_ref):
+        del bt_ref
+        _init_accumulators(m_ref, l_ref, acc_ref)
+        kt = _dequant(kq_ref[0], kd_ref[0], quant)           # (P, Hkv, D)
+        qv = q_ref[0].astype(jnp.float32) * scale            # (C, H, D)
+        q2 = qv.reshape(c, hkv, rep, d).transpose(1, 0, 2, 3)
+        s = jax.lax.dot_general(                             # (Hkv, C*rep, P)
+            q2.reshape(hkv, c * rep, d), kt,
+            (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32).reshape(rows, tp)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        pt = pp_ref[0]                                       # (P,)
+        qp = qp_ref[pl.program_id(0)]                        # (C,)
+        kidx = (pl.program_id(1) * tp
+                + jax.lax.broadcasted_iota(jnp.int32, (tp, 1), 0)[:, 0])
+        v2 = ((pt[None, :] >= 0) & (pt[None, :] <= qp[:, None])
+              & (kidx[None, :] <= qp[:, None]))              # (C, P)
+        if window:
+            v2 &= pt[None, :] > qp[:, None] - window
+        vr = jnp.broadcast_to(v2[None, :, None, :],
+                              (hkv, c, rep, tp)).reshape(rows, tp)
+        s = jnp.where(vr, s, NEG_INF)
+
+        def v_tile(p):
+            o = jax.lax.dot_general(                         # (Hkv, C*rep, Dv)
+                p.reshape(hkv, c * rep, tp),
+                _dequant(vq_ref[0], vd_ref[0], quant),
+                (((2,), (0,)), ((0,), (1,))),
+                preferred_element_type=jnp.float32)
+            return o.reshape(rows, dv)
+
+        _online_update(s, vr, v_tile, m_ref, l_ref, acc_ref)
+
+        @pl.when(pl.program_id(1) == nj - 1)
+        def _():
+            l = jnp.maximum(l_ref[:, 0:1], 1e-30)
+            out = (acc_ref[...] / l).reshape(hkv, c, rep, dv)
+            o_ref[0] = out.transpose(1, 0, 2, 3).reshape(c, h, dv)
+
+    page4 = lambda i, j, bt, qp: (bt[i, j], 0, 0, 0)  # noqa: E731
+    page3 = lambda i, j, bt, qp: (bt[i, j], 0, 0)     # noqa: E731
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nj),
+        in_specs=[
+            pl.BlockSpec((1, c, h, d), lambda i, j, bt, qp: (i, 0, 0, 0)),
+            pl.BlockSpec((1, tp, hkv, kv[0].shape[-1]), page4),
+            pl.BlockSpec((1, tp, hkv), page3),
+            pl.BlockSpec((1, tp, hkv, kv[2].shape[-1]), page4),
+            pl.BlockSpec((1, tp, hkv), page3),
+            pl.BlockSpec((1, tp), lambda i, j, bt, qp: (bt[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, h, dv),
+                               lambda i, j, bt, qp: (i, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, _LANES), jnp.float32),
+            pltpu.VMEM((rows, _LANES), jnp.float32),
+            pltpu.VMEM((rows, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, h, dv), jnp.float32),
+        interpret=interpret,
+    )(block_table, qpos, q, *kv, pos_pool)
+
+
+def paged_mla_prefill_quant(q_eff: jax.Array, q_rope: jax.Array,
+                            ckv_qs: jax.Array, ckv_d: jax.Array,
+                            kr_qs: jax.Array, kr_d: jax.Array,
+                            block_table: jax.Array, qpos: jax.Array, *,
+                            scale: float,
+                            latent_mode: str = "q8_0",
+                            rope_mode: str = "q8_0",
+                            active_pages: int | None = None,
+                            impl: str | None = None,
+                            interpret: bool | None = None) -> jax.Array:
+    """Fused chunked-prefill absorbed MLA over quantized latent pools.
+
+    Write-then-attend like :func:`paged_attn_prefill_quant`, in absorbed
+    form: q_eff (B, C, H, R) is the chunk's nope query pre-multiplied by
+    the absorbed ``kv_b`` key projection, and the returned (B, C, H, R)
+    f32 latents are projected out with ``w_vb`` by the caller — no
+    per-head K/V is materialised, matching the decode path's math rather
+    than the naive gather prefill's.  Latent pools store no positions:
+    validity is purely ``logical_idx <= qpos[b, c]`` (padded rows carry
+    ``qpos = -1`` and come back zero).
+    """
+    nj = _n_active(block_table, active_pages)
+    return _mla_prefill_core(
+        q_eff, q_rope, (ckv_qs, ckv_d, kr_qs, kr_d), block_table,
+        qpos.astype(jnp.int32),
+        scale=scale, nj=nj, impl=_resolve_impl(impl),
+        interpret=(_interpret_default() if interpret is None else interpret),
+        quant=(_check_mode(latent_mode), _check_mode(rope_mode)))
+
+
+@partial(jax.jit, static_argnames=("scale", "nj", "impl", "interpret",
+                                   "quant"))
+def _mla_prefill_core(q_eff, q_rope, kv, block_table, qpos, *,
+                      scale: float, nj: int, impl: str, interpret: bool,
+                      quant: tuple) -> jax.Array:
+    """Multi-query variant of :func:`_mla_core` for chunked prefill;
+    rows are ``(C, h)``-ordered, validity is the per-row positional mask
+    ``logical_idx <= qpos``."""
+    b, c, h, r = q_eff.shape
+    dr = q_rope.shape[-1]
+    tp = kv[0].shape[1]
+    if impl == "xla":
+        btj = block_table[:, :nj]
+        cs, ks = _gathered_kv(kv, btj, quant)
+        cs = cs.reshape(b, nj * tp, r)
+        ks = ks.reshape(b, nj * tp, dr)
+        kidx = jnp.arange(nj * tp)
+        valid = kidx[None, None, :] <= qpos[:, :, None]
+        s = (jnp.einsum("bchr,blr->bchl", q_eff.astype(jnp.float32), cs,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bchd,bld->bchl", q_rope.astype(jnp.float32), ks,
+                          preferred_element_type=jnp.float32)) * scale
+        s = jnp.where(valid[:, :, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        # zero fully-masked (padded) rows — see _attn_prefill_core
+        w = jnp.where(valid[:, :, None, :], w, 0.0)
+        return jnp.einsum("bchl,blr->bchr", w, cs,
+                          preferred_element_type=jnp.float32)
+
+    rows = c * h
+
+    def kernel(bt_ref, qp_ref, qe_ref, qr_ref, cq_ref, cd_ref, kq_ref,
+               kd_ref, o_ref, m_ref, l_ref, acc_ref):
+        del bt_ref
+        _init_accumulators(m_ref, l_ref, acc_ref)
+        ckv = _dequant(cq_ref[0], cd_ref[0], quant[0])       # (P, R)
+        krope = _dequant(kq_ref[0], kd_ref[0], quant[1])     # (P, Dr)
+        qe = qe_ref[0].astype(jnp.float32).reshape(rows, r)
+        qr = qr_ref[0].astype(jnp.float32).reshape(rows, dr)
+        s = (jnp.dot(qe, ckv.T, preferred_element_type=jnp.float32)
+             + jnp.dot(qr, krope.T,
+                       preferred_element_type=jnp.float32)) * scale
+        kidx = (pl.program_id(1) * tp
+                + jax.lax.broadcasted_iota(jnp.int32, (tp, 1), 0)[:, 0])
+        qp = qp_ref[pl.program_id(0)]                        # (C,)
+        v2 = kidx[None, :] <= qp[:, None]                    # (C, P)
+        vr = jnp.broadcast_to(v2[:, None, :],
+                              (c, h, tp)).reshape(rows, tp)
+        s = jnp.where(vr, s, NEG_INF)
+        _online_update(s, vr, lambda p: jnp.dot(
+            p, ckv, preferred_element_type=jnp.float32),
+            m_ref, l_ref, acc_ref)
+
+        @pl.when(pl.program_id(1) == nj - 1)
+        def _():
+            l = jnp.maximum(l_ref[:, 0:1], 1e-30)
+            o_ref[0] = (acc_ref[...] / l).reshape(c, h, r)
+
+    page3 = lambda i, j, bt, qp: (bt[i, j], 0, 0)  # noqa: E731
+    page2 = lambda i, j, bt, qp: (bt[i, j], 0)     # noqa: E731
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nj),
+        in_specs=[
+            pl.BlockSpec((1, c, h, r), lambda i, j, bt, qp: (i, 0, 0, 0)),
+            pl.BlockSpec((1, c, h, dr), lambda i, j, bt, qp: (i, 0, 0, 0)),
+            pl.BlockSpec((1, tp, kv[0].shape[-1]), page3),
+            pl.BlockSpec((1, tp), page2),
+            pl.BlockSpec((1, tp, kv[2].shape[-1]), page3),
+            pl.BlockSpec((1, tp), page2),
+        ],
+        out_specs=pl.BlockSpec((1, c, h, r),
+                               lambda i, j, bt, qp: (i, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, _LANES), jnp.float32),
+            pltpu.VMEM((rows, _LANES), jnp.float32),
+            pltpu.VMEM((rows, r), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, h, r), jnp.float32),
+        interpret=interpret,
+    )(block_table, qpos, q_eff, q_rope, *kv)

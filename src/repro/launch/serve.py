@@ -55,12 +55,16 @@ def main(argv=None):
                          "slots x max-len view each step (reference). "
                          "Default: REPRO_PAGED_KERNEL env, else fused. "
                          "Only meaningful with --page-size > 0")
-    ap.add_argument("--kv-quant", default=None, choices=("q8_0",),
-                    help="quantize the paged KV cache pools: int8 values "
-                         "+ per-row f32 scales, ~4x less cache memory and "
-                         "decode page traffic (the fused q8 kernels are "
-                         "selected automatically).  Requires "
-                         "--page-size > 0")
+    ap.add_argument("--kv-quant", default=None,
+                    choices=("q8_0", "q4_0", "dq"),
+                    help="quantize the paged KV cache pools: 'q8_0' int8 "
+                         "values + per-row f32 scales (~4x less cache "
+                         "memory and decode page traffic), 'q4_0' "
+                         "nibble-packed int4 (~8x), 'dq' dynamic per-layer "
+                         "bitwidth — sensitive layers (first/last, MLA "
+                         "latents) stay q8_0, the rest drop to q4_0 (the "
+                         "matching fused kernels are selected "
+                         "automatically).  Requires --page-size > 0")
     ap.add_argument("--scheduler", default="reserve",
                     choices=Engine.SCHEDULERS,
                     help="'reserve' admits only when the pool can hold a "

@@ -215,22 +215,33 @@ def cache_len(cfg: ModelConfig, max_len: int, local: bool) -> int:
     return min(max_len, cfg.window) if (local and cfg.window) else max_len
 
 
+def _kv_mode(kv_quant) -> str | None:
+    """Normalize a per-layer cache-quant spec to this family's storage
+    mode: GQA K/V leaves share one mode (``LayerQuant.kv``); ``None``
+    keeps f32/model-dtype pools.  Only concrete modes are accepted here —
+    the engine-level "dq" policy string is resolved per layer upstream
+    (``paged.resolve_layer_quant`` in transformer.py)."""
+    return paged.as_layer_quant(kv_quant).kv if kv_quant else None
+
+
 def init_paged_attn_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                          dtype=jnp.bfloat16, kv_quant: str | None = None
-                          ) -> dict:
+                          dtype=jnp.bfloat16, kv_quant=None) -> dict:
     """Paged K/V/pos pools shared by every slot (see models/paged.py).
 
-    ``kv_quant="q8_0"`` stores K/V as int8 pools plus per-(token, head)
-    f32 scale pools — ~4x less cache memory and decode page traffic; the
-    ``pos`` pool is shared by both layouts.
+    ``kv_quant`` stores K/V as int8 pools plus per-(token, head) f32
+    scale pools — ~4x ("q8_0") / ~7x ("q4_0", nibble-packed: the stored
+    trailing axis is ``head_dim // 2``) less cache memory and decode page
+    traffic; the ``pos`` pool is shared by every layout.
     """
     nkv, hd = cfg.n_kv_heads, cfg.head_dim
     pos = jnp.full((num_pages, page_size), -1, jnp.int32)
-    if paged.check_kv_quant(kv_quant):
+    mode = _kv_mode(kv_quant)
+    if mode:
+        hd_s = paged.q4_packed_dim(hd, "head") if mode == "q4_0" else hd
         return {
-            "k_qs": jnp.zeros((num_pages, page_size, nkv, hd), jnp.int8),
+            "k_qs": jnp.zeros((num_pages, page_size, nkv, hd_s), jnp.int8),
             "k_d": jnp.zeros((num_pages, page_size, nkv), jnp.float32),
-            "v_qs": jnp.zeros((num_pages, page_size, nkv, hd), jnp.int8),
+            "v_qs": jnp.zeros((num_pages, page_size, nkv, hd_s), jnp.int8),
             "v_d": jnp.zeros((num_pages, page_size, nkv), jnp.float32),
             "pos": pos,
         }
@@ -242,17 +253,18 @@ def init_paged_attn_cache(cfg: ModelConfig, num_pages: int, page_size: int,
 
 
 def paged_attn_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
-                           dtype=jnp.bfloat16, kv_quant: str | None = None
-                           ) -> dict:
+                           dtype=jnp.bfloat16, kv_quant=None) -> dict:
     nkv, hd = cfg.n_kv_heads, cfg.head_dim
     pos = jax.ShapeDtypeStruct((num_pages, page_size), jnp.int32)
-    if paged.check_kv_quant(kv_quant):
+    mode = _kv_mode(kv_quant)
+    if mode:
+        hd_s = paged.q4_packed_dim(hd, "head") if mode == "q4_0" else hd
         return {
-            "k_qs": jax.ShapeDtypeStruct((num_pages, page_size, nkv, hd),
+            "k_qs": jax.ShapeDtypeStruct((num_pages, page_size, nkv, hd_s),
                                          jnp.int8),
             "k_d": jax.ShapeDtypeStruct((num_pages, page_size, nkv),
                                         jnp.float32),
-            "v_qs": jax.ShapeDtypeStruct((num_pages, page_size, nkv, hd),
+            "v_qs": jax.ShapeDtypeStruct((num_pages, page_size, nkv, hd_s),
                                          jnp.int8),
             "v_d": jax.ShapeDtypeStruct((num_pages, page_size, nkv),
                                         jnp.float32),
@@ -292,15 +304,18 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
         (bitwise-identical logits to the contiguous layout), scatter the
         newly written row back.
 
-    ``kv_quant="q8_0"`` expects the quantized pool layout of
-    :func:`init_paged_attn_cache`: the new K/V row is quantized *before*
+    ``kv_quant`` (a concrete mode or a ``paged.LayerQuant``) expects the
+    quantized pool layout of :func:`init_paged_attn_cache`: the new K/V
+    row is quantized *before*
     the write, so both kernels attend the same round-tripped values — the
-    fused path dequantizes page tiles in the kernel, the gather reference
+    fused path dequantizes page tiles in the kernel (unpacking q4_0
+    nibbles after the DMA), the gather reference
     dequantizes the gathered dense view.
     """
     kernel = kernel or default_paged_kernel()
     if kernel not in ("fused", "gather"):
         raise ValueError(f"unknown paged decode kernel {kernel!r}")
+    kv_quant = _kv_mode(kv_quant)
     length = cache_len(cfg, max_len, local)
     b = x.shape[0]
     if kernel == "gather" and not kv_quant:
@@ -319,10 +334,12 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     q, k, v = _qkv(p, cfg, h, pos[:, None])
     slot = (pos % length).astype(jnp.int32)
     if kv_quant:
-        kq, kd = paged.scatter_token_q8(cache["k_qs"], cache["k_d"],
-                                        block_table, slot, k[:, 0], ok=live)
-        vq, vd = paged.scatter_token_q8(cache["v_qs"], cache["v_d"],
-                                        block_table, slot, v[:, 0], ok=live)
+        kq, kd = paged.scatter_token_quant(cache["k_qs"], cache["k_d"],
+                                           block_table, slot, k[:, 0],
+                                           ok=live, mode=kv_quant)
+        vq, vd = paged.scatter_token_quant(cache["v_qs"], cache["v_d"],
+                                           block_table, slot, v[:, 0],
+                                           ok=live, mode=kv_quant)
         new = {
             "k_qs": kq, "k_d": kd, "v_qs": vq, "v_d": vd,
             "pos": paged.scatter_token(cache["pos"], block_table, slot,
@@ -331,14 +348,17 @@ def attn_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
         if kernel == "gather":
             # dequantizing gather reference: attend the dense view of the
             # *updated* pools so the round-tripped new row matches fused
-            ck = paged.gather_pages_q8(kq, kd, block_table, length)
-            cv = paged.gather_pages_q8(vq, vd, block_table, length)
+            ck = paged.gather_pages_quant(kq, kd, block_table, length,
+                                          kv_quant)
+            cv = paged.gather_pages_quant(vq, vd, block_table, length,
+                                          kv_quant)
             cpos = paged.gather_pages(new["pos"], block_table, length)
             o = _attend_cache(cfg, q, ck, cv, cpos, pos,
                               local=local).astype(x.dtype)
             return linear(p["o_proj"], o), new
-        o = paged_attn.paged_attn_decode_q8(
+        o = paged_attn.paged_attn_decode_quant(
             q[:, 0], kq, kd, vq, vd, new["pos"], block_table, pos,
+            mode=kv_quant,
             window=(cfg.window if local else 0), softcap=cfg.attn_softcap,
             scale=cfg.head_dim ** -0.5, active_pages=active_pages,
             lane_pages=lane_pages, mesh=mesh)
@@ -403,7 +423,8 @@ def attn_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                        positions: jax.Array, start: jax.Array,
                        chunk_len: jax.Array, *, local: bool, max_len: int,
                        block_table: jax.Array | None = None,
-                       kv_quant: str | None = None,
+                       kv_quant=None, kernel: str | None = None,
+                       active_pages: int | None = None,
                        ) -> tuple[jax.Array, dict]:
     """One prefill chunk against an existing (pooled) cache.
 
@@ -415,29 +436,70 @@ def attn_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     previous occupant of the slot) plus the causal prefix of the chunk
     itself.  Works on a dense pooled cache, or a paged one when
     ``block_table`` is given; with ``kv_quant`` the paged pools are
-    quantized — earlier chunks are read through a dequantizing gather and
-    this chunk's K/V are quantized once up front, so the chunk's own keys
-    are attended through the same round-tripped values every later read
-    sees and outputs are bitwise independent of the chunk size.
+    quantized and this chunk's K/V are quantized once up front, so the
+    chunk's own keys are attended through the same round-tripped values
+    every later read sees and outputs are bitwise independent of the
+    chunk size.
+
+    ``kernel="fused"`` on a quantized full-horizon (non-ring) layer runs
+    the *write-then-attend* path: the quantized rows are scattered into
+    their pages first, then every chunk query attends the pools in place
+    (:func:`repro.kernels.paged_attn.paged_attn_prefill_quant`) — packed
+    pages stay packed, no dense dequantised view is ever materialised,
+    and the output is bitwise chunk-size invariant because the page
+    enumeration order does not depend on the chunk split.  Ring layers
+    and ``kernel="gather"`` keep the dequantizing-gather reference path.
     """
+    kv_quant = _kv_mode(kv_quant)
+    kernel = kernel or default_paged_kernel()
     b, c, _ = x.shape
     length = cache_len(cfg, max_len, local)
     h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
     q, k, v = _qkv(p, cfg, h, positions)
 
+    if (kv_quant and kernel == "fused" and not (local and cfg.window)):
+        # write-then-attend: quantize once, scatter, then attend the
+        # pages in place — full tables only (stored pos == logical index
+        # is what lets the kernel mask stale rows beyond the frontier)
+        valid_tok = jnp.arange(c)[None, :] < chunk_len[:, None]    # (B, C)
+        idx = (positions % length).astype(jnp.int32)
+        ok = paged.chunk_write_plan(idx, valid_tok, length)
+        k_qs, k_d = paged.quantize_rows(k, kv_quant)
+        v_qs, v_d = paged.quantize_rows(v, kv_quant)
+        new = {
+            "k_qs": paged.scatter_chunk(cache["k_qs"], block_table, idx,
+                                        k_qs, ok),
+            "k_d": paged.scatter_chunk(cache["k_d"], block_table, idx,
+                                       k_d, ok),
+            "v_qs": paged.scatter_chunk(cache["v_qs"], block_table, idx,
+                                        v_qs, ok),
+            "v_d": paged.scatter_chunk(cache["v_d"], block_table, idx,
+                                       v_d, ok),
+            "pos": paged.scatter_chunk(cache["pos"], block_table, idx,
+                                       positions.astype(jnp.int32), ok),
+        }
+        qpos = jnp.where(valid_tok, positions, -1).astype(jnp.int32)
+        o = paged_attn.paged_attn_prefill_quant(
+            q, new["k_qs"], new["k_d"], new["v_qs"], new["v_d"],
+            new["pos"], block_table, qpos, mode=kv_quant, window=0,
+            softcap=cfg.attn_softcap, scale=cfg.head_dim ** -0.5,
+            active_pages=active_pages)
+        o = o.reshape(b, c, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+        return linear(p["o_proj"], o), new
+
     k_qs = k_d = v_qs = v_d = None
     if kv_quant:
         assert block_table is not None, "kv_quant requires paged caches"
-        ck = paged.gather_pages_q8(cache["k_qs"], cache["k_d"], block_table,
-                                   length)
-        cv = paged.gather_pages_q8(cache["v_qs"], cache["v_d"], block_table,
-                                   length)
+        ck = paged.gather_pages_quant(cache["k_qs"], cache["k_d"],
+                                      block_table, length, kv_quant)
+        cv = paged.gather_pages_quant(cache["v_qs"], cache["v_d"],
+                                      block_table, length, kv_quant)
         cpos = paged.gather_pages(cache["pos"], block_table, length)
         # quantize the chunk's K/V once, up front: in-chunk attention uses
         # the round-tripped view and the same qs/d are scattered below, so
         # in-chunk and cross-chunk reads are identical
-        k_qs, k_d, k_att = paged.roundtrip_q8(k)
-        v_qs, v_d, v_att = paged.roundtrip_q8(v)
+        k_qs, k_d, k_att = paged.roundtrip_quant(k, kv_quant)
+        v_qs, v_d, v_att = paged.roundtrip_quant(v, kv_quant)
     elif block_table is not None:
         ck = paged.gather_pages(cache["k"], block_table, length)
         cv = paged.gather_pages(cache["v"], block_table, length)

@@ -108,21 +108,32 @@ def mla_prefill(p: dict, cfg: ModelConfig, x: jax.Array,
     return out, cache
 
 
+def _latent_widths(cfg: ModelConfig, lq: "paged.LayerQuant"):
+    """Stored trailing dims of the latent/rope qs leaves for a layer's
+    quant assignment — halved (nibble-packed) for q4_0 leaves."""
+    rank_s = (paged.q4_packed_dim(cfg.kv_lora_rank, "latent rank")
+              if lq.latent == "q4_0" else cfg.kv_lora_rank)
+    dr_s = (paged.q4_packed_dim(cfg.qk_rope_head_dim, "rope dim")
+            if lq.kv == "q4_0" else cfg.qk_rope_head_dim)
+    return rank_s, dr_s
+
+
 def init_paged_mla_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                         dtype=jnp.bfloat16, kv_quant: str | None = None
-                         ) -> dict:
+                         dtype=jnp.bfloat16, kv_quant=None) -> dict:
     """Paged latent pools; validity is positional (idx <= pos), so no pos
     pool is needed — unallocated logical pages gather NULL_PAGE zeros that
-    the mask never attends.  ``kv_quant="q8_0"``: int8 latent/rope pools
-    plus one f32 scale per (page, token) row (block = the latent/rope
-    width); NULL-page zeros dequantize to the same never-written zeros."""
-    if paged.check_kv_quant(kv_quant):
+    the mask never attends.  ``kv_quant`` (a mode string or a per-layer
+    :class:`repro.models.paged.LayerQuant`): int8 latent/rope pools plus
+    one f32 scale per (page, token) row (block = the latent/rope width);
+    q4_0 leaves store two nibbles per byte so the qs trailing dim is
+    halved.  NULL-page zeros dequantize to the same never-written zeros."""
+    if kv_quant:
+        lq = paged.as_layer_quant(kv_quant)
+        rank_s, dr_s = _latent_widths(cfg, lq)
         return {
-            "c_kv_qs": jnp.zeros((num_pages, page_size, cfg.kv_lora_rank),
-                                 jnp.int8),
+            "c_kv_qs": jnp.zeros((num_pages, page_size, rank_s), jnp.int8),
             "c_kv_d": jnp.zeros((num_pages, page_size), jnp.float32),
-            "k_rope_qs": jnp.zeros(
-                (num_pages, page_size, cfg.qk_rope_head_dim), jnp.int8),
+            "k_rope_qs": jnp.zeros((num_pages, page_size, dr_s), jnp.int8),
             "k_rope_d": jnp.zeros((num_pages, page_size), jnp.float32),
         }
     return {
@@ -133,16 +144,17 @@ def init_paged_mla_cache(cfg: ModelConfig, num_pages: int, page_size: int,
 
 
 def paged_mla_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
-                          dtype=jnp.bfloat16, kv_quant: str | None = None
-                          ) -> dict:
-    if paged.check_kv_quant(kv_quant):
+                          dtype=jnp.bfloat16, kv_quant=None) -> dict:
+    if kv_quant:
+        lq = paged.as_layer_quant(kv_quant)
+        rank_s, dr_s = _latent_widths(cfg, lq)
         return {
             "c_kv_qs": jax.ShapeDtypeStruct(
-                (num_pages, page_size, cfg.kv_lora_rank), jnp.int8),
+                (num_pages, page_size, rank_s), jnp.int8),
             "c_kv_d": jax.ShapeDtypeStruct((num_pages, page_size),
                                            jnp.float32),
             "k_rope_qs": jax.ShapeDtypeStruct(
-                (num_pages, page_size, cfg.qk_rope_head_dim), jnp.int8),
+                (num_pages, page_size, dr_s), jnp.int8),
             "k_rope_d": jax.ShapeDtypeStruct((num_pages, page_size),
                                              jnp.float32),
         }
@@ -160,7 +172,7 @@ def mla_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                      kernel: str | None = None,
                      active_pages: int | None = None,
                      lane_pages: jax.Array | None = None,
-                     kv_quant: str | None = None,
+                     kv_quant=None,
                      mesh=None,
                      ) -> tuple[jax.Array, dict]:
     """Absorbed decode against paged latents.
@@ -172,15 +184,18 @@ def mla_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     ``kernel="gather"`` is the reference: gather the exact dense view, run
     the unchanged :func:`mla_decode`, scatter the new row back.
 
-    ``kv_quant="q8_0"`` expects the quantized pool layout of
-    :func:`init_paged_mla_cache`: the new latent/rope row is quantized
-    before the write, so fused (in-kernel dequant) and gather
-    (dequantizing gather + :func:`_absorbed_attend`) see the same
-    round-tripped values.
+    ``kv_quant`` (a mode string or a per-layer
+    :class:`repro.models.paged.LayerQuant` — under the "dq" policy the
+    latent leaf stays q8_0 even when the rope leaf drops to q4_0) expects
+    the quantized pool layout of :func:`init_paged_mla_cache`: the new
+    latent/rope row is quantized before the write, so fused (in-kernel
+    dequant) and gather (dequantizing gather + :func:`_absorbed_attend`)
+    see the same round-tripped values.
     """
     kernel = kernel or default_paged_kernel()
     if kernel not in ("fused", "gather"):
         raise ValueError(f"unknown paged decode kernel {kernel!r}")
+    lq = paged.as_layer_quant(kv_quant) if kv_quant else None
     if kernel == "gather" and not kv_quant:
         dense = {k: paged.gather_pages(cache[k], block_table, max_len)
                  for k in ("c_kv", "k_rope")}
@@ -200,19 +215,22 @@ def mla_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     c_new, kr_new = _latents(p, cfg, h, pos[:, None])         # (B,1,rank)
     idx = pos.astype(jnp.int32)
     if kv_quant:
-        cq, cd = paged.scatter_token_q8(cache["c_kv_qs"], cache["c_kv_d"],
-                                        block_table, idx, c_new[:, 0],
-                                        ok=live)
-        kq, kd = paged.scatter_token_q8(cache["k_rope_qs"],
-                                        cache["k_rope_d"], block_table, idx,
-                                        kr_new[:, 0], ok=live)
+        cq, cd = paged.scatter_token_quant(cache["c_kv_qs"], cache["c_kv_d"],
+                                           block_table, idx, c_new[:, 0],
+                                           ok=live, mode=lq.latent)
+        kq, kd = paged.scatter_token_quant(cache["k_rope_qs"],
+                                           cache["k_rope_d"], block_table,
+                                           idx, kr_new[:, 0], ok=live,
+                                           mode=lq.kv)
         new = {"c_kv_qs": cq, "c_kv_d": cd, "k_rope_qs": kq, "k_rope_d": kd}
         if kernel == "gather":
             # keep the dequantized views in f32 — the fused kernel also
             # dequantizes in f32, so the reference must not round through
             # the model dtype on bf16 deployments
-            ckv = paged.gather_pages_q8(cq, cd, block_table, max_len)
-            krope = paged.gather_pages_q8(kq, kd, block_table, max_len)
+            ckv = paged.gather_pages_quant(cq, cd, block_table, max_len,
+                                           lq.latent)
+            krope = paged.gather_pages_quant(kq, kd, block_table, max_len,
+                                             lq.kv)
             return _absorbed_attend(p, cfg, x.dtype, q_nope, q_rope,
                                     ckv, krope, pos), new
     else:
@@ -228,9 +246,10 @@ def mla_decode_paged(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
                        w_kb.astype(jnp.float32))              # (B,H,rank)
     if kv_quant:
-        lat = paged_attn.paged_mla_decode_q8(
+        lat = paged_attn.paged_mla_decode_quant(
             q_eff.astype(dt), q_rope[:, 0], cq, cd, kq, kd,
             block_table, pos, scale=(dn + dr) ** -0.5,
+            latent_mode=lq.latent, rope_mode=lq.kv,
             active_pages=active_pages, lane_pages=lane_pages, mesh=mesh)
     else:
         lat = paged_attn.paged_mla_decode(
@@ -247,7 +266,8 @@ def mla_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                       positions: jax.Array, start: jax.Array,
                       chunk_len: jax.Array, *, max_len: int,
                       block_table: jax.Array | None = None,
-                      kv_quant: str | None = None,
+                      kv_quant=None, kernel: str | None = None,
+                      active_pages: int | None = None,
                       ) -> tuple[jax.Array, dict]:
     """One prefill chunk against the compressed-latent cache.
 
@@ -255,30 +275,75 @@ def mla_prefill_chunk(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     naive evaluation, as in :func:`mla_forward`) and attends the chunk
     queries over it with per-row positional masks; writes the chunk's
     latents into the cache (dense rows or pages; quantized rows when
-    ``kv_quant`` — earlier chunks are read through a dequantizing gather
-    and the chunk's own latents are attended through the same round trip
-    they are stored with, so outputs are chunk-size independent).
+    ``kv_quant`` — the chunk's latents are quantized once up front and
+    attended through the same round trip they are stored with, so outputs
+    are chunk-size independent).
+
+    ``kernel="fused"`` on a quantized cache runs the *write-then-attend*
+    absorbed path: the quantized latent rows are scattered into their
+    pages first, then every chunk query attends the packed pools in place
+    (:func:`repro.kernels.paged_attn.paged_mla_prefill_quant`) — no dense
+    dequantised latent view is ever materialised.  ``kernel="gather"``
+    keeps the naive-materialisation reference path.
     """
     b, c, _ = x.shape
     nh = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lq = paged.as_layer_quant(kv_quant) if kv_quant else None
+    kernel = kernel or default_paged_kernel()
     h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
     q_nope, q_rope = _project_q(p, cfg, h, positions)
     c_new, kr_new = _latents(p, cfg, h, positions)
 
+    if kv_quant and kernel == "fused":
+        # write-then-attend absorbed prefill: quantize once, scatter,
+        # attend the packed pools in place (scores and accumulation stay
+        # in the compressed latent space, as in the fused decode)
+        valid_tok = jnp.arange(c)[None, :] < chunk_len[:, None]    # (B, C)
+        idx = positions.astype(jnp.int32)
+        c_qs, c_d = paged.quantize_rows(c_new, lq.latent)
+        kr_qs, kr_d = paged.quantize_rows(kr_new, lq.kv)
+        new = {
+            "c_kv_qs": paged.scatter_chunk(cache["c_kv_qs"], block_table,
+                                           idx, c_qs, valid_tok),
+            "c_kv_d": paged.scatter_chunk(cache["c_kv_d"], block_table,
+                                          idx, c_d, valid_tok),
+            "k_rope_qs": paged.scatter_chunk(cache["k_rope_qs"], block_table,
+                                             idx, kr_qs, valid_tok),
+            "k_rope_d": paged.scatter_chunk(cache["k_rope_d"], block_table,
+                                            idx, kr_d, valid_tok),
+        }
+        qpos = jnp.where(valid_tok, positions, -1).astype(jnp.int32)
+        dt = x.dtype
+        rank = cfg.kv_lora_rank
+        w_kvb = _maybe_dequant(p["kv_b"], dt).reshape(rank, nh, dn + dv)
+        w_kb, w_vb = w_kvb[..., :dn], w_kvb[..., dn:]
+        q_eff = jnp.einsum("bchd,rhd->bchr", q_nope.astype(jnp.float32),
+                           w_kb.astype(jnp.float32))          # (B,C,H,rank)
+        lat = paged_attn.paged_mla_prefill_quant(
+            q_eff.astype(dt), q_rope, new["c_kv_qs"], new["c_kv_d"],
+            new["k_rope_qs"], new["k_rope_d"], block_table, qpos,
+            scale=(dn + dr) ** -0.5, latent_mode=lq.latent,
+            rope_mode=lq.kv, active_pages=active_pages)
+        o = jnp.einsum("bchr,rhd->bchd", lat.astype(dt), w_vb,
+                       preferred_element_type=jnp.float32)
+        o = o.reshape(b, c, nh * dv).astype(x.dtype)
+        return linear(p["o_proj"], o), new
+
     c_qs = c_d = kr_qs = kr_d = None
     if kv_quant:
         assert block_table is not None, "kv_quant requires paged caches"
-        ckv = paged.gather_pages_q8(cache["c_kv_qs"], cache["c_kv_d"],
-                                    block_table, max_len)
-        krope = paged.gather_pages_q8(cache["k_rope_qs"], cache["k_rope_d"],
-                                      block_table, max_len)
+        ckv = paged.gather_pages_quant(cache["c_kv_qs"], cache["c_kv_d"],
+                                       block_table, max_len, lq.latent)
+        krope = paged.gather_pages_quant(cache["k_rope_qs"],
+                                         cache["k_rope_d"], block_table,
+                                         max_len, lq.kv)
         # quantize the chunk's latents once, up front: in-chunk attention
         # uses the round-tripped view and the same qs/d are scattered
         # below, so in-chunk and cross-chunk reads are identical and the
         # output is bitwise independent of the chunk size
-        c_qs, c_d, c_att = paged.roundtrip_q8(c_new)
-        kr_qs, kr_d, kr_att = paged.roundtrip_q8(kr_new)
+        c_qs, c_d, c_att = paged.roundtrip_quant(c_new, lq.latent)
+        kr_qs, kr_d, kr_att = paged.roundtrip_quant(kr_new, lq.kv)
     elif block_table is not None:
         ckv = paged.gather_pages(cache["c_kv"], block_table, max_len)
         krope = paged.gather_pages(cache["k_rope"], block_table, max_len)

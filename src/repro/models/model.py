@@ -291,7 +291,10 @@ class Model:
         ``(num_pages, page_size, ...)`` pools shared by all slots via block
         tables; recurrent state stays dense ``(slots, ...)`` (O(1)/slot).
         ``kv_quant="q8_0"`` stores the positional pools as int8 + per-row
-        f32 scales (~4x less cache memory; see models/paged.py)."""
+        f32 scales (~4x less cache memory; see models/paged.py);
+        ``"q4_0"`` packs two int4 codes per byte (~8x); ``"dq"`` assigns
+        bitwidths per layer (sensitive layers stay q8_0)."""
+        self._check_paged_quant(kv_quant)
         flat = {}
         for layer in range(self.cfg.n_layers):
             c = transformer.init_layer_cache_paged(
@@ -303,8 +306,17 @@ class Model:
             flat = stacking.stack_tree(flat, self.plan)
         return flat
 
+    def _check_paged_quant(self, kv_quant):
+        if self.scan and kv_quant == "dq":
+            raise ValueError(
+                "kv_quant='dq' assigns bitwidths per layer, which is "
+                "incompatible with scan=True: stacked layer groups share "
+                "one leaf layout (use a uniform mode such as 'q8_0' or "
+                "'q4_0' with scan)")
+
     def paged_cache_specs(self, num_pages: int, page_size: int, slots: int,
                           dtype=jnp.bfloat16, kv_quant: str | None = None):
+        self._check_paged_quant(kv_quant)
         flat = {}
         for layer in range(self.cfg.n_layers):
             c = transformer.layer_cache_specs_paged(
@@ -340,8 +352,10 @@ class Model:
         counts, a further per-lane refinement of ``active_pages`` (a short
         lane's fused-kernel reads then stop scaling with the batch's
         longest lane).  ``kv_quant``: the cache quantization spec the
-        pools were initialised with — the matching fused q8 kernels (or
-        dequantizing gather reference) are selected automatically.
+        pools were initialised with (``"q8_0"``, ``"q4_0"`` or the
+        per-layer ``"dq"`` policy) — the matching fused quantized
+        kernels (or dequantizing gather reference) are selected
+        automatically.
         ``mesh``: the device mesh the engine serves on (``None`` =
         single-device) — forwarded to the fused kernels, which run under
         ``shard_map`` on it so sharded pool operands stay correct.
@@ -354,7 +368,9 @@ class Model:
 
     def prefill_chunk(self, params, cache, tokens, start, chunk_len, *,
                       max_len: int, block_tables=None, page_size: int = 0,
-                      kv_quant: str | None = None):
+                      kv_quant: str | None = None,
+                      kernel: str | None = None,
+                      active_pages: tuple[int, int] | None = None):
         """One chunked-prefill step over the pooled decode cache.
 
         tokens: (B, C) int32, right-padded per row; start: (B,) absolute
@@ -364,8 +380,15 @@ class Model:
         (logits (B, vocab) at each row's last valid position, new_cache).
 
         With ``block_tables``/``page_size`` the cache is paged (and
-        ``kv_quant`` selects the quantized pool layout); otherwise it is
-        the dense pooled layout of :meth:`init_cache`.
+        ``kv_quant`` selects the quantized pool layout, resolved per
+        layer under ``"dq"``); otherwise it is the dense pooled layout of
+        :meth:`init_cache`.  ``kernel="fused"`` (default via
+        ``REPRO_PAGED_KERNEL``) runs quantized full-horizon layers through
+        the write-then-attend prefill kernels — packed pages stay packed;
+        ``"gather"`` keeps the dequantizing-gather reference.
+        ``active_pages``: optional static ``(n_full, n_ring)`` bound on
+        the fused prefill kernels' page loops, as in
+        :meth:`decode_step_paged`.
         """
         cfg = self.cfg
         if cfg.frontend == "vit" or cfg.is_encdec:
@@ -374,8 +397,10 @@ class Model:
         if kv_quant and block_tables is None:
             raise ValueError("kv_quant requires a paged cache "
                              "(pass block_tables/page_size)")
+        self._check_paged_quant(kv_quant)
         paged = (None if block_tables is None
-                 else (block_tables, page_size, max_len, kv_quant))
+                 else (block_tables, page_size, max_len, kv_quant, kernel,
+                       active_pages))
         c = tokens.shape[1]
         x = self._embed_tokens(params, tokens)
         positions = start[:, None] + jnp.arange(c)[None, :]

@@ -35,29 +35,43 @@ Chunked prefill still uses the gather path (one gather per admitted
 chunk, amortised over the whole chunk — decode was the per-step hot
 loop).
 
-**Quantized pools** (``kv_quant="q8_0"``): a positional K/V (or MLA
-latent) leaf may instead be stored as an int8 pool plus a per-row f32
-scale pool (block = the trailing axis; see
-``kernels.paged_attn.quantize_kv_page_pool``).  Writes quantize rows on
-the fly (:func:`scatter_token_q8` / :func:`scatter_chunk_q8`), reads
-either dequantize inside the fused kernels or through
-:func:`gather_pages_q8` for the prefill-chunk / gather-reference paths.
+**Quantized pools** (``kv_quant="q8_0"`` / ``"q4_0"`` / ``"dq"``): a
+positional K/V (or MLA latent) leaf may instead be stored as an int8
+pool plus a per-row f32 scale pool (block = the trailing axis; see
+``kernels.paged_attn.quantize_kv_page_pool``).  ``q4_0`` packs two
+signed 4-bit values per byte along the block axis (the ``*_qs`` pool's
+trailing dim is half the row width, which must therefore be even — see
+:func:`q4_packed_dim`), cutting page traffic ~8x vs f32.  ``dq`` is the
+*dynamic* per-layer policy mirroring ``core/policy.py``'s DQ3_K_M:
+sensitive layers (the first/last of the stack, and MLA latents always —
+PR 5 measured the MLA+MoE error blow-up) stay ``q8_0`` while the rest
+drop to ``q4_0`` (:func:`resolve_layer_quant`).  Writes quantize rows on
+the fly (:func:`scatter_token_quant` / :func:`scatter_chunk_quant`),
+reads either dequantize inside the fused kernels or through
+:func:`gather_pages_quant` for the gather-reference paths.
 NULL/GARBAGE reserved-page and last-writer-wins semantics are identical
 to the f32 pools (a NULL page's qs and d stay zero, so it dequantizes to
-the same never-written zeros).
+the same never-written zeros — a packed zero byte unpacks to two zero
+nibbles).
 """
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax.numpy as jnp
 
-from ..kernels.paged_attn import quantize_kv_page_pool
+from ..kernels.paged_attn import (pack_q4_rows, quantize_kv_page_pool,
+                                  quantize_kv_page_pool_q4, unpack_q4_rows)
 
 NULL_PAGE = 0
 GARBAGE_PAGE = 1
 RESERVED_PAGES = 2
 
-KV_QUANTS = ("q8_0",)
+# engine-level cache-quantization specs; "dq" resolves to a per-layer
+# mix of the two uniform modes via resolve_layer_quant()
+KV_QUANTS = ("q8_0", "q4_0", "dq")
+KV_QUANT_MODES = ("q8_0", "q4_0")      # concrete per-leaf storage modes
 
 
 def check_kv_quant(kv_quant: str | None) -> str | None:
@@ -66,6 +80,80 @@ def check_kv_quant(kv_quant: str | None) -> str | None:
         raise ValueError(f"unknown kv_quant {kv_quant!r}; "
                          f"supported: {KV_QUANTS}")
     return kv_quant or None
+
+
+def q4_packed_dim(width: int, what: str = "row") -> int:
+    """Packed (bytes) trailing dim of one q4_0 row of ``width`` values.
+
+    Two nibbles share a byte along the block axis, so the row width must
+    be even.  On TPU the *packed* minor dim is what meets the 128-lane
+    contract (per shard under ``shard_map``) — interpret mode accepts the
+    tiny odd test shapes, as everywhere else in kernels/paged_attn.py.
+    """
+    if width % 2:
+        raise ValueError(
+            f"q4_0 requires an even {what} width (two nibbles per byte); "
+            f"got {width}")
+    return width // 2
+
+
+class LayerQuant(NamedTuple):
+    """Concrete per-layer cache-quantization assignment.
+
+    ``kv``: storage mode for the GQA K/V pools — or, on MLA layers, the
+    decoupled-RoPE key pool.  ``latent``: storage mode for the MLA
+    ``c_kv`` latent pool (mirrors ``kv`` on non-MLA layers, where it is
+    unused).  Values are entries of ``KV_QUANT_MODES``.
+    """
+    kv: str
+    latent: str
+
+
+def as_layer_quant(kv_quant) -> "LayerQuant | None":
+    """Normalize a per-layer spec: a uniform mode string becomes a
+    ``LayerQuant`` applying it to every leaf; ``LayerQuant`` (or any
+    ``(kv, latent)`` pair) passes through; None stays None."""
+    if kv_quant is None:
+        return None
+    if isinstance(kv_quant, str):
+        if kv_quant not in KV_QUANT_MODES:
+            raise ValueError(f"not a concrete kv-quant mode: {kv_quant!r} "
+                             f"(supported: {KV_QUANT_MODES})")
+        return LayerQuant(kv_quant, kv_quant)
+    return LayerQuant(*kv_quant)
+
+
+def dq_sensitive_layers(n_layers: int) -> frozenset:
+    """Layers the "dq" policy keeps at q8_0 (the rest drop to q4_0).
+
+    First/last ``max(1, n_layers // 8)`` layers — the related papers'
+    finding that low-bit degradation concentrates at the ends of the
+    stack.  Degenerate tiny stacks (<= 2 layers) keep every layer
+    sensitive, i.e. "dq" == uniform q8_0 there.
+    """
+    n = max(1, n_layers // 8)
+    return frozenset(range(n)) | frozenset(range(max(0, n_layers - n),
+                                                 n_layers))
+
+
+def resolve_layer_quant(kv_quant: str | None, cfg,
+                        layer: int) -> LayerQuant | None:
+    """Resolve the engine-level ``kv_quant`` spec for one layer.
+
+    Uniform specs ("q8_0"/"q4_0") apply to every leaf.  "dq" assigns
+    per-layer bitwidth: sensitive layers (:func:`dq_sensitive_layers`)
+    stay q8_0, the rest drop to q4_0 — except MLA ``c_kv`` latents, which
+    stay q8_0 on *every* layer (PR 5's measured MLA error blow-up: the
+    latent feeds both scores and values, so its error amplifies ~2x a
+    K/V perturbation).  Returns None for unquantized caches.
+    """
+    kv_quant = check_kv_quant(kv_quant)
+    if kv_quant is None:
+        return None
+    if kv_quant != "dq":
+        return LayerQuant(kv_quant, kv_quant)
+    kv = ("q8_0" if layer in dq_sensitive_layers(cfg.n_layers) else "q4_0")
+    return LayerQuant(kv, "q8_0" if cfg.mla else kv)
 
 
 def pages_for(length: int, page_size: int) -> int:
@@ -127,56 +215,103 @@ def scatter_chunk(pool: jnp.ndarray, block_table: jnp.ndarray,
     return pool.at[phys.reshape(-1), off.reshape(-1)].set(flat)
 
 
-def gather_pages_q8(qs_pool: jnp.ndarray, d_pool: jnp.ndarray,
-                    block_table: jnp.ndarray, length: int) -> jnp.ndarray:
-    """Dequantizing :func:`gather_pages` over a q8_0 leaf pair.
+def quantize_rows(val: jnp.ndarray, mode: str):
+    """Quantize float rows over the trailing axis in storage ``mode``.
 
-    Returns the dense f32 ``(B, length, ...)`` view ``qs * d`` — what the
-    prefill-chunk and gather-reference paths attend (the fused kernels
-    dequantize the same way, per page tile, without materialising this).
+    Returns ``(qs, d)``: int8 values (nibble-packed for q4_0, trailing
+    dim halved) and per-row f32 scales.
     """
-    qs = gather_pages(qs_pool, block_table, length)
-    d = gather_pages(d_pool, block_table, length)
+    if mode == "q8_0":
+        return quantize_kv_page_pool(val)
+    if mode == "q4_0":
+        return quantize_kv_page_pool_q4(val)
+    raise ValueError(f"unknown kv-quant mode {mode!r}")
+
+
+def dequant_rows(qs: jnp.ndarray, d: jnp.ndarray, mode: str) -> jnp.ndarray:
+    """Dequantize stored rows back to the f32 view every reader attends."""
+    if mode == "q4_0":
+        qs = unpack_q4_rows(qs)
+    elif mode != "q8_0":
+        raise ValueError(f"unknown kv-quant mode {mode!r}")
     return qs.astype(jnp.float32) * d.astype(jnp.float32)[..., None]
 
 
-def scatter_token_q8(qs_pool: jnp.ndarray, d_pool: jnp.ndarray,
-                     block_table: jnp.ndarray, idx: jnp.ndarray,
-                     val: jnp.ndarray, ok: jnp.ndarray | None = None):
-    """Quantize-on-write :func:`scatter_token` for a q8_0 leaf pair.
+def gather_pages_quant(qs_pool: jnp.ndarray, d_pool: jnp.ndarray,
+                       block_table: jnp.ndarray, length: int,
+                       mode: str = "q8_0") -> jnp.ndarray:
+    """Dequantizing :func:`gather_pages` over a quantized leaf pair.
+
+    Returns the dense f32 ``(B, length, ...)`` view ``unpack(qs) * d`` —
+    what the prefill-chunk and gather-reference paths attend (the fused
+    kernels dequantize the same way, per page tile, without
+    materialising this).
+    """
+    qs = gather_pages(qs_pool, block_table, length)
+    d = gather_pages(d_pool, block_table, length)
+    return dequant_rows(qs, d, mode)
+
+
+def scatter_token_quant(qs_pool: jnp.ndarray, d_pool: jnp.ndarray,
+                        block_table: jnp.ndarray, idx: jnp.ndarray,
+                        val: jnp.ndarray, ok: jnp.ndarray | None = None,
+                        mode: str = "q8_0"):
+    """Quantize-on-write :func:`scatter_token` for a quantized leaf pair.
 
     val: (B, ...) float rows; each is quantized per trailing-axis row
-    (``quantize_kv_page_pool``) and the int8 values / f32 scales land in
+    (:func:`quantize_rows`) and the int8 values / f32 scales land in
     their pools under the same routing (``ok`` rows -> GARBAGE_PAGE).
     """
-    qs, d = quantize_kv_page_pool(val)
+    qs, d = quantize_rows(val, mode)
     return (scatter_token(qs_pool, block_table, idx, qs, ok=ok),
             scatter_token(d_pool, block_table, idx, d, ok=ok))
 
 
-def scatter_chunk_q8(qs_pool: jnp.ndarray, d_pool: jnp.ndarray,
-                     block_table: jnp.ndarray, idx: jnp.ndarray,
-                     val: jnp.ndarray, ok: jnp.ndarray):
-    """Quantize-on-write :func:`scatter_chunk` for a q8_0 leaf pair."""
-    qs, d = quantize_kv_page_pool(val)
+def scatter_chunk_quant(qs_pool: jnp.ndarray, d_pool: jnp.ndarray,
+                        block_table: jnp.ndarray, idx: jnp.ndarray,
+                        val: jnp.ndarray, ok: jnp.ndarray,
+                        mode: str = "q8_0"):
+    """Quantize-on-write :func:`scatter_chunk` for a quantized leaf pair."""
+    qs, d = quantize_rows(val, mode)
     return (scatter_chunk(qs_pool, block_table, idx, qs, ok),
             scatter_chunk(d_pool, block_table, idx, d, ok))
 
 
-def roundtrip_q8(val: jnp.ndarray):
+def roundtrip_quant(val: jnp.ndarray, mode: str = "q8_0"):
     """Quantize a chunk's rows once: ``(qs, d, dequantized)``.
 
-    ``dequantized`` (``qs * d``, f32) is exactly what every later read of
-    these rows sees (:func:`gather_pages_q8` and the fused q8 kernels
-    compute the same product), so a prefill chunk that attends its *own*
-    K/V through this view — and scatters the returned ``qs``/``d``
-    directly via :func:`scatter_chunk`, never quantizing twice — produces
-    outputs that are bitwise independent of the chunk size: in-chunk and
-    cross-chunk reads go through one identical round trip.
+    ``dequantized`` (``unpack(qs) * d``, f32) is exactly what every later
+    read of these rows sees (:func:`gather_pages_quant` and the fused
+    quantized kernels compute the same product), so a prefill chunk that
+    attends its *own* K/V through this view — and scatters the returned
+    ``qs``/``d`` directly via :func:`scatter_chunk`, never quantizing
+    twice — produces outputs that are bitwise independent of the chunk
+    size: in-chunk and cross-chunk reads go through one identical round
+    trip.
     """
-    qs, d = quantize_kv_page_pool(val)
-    deq = qs.astype(jnp.float32) * d.astype(jnp.float32)[..., None]
-    return qs, d, deq
+    qs, d = quantize_rows(val, mode)
+    return qs, d, dequant_rows(qs, d, mode)
+
+
+# q8_0-specific aliases (the original PR 5 surface; kept because swap /
+# parity suites and external callers address the q8 layout by name)
+
+def gather_pages_q8(qs_pool, d_pool, block_table, length):
+    return gather_pages_quant(qs_pool, d_pool, block_table, length, "q8_0")
+
+
+def scatter_token_q8(qs_pool, d_pool, block_table, idx, val, ok=None):
+    return scatter_token_quant(qs_pool, d_pool, block_table, idx, val,
+                               ok=ok, mode="q8_0")
+
+
+def scatter_chunk_q8(qs_pool, d_pool, block_table, idx, val, ok):
+    return scatter_chunk_quant(qs_pool, d_pool, block_table, idx, val, ok,
+                               mode="q8_0")
+
+
+def roundtrip_q8(val):
+    return roundtrip_quant(val, "q8_0")
 
 
 def extract_pages(pool: jnp.ndarray, page_ids, axis: int = 0) -> jnp.ndarray:

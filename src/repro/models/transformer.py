@@ -8,6 +8,7 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from . import attention, mla, moe, rglru, xlstm
 from .common import ffn_apply, linear, rms_norm, swiglu
+from .paged import resolve_layer_quant
 
 
 def _cross_kv(cp: dict, cfg: ModelConfig, enc_hidden: jax.Array):
@@ -91,9 +92,11 @@ def decode_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
     optional ``(n_full, n_ring)`` static bound on the page loop for the
     fused kernel and ``lane_pages`` an optional ``{"full": (B,), "ring":
     (B,)}`` per-lane refinement of it; ``kv_quant`` selects the quantized
-    pool layout (the matching fused q8 kernels are picked automatically).
-    ``live`` (B,) bool: rows flagged False (free / mid-prefill serve
-    lanes) leave the cache untouched.
+    pool layout — ``"q8_0"``/``"q4_0"`` uniformly, ``"dq"`` per layer via
+    :func:`repro.models.paged.resolve_layer_quant` (the matching fused
+    quantized kernels are picked automatically).  ``live`` (B,) bool:
+    rows flagged False (free / mid-prefill serve lanes) leave the cache
+    untouched.
     """
     kind = cfg.block_kind(layer)
     cross = {k: cache.pop(k) for k in ("cross_k", "cross_v")
@@ -104,6 +107,7 @@ def decode_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
         if paged is not None:
             (block_tables, _, max_len, kernel, active, kv_quant,
              lane_pages, mesh) = paged
+            kv_quant = resolve_layer_quant(kv_quant, cfg, layer)
             # MLA latents always span the full horizon (no ring bound)
             use_ring = local and not cfg.mla
             tbl_kind = "ring" if use_ring else "full"
@@ -253,19 +257,26 @@ def prefill_chunk_layer(cfg: ModelConfig, p: dict, layer: int, x: jax.Array,
 
     if kind in ("attn", "local_attn"):
         local = kind == "local_attn"
-        bt, kv_quant = None, None
+        bt, kv_quant, kernel, ap = None, None, None, None
         if paged is not None:
-            block_tables, _, _, kv_quant = paged
+            block_tables, _, _, kv_quant, kernel, active = paged
+            kv_quant = resolve_layer_quant(kv_quant, cfg, layer)
             # MLA latents always span the full horizon (no ring bound)
-            bt = block_tables["ring" if local and not cfg.mla else "full"]
+            use_ring = local and not cfg.mla
+            bt = block_tables["ring" if use_ring else "full"]
+            if active is not None:
+                ap = active[1] if use_ring else active[0]
+                ap = ap or None
         if cfg.mla:
             delta, cache_new = mla.mla_prefill_chunk(
                 p, cfg, x, cache, positions, start, chunk_len,
-                max_len=max_len, block_table=bt, kv_quant=kv_quant)
+                max_len=max_len, block_table=bt, kv_quant=kv_quant,
+                kernel=kernel, active_pages=ap)
         else:
             delta, cache_new = attention.attn_prefill_chunk(
                 p, cfg, x, cache, positions, start, chunk_len, local=local,
-                max_len=max_len, block_table=bt, kv_quant=kv_quant)
+                max_len=max_len, block_table=bt, kv_quant=kv_quant,
+                kernel=kernel, active_pages=ap)
         x = x + delta
     elif kind == "rglru":
         delta, cache_new = rglru.rglru_prefill_chunk(
@@ -306,18 +317,21 @@ def init_layer_cache_paged(cfg: ModelConfig, layer: int, num_pages: int,
                            kv_quant: str | None = None) -> dict:
     """Paged layer cache: attention/MLA leaves become page pools; recurrent
     state stays a dense ``(slots, ...)`` passthrough (O(1) per slot).
-    ``kv_quant`` switches the positional pools to the quantized layout
-    (recurrent passthrough state is never quantized)."""
+    ``kv_quant`` switches the positional pools to the quantized layout —
+    resolved per layer, so under ``"dq"`` sensitive layers keep q8_0
+    leaves while the rest pack q4_0 nibbles (recurrent passthrough state
+    is never quantized)."""
     kind = cfg.block_kind(layer)
     if cfg.is_encdec:
         raise ValueError("paged caches do not support encoder-decoder "
                          "architectures")
     if kind in ("attn", "local_attn"):
+        lq = resolve_layer_quant(kv_quant, cfg, layer)
         if cfg.mla:
             return mla.init_paged_mla_cache(cfg, num_pages, page_size, dtype,
-                                            kv_quant=kv_quant)
+                                            kv_quant=lq)
         return attention.init_paged_attn_cache(cfg, num_pages, page_size,
-                                               dtype, kv_quant=kv_quant)
+                                               dtype, kv_quant=lq)
     if kind == "rglru":
         return rglru.init_rglru_cache(cfg, slots, dtype)
     if kind == "mlstm":
@@ -336,11 +350,12 @@ def layer_cache_specs_paged(cfg: ModelConfig, layer: int, num_pages: int,
         raise ValueError("paged caches do not support encoder-decoder "
                          "architectures")
     if kind in ("attn", "local_attn"):
+        lq = resolve_layer_quant(kv_quant, cfg, layer)
         if cfg.mla:
             return mla.paged_mla_cache_specs(cfg, num_pages, page_size,
-                                             dtype, kv_quant=kv_quant)
+                                             dtype, kv_quant=lq)
         return attention.paged_attn_cache_specs(cfg, num_pages, page_size,
-                                                dtype, kv_quant=kv_quant)
+                                                dtype, kv_quant=lq)
     if kind == "rglru":
         return rglru.rglru_cache_specs(cfg, slots, dtype)
     if kind == "mlstm":

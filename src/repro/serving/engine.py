@@ -20,11 +20,13 @@ deployment driver for the paper's scenario (DQ3_K_M weights, 32k context):
     free lanes).  Recurrent state (RG-LRU / xLSTM) is O(1) per slot and
     stays a dense passthrough.  With ``page_size == 0`` the same loop runs
     over the contiguous slot-indexed layout — the two are bitwise
-    identical (tests/test_paged_cache.py).  ``kv_quant="q8_0"`` stores
-    the positional pools quantized (int8 + per-row f32 scales): rows are
-    quantized on write and the fused q8 kernels dequantize page tiles in
-    place, ~4x less cache memory and decode page traffic inside a
-    measured logit error budget (tests/test_kv_quant.py).
+    identical (tests/test_paged_cache.py).  ``kv_quant`` stores the
+    positional pools quantized — ``"q8_0"`` (int8 + per-row f32 scales,
+    ~4x), ``"q4_0"`` (nibble-packed int4, ~8x) or the per-layer ``"dq"``
+    policy (sensitive layers stay q8_0): rows are quantized on write and
+    the fused kernels dequantize page tiles in place, inside measured
+    logit error budgets (tests/test_kv_quant.py,
+    tests/test_kv_dynamic.py).
   * **Chunked prefill admission.**  Queued prompts are admitted in fixed
     ``prefill_chunk``-token chunks through ONE batched
     ``model.prefill_chunk`` call per iteration (all currently-admitting
@@ -259,6 +261,13 @@ class EngineStats:
     # the per-page bytes are the true quantized layout's (int8 + scales).
     decode_kv_bytes: int = 0
     decoded_tokens: int = 0              # live-lane tokens over all iterations
+    # quantization error budget (Engine(quant_probe=True) only): per-slot
+    # max relative gap between the served (quantized-cache) logits and a
+    # shadow f32-cache run fed the same tokens, sampled at every decode
+    # step.  Empty when the probe is off.
+    quant_probe_steps: int = 0           # decode steps the probe compared
+    quant_logit_gap_per_lane: list[float] = dataclasses.field(
+        default_factory=list)
     # preemption scheduler (scheduler="preempt"; all zero under "reserve")
     scheduler: str = "reserve"
     preemptions: int = 0                 # lanes swapped/kicked out, total
@@ -336,6 +345,12 @@ class EngineStats:
         return self.decode_kv_bytes / max(self.decoded_tokens, 1)
 
     @property
+    def quant_logit_gap_max(self) -> float:
+        """Worst sampled per-lane quantized-vs-f32 relative logit gap
+        (0.0 when ``quant_probe`` was off or no step was compared)."""
+        return max(self.quant_logit_gap_per_lane, default=0.0)
+
+    @property
     def status_counts(self) -> dict[str, int]:
         """Terminal-status histogram over the call's requests — every
         request lands in exactly one bucket of
@@ -390,6 +405,11 @@ class EngineStats:
             lines.append(
                 f"decode reads {self.kv_bytes_per_decoded_token:.0f} "
                 f"KV-B/decoded-token over {self.decoded_tokens} tokens")
+        if self.quant_probe_steps:
+            lines.append(
+                f"quant probe ({self.kv_quant}): max per-lane logit gap "
+                f"{self.quant_logit_gap_max:.3e} over "
+                f"{self.quant_probe_steps} compared steps")
         sc = self.status_counts
         if set(sc) - {"ok"}:
             lines.append("status: " + "  ".join(
@@ -520,11 +540,22 @@ class Engine:
     ``kernel`` selects the paged decode implementation: ``"fused"`` (Pallas
     flash-decode over the pages in place, bandwidth scales with live
     tokens) or ``"gather"`` (dense-view reference); default from the
-    ``REPRO_PAGED_KERNEL`` env, else fused.  ``kv_quant="q8_0"`` stores
-    the positional page pools quantized (int8 + per-row f32 scales, ~4x
-    less cache memory and decode page traffic; requires ``page_size > 0``)
-    — the fused q8 kernels are selected automatically and
+    ``REPRO_PAGED_KERNEL`` env, else fused.  ``kv_quant`` stores the
+    positional page pools quantized (requires ``page_size > 0``):
+    ``"q8_0"`` (int8 + per-row f32 scales, ~4x less cache memory and
+    decode page traffic), ``"q4_0"`` (two int4 codes per byte, ~8x), or
+    ``"dq"`` — the dynamic-bitwidth policy of
+    :func:`repro.models.paged.resolve_layer_quant`: sensitive layers
+    (first/last, MLA latent leaves) stay q8_0 while the rest pack q4_0
+    nibbles, mirroring the paper's DQ3_K_M weight policy on the cache
+    side.  The matching fused quantized kernels (decode and
+    write-then-attend chunked prefill) are selected automatically and
     ``EngineStats`` reports the true quantized page bytes / kvB/tok.
+    ``quant_probe=True`` (diagnostic; requires ``kv_quant``, the default
+    scheduler, no mesh and no fault plan) additionally serves a shadow
+    unquantized cache through the same steps and reports the sampled
+    per-lane quantized-vs-f32 logit gap in
+    ``EngineStats.quant_logit_gap_per_lane``.
 
     ``scheduler`` picks the admission policy:
 
@@ -591,7 +622,8 @@ class Engine:
                  eos_id: int = -1, sampler: SamplerConfig = SamplerConfig(),
                  jit: bool = True, page_size: int = 0, num_pages: int = 0,
                  prefill_chunk: int = 0, kernel: str | None = None,
-                 kv_quant: str | None = None, scheduler: str = "reserve",
+                 kv_quant: str | None = None, quant_probe: bool = False,
+                 scheduler: str = "reserve",
                  swap_budget_bytes: int | None = None, mesh=None,
                  faults=None, max_queue: int | None = None,
                  class_queues: dict[int, int] | None = None,
@@ -607,6 +639,17 @@ class Engine:
         if self.kv_quant and not page_size:
             raise ValueError("kv_quant requires the paged cache "
                              "(page_size > 0)")
+        self.quant_probe = bool(quant_probe)
+        if self.quant_probe:
+            if not self.kv_quant:
+                raise ValueError("quant_probe measures the quantized-vs-f32 "
+                                 "logit gap and requires kv_quant")
+            if scheduler != "reserve" or faults is not None or (
+                    mesh is not None):
+                raise ValueError("quant_probe shadows the serve call with "
+                                 "an unquantized cache and supports only "
+                                 "the default scheduler with no fault plan "
+                                 "and no mesh")
         if scheduler not in self.SCHEDULERS:
             raise ValueError(f"unknown scheduler {scheduler!r}; "
                              f"supported: {self.SCHEDULERS}")
@@ -724,7 +767,8 @@ class Engine:
                                max_len=max_len, kernel=self.kernel,
                                kv_quant=self.kv_quant, mesh=self.mesh)
         chunk_fn = partial(model.prefill_chunk, max_len=max_len,
-                           page_size=page_size, kv_quant=self.kv_quant)
+                           page_size=page_size, kv_quant=self.kv_quant,
+                           kernel=self.kernel)
         # serve() fills this in with the pool layout before the first
         # traced step; the wrappers read it at trace time (deterministic
         # per cache shape, so retraces agree)
@@ -748,6 +792,20 @@ class Engine:
             self._chunk = chunk_fn
             self._scrub = scrub
             self._scrub_all = scrub_all
+        if self.quant_probe:
+            # shadow f32 path: same steps, same block tables, kv_quant=None
+            probe_decode = partial(model.decode_step_paged,
+                                   page_size=page_size, max_len=max_len,
+                                   kernel=self.kernel, kv_quant=None,
+                                   mesh=None)
+            probe_chunk = partial(model.prefill_chunk, max_len=max_len,
+                                  page_size=page_size, kv_quant=None,
+                                  kernel=self.kernel)
+            if jit:
+                probe_decode = jax.jit(probe_decode,
+                                       static_argnames=("active_pages",))
+                probe_chunk = jax.jit(probe_chunk)
+            self._probe_decode, self._probe_chunk = probe_decode, probe_chunk
 
     def _constrained(self, fn):
         """Wrap a ``(params, cache, ...) -> (out, new_cache)`` step for
@@ -963,6 +1021,12 @@ class Engine:
             stats.page_size, stats.num_pages = P, num_pages
             stats.page_bytes = self._page_bytes(slots)
             stats.kv_quant = self.kv_quant or ""
+            if self.quant_probe:
+                # shadow f32 pools sharing the slots' block tables — fed
+                # the exact token/position streams of the quantized run
+                shadow = model.init_paged_cache(num_pages, P, slots,
+                                                dtype=dtype)
+                probe_gap = np.zeros(slots)
         else:
             pool = None
             cache = model.init_cache(slots, self.max_len, dtype=dtype)
@@ -1574,6 +1638,10 @@ class Engine:
                 logits, cache = self._chunk(
                     self.params, cache, jnp.asarray(toks), jnp.asarray(start),
                     jnp.asarray(clen), **kwargs)
+                if use_paged and self.quant_probe:
+                    _, shadow = self._probe_chunk(
+                        self.params, shadow, jnp.asarray(toks),
+                        jnp.asarray(start), jnp.asarray(clen), **kwargs)
                 stats.prefill_iterations += 1
                 first_toks = first_bad = None
                 for s in prefilling:
@@ -1728,6 +1796,24 @@ class Engine:
                 logits, cache = self._decode_paged(
                     self.params, cache, toks, pos, tables(), live=live_mask,
                     active_pages=active, lane_pages=lane_pages)
+                if self.quant_probe:
+                    # shadow step on the f32 pools, teacher-forced with the
+                    # quantized run's tokens: the per-lane gap isolates
+                    # the cache quantization error at identical context
+                    ref, shadow = self._probe_decode(
+                        self.params, shadow, toks, pos, tables(),
+                        live=live_mask, active_pages=active,
+                        lane_pages=lane_pages)
+                    gap = np.asarray(
+                        jnp.max(jnp.abs(logits.astype(jnp.float32)
+                                        - ref.astype(jnp.float32)), axis=-1)
+                        / jnp.maximum(
+                            jnp.max(jnp.abs(ref.astype(jnp.float32)),
+                                    axis=-1), 1e-6))
+                    alive = np.asarray(live_mask)
+                    probe_gap = np.where(alive, np.maximum(probe_gap, gap),
+                                         probe_gap)
+                    stats.quant_probe_steps += 1
             else:
                 # charge only the attn/MLA cache reads (recurrent
                 # passthrough excluded) so kvB/tok is comparable with the
@@ -1803,6 +1889,9 @@ class Engine:
         if use_paged:
             stats.peak_pages = pool.peak_in_use
             stats.pages_leaked = pool.in_use
+            if self.quant_probe:
+                stats.quant_logit_gap_per_lane = [float(g)
+                                                  for g in probe_gap]
         if plan is not None:
             stats.faults_injected = len(plan.injected)
             stats.fault_log = list(plan.injected)
@@ -1877,6 +1966,8 @@ class Engine:
             agg.page_size, agg.num_pages = s.page_size, s.num_pages
             agg.page_bytes = s.page_bytes
             agg.kv_quant = s.kv_quant
+            agg.quant_probe_steps += s.quant_probe_steps
+            agg.quant_logit_gap_per_lane.extend(s.quant_logit_gap_per_lane)
             agg.dense_cache_bytes = s.dense_cache_bytes
             agg.peak_pages = max(agg.peak_pages, s.peak_pages)
             agg.pages_leaked += s.pages_leaked

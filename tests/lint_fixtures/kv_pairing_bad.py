@@ -1,0 +1,55 @@
+"""Known-bad: q4_0 / dq cache dicts with broken ``*_qs``/``*_d`` pairing.
+
+The pairing contract is bitwidth-agnostic — these are the nibble-packed
+and mixed-layer shapes of the same bugs q8_pairing_bad.py pins for q8_0.
+"""
+
+import jax.numpy as jnp
+
+
+def packed_missing_scale(num_pages, page, heads, dim):
+    # q4_0 leaf (trailing dim halved by packing) still needs its scale
+    return {
+        "k_qs": jnp.zeros((num_pages, page, heads, dim // 2), jnp.int8),  # EXPECT[q8-leaf-pairing]
+        "pos": jnp.zeros((num_pages,), jnp.int32),
+    }
+
+
+def orphan_scale(num_pages, page, heads, dim):
+    # v_d survived the removal of its value pool — dequant reads garbage
+    return {
+        "k_qs": jnp.zeros((num_pages, page, heads, dim // 2), jnp.int8),
+        "k_d": jnp.zeros((num_pages, page, heads), jnp.float32),
+        "v_d": jnp.zeros((num_pages, page, heads), jnp.float32),  # EXPECT[q8-leaf-pairing]
+    }
+
+
+def packed_scale_shape_mismatch(num_pages, page, heads, dim):
+    # the scale covers each ROW: value shape minus the (packed) trailing
+    # axis, never the packed width itself
+    return {
+        "v_qs": jnp.zeros((num_pages, page, heads, dim // 2), jnp.int8),
+        "v_d": jnp.zeros((num_pages, page, heads, dim // 2), jnp.float32),  # EXPECT[q8-leaf-pairing]
+    }
+
+
+def packed_wrong_value_dtype(num_pages, page, rank):
+    # nibble-packed payloads are int8 bytes, not uint8/int32
+    return {
+        "c_kv_qs": jnp.zeros((num_pages, page, rank // 2), jnp.uint8),  # EXPECT[q8-leaf-pairing]
+        "c_kv_d": jnp.zeros((num_pages, page), jnp.float32),
+    }
+
+
+def dq_mixed_layers_one_broken(prefix, n, p, h, d):
+    # per-layer "dq" layouts: the sensitive q8 layer is paired, the
+    # packed q4 middle layer lost its scale — every layer dict checks
+    # independently
+    sensitive = {
+        f"{prefix}/k_qs": jnp.zeros((n, p, h, d), jnp.int8),
+        f"{prefix}/k_d": jnp.zeros((n, p, h), jnp.float32),
+    }
+    middle = {
+        f"{prefix}/k_qs": jnp.zeros((n, p, h, d // 2), jnp.int8),  # EXPECT[q8-leaf-pairing]
+    }
+    return sensitive, middle

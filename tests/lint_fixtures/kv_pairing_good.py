@@ -1,0 +1,47 @@
+"""Known-good: well-formed q4_0 and mixed-bitwidth ("dq") cache dicts."""
+
+import jax.numpy as jnp
+
+
+def packed_pool(num_pages, page, heads, dim):
+    # q4_0: nibble-packed int8 payload (trailing dim halved), one f32
+    # scale per row — exactly the q8 pairing contract at half the width
+    return {
+        "k_qs": jnp.zeros((num_pages, page, heads, dim // 2), jnp.int8),
+        "k_d": jnp.zeros((num_pages, page, heads), jnp.float32),
+        "v_qs": jnp.zeros((num_pages, page, heads, dim // 2), jnp.int8),
+        "v_d": jnp.zeros((num_pages, page, heads), jnp.float32),
+        "pos": jnp.zeros((num_pages,), jnp.int32),
+    }
+
+
+def packed_mla_latents(prefix, n, p, rank, dr):
+    return {
+        f"{prefix}/c_kv_qs": jnp.zeros((n, p, rank), jnp.int8),
+        f"{prefix}/c_kv_d": jnp.zeros((n, p), jnp.float32),
+        f"{prefix}/k_rope_qs": jnp.zeros((n, p, dr // 2), jnp.int8),
+        f"{prefix}/k_rope_d": jnp.zeros((n, p), jnp.float32),
+    }
+
+
+def dq_mixed_layers(prefix, n, p, h, d):
+    # "dq": a sensitive q8 layer and a packed q4 layer, both paired —
+    # bitwidth may vary per layer, the pairing contract never does
+    sensitive = {
+        f"{prefix}/k_qs": jnp.zeros((n, p, h, d), jnp.int8),
+        f"{prefix}/k_d": jnp.zeros((n, p, h), jnp.float32),
+    }
+    middle = {
+        f"{prefix}/k_qs": jnp.zeros((n, p, h, d // 2), jnp.int8),
+        f"{prefix}/k_d": jnp.zeros((n, p, h), jnp.float32),
+    }
+    return sensitive, middle
+
+
+def unquantized_scales_are_not_orphans(num_pages, dim):
+    # "*_d" keys in dicts with no "*_qs" leaf at all are out of scope —
+    # plenty of legitimate keys end in _d without meaning "scale"
+    return {
+        "pos_d": jnp.zeros((num_pages,), jnp.float32),
+        "state": jnp.zeros((num_pages, dim), jnp.float32),
+    }

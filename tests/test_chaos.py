@@ -15,7 +15,9 @@ the graceful-degradation contract from ``docs/chaos.md``:
   return to zero;
 * **bystander bitwise parity** — requests not targeted by an
   output-dirtying fault (``FaultPlan.dirty_rids()``) produce tokens
-  bitwise identical to a fault-free run, for f32 and q8_0 KV pools.
+  bitwise identical to a fault-free run, for f32, q8_0 and the
+  dynamic-bitwidth "dq" KV pools (whose nibble-packed q4_0 pages swap
+  verbatim at their packed size).
 
 Fuzz seeds derive from ``REPRO_CHAOS_SEED`` (default 0) so CI pins one
 schedule set and a failure reproduces from the seed alone.  When
@@ -249,7 +251,8 @@ def test_heartbeat_stragglers():
 # -- flagship fuzz: random schedules x schedulers x KV dtypes --------------
 
 @pytest.mark.parametrize("scheduler,kv_quant", [
-    ("preempt", None), ("preempt", "q8_0"), ("reserve", None)])
+    ("preempt", None), ("preempt", "q8_0"), ("preempt", "dq"),
+    ("reserve", None)])
 def test_chaos_fuzz(scheduler, kv_quant):
     cfg, params, model = _setup("qwen2-1.5b")
     reqs = _tight_requests(cfg)
@@ -304,7 +307,7 @@ def test_nan_logits_quarantines_one_lane():
     _record("nan_logits", stats, plan)
 
 
-@pytest.mark.parametrize("kv_quant", [None, "q8_0"])
+@pytest.mark.parametrize("kv_quant", [None, "q8_0", "dq"])
 def test_corrupt_page_quarantined_and_scrubbed(kv_quant):
     """A poisoned KV page turns the victim's logits non-finite; the
     detector retires only that lane and the freed pages are scrubbed, so

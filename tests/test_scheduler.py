@@ -5,11 +5,13 @@ traces (prompt lengths, budgets, priority classes, pool sizes, slot
 counts) and checked against oracles:
 
 * **Bitwise outputs** — greedy outputs of an oversubscribed preempting
-  serve equal unpreempted sequential serving (f32 and q8_0 both: the
-  chunk writer quantizes each chunk's K/V once up front, so chunked
-  admission is bitwise identical to any other chunking and
-  ``serve_sequential`` is the oracle everywhere).  The ``gather``
-  kernel is the bitwise reference path.
+  serve equal unpreempted sequential serving (f32, q8_0 and the
+  dynamic-bitwidth "dq" pools alike: every chunk writer quantizes each
+  chunk's K/V once up front, so chunked admission is bitwise identical
+  to any other chunking and ``serve_sequential`` is the oracle
+  everywhere).  The ``gather`` kernel is the bitwise reference path;
+  the dq case runs the fused write-then-attend path, which is bitwise
+  chunk-invariant by construction.
 * **Zero leaks + page conservation** — the allocator postconditions
   hold at the end AND at every post-admission snapshot the engine
   records in ``EngineStats.sched_trace``: free + held == usable pages,
@@ -51,9 +53,9 @@ def _random_requests(rng, cfg, n_req, n_classes, max_new_hi):
 
 def _mk_engine(model, params, *, num_pages, scheduler="preempt",
                page_size=4, kv_quant=None, max_len=48,
-               swap_budget_bytes=None):
+               swap_budget_bytes=None, kernel="gather"):
     return Engine(model, params, max_len=max_len, page_size=page_size,
-                  kernel="gather", jit=False, sampler=_GREEDY,
+                  kernel=kernel, jit=False, sampler=_GREEDY,
                   kv_quant=kv_quant, num_pages=num_pages,
                   scheduler=scheduler, swap_budget_bytes=swap_budget_bytes)
 
@@ -209,6 +211,37 @@ def test_fuzz_preempt_bitwise_q8(seed):
     got, stats = _serve(small, reqs, slots=slots)
     assert got == ref, {k: (ref[k], got[k]) for k in ref if got[k] != ref[k]}
     assert stats.pages_leaked == 0
+    _check_conservation(stats)
+    _check_no_inversion(stats, slots=slots)
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fuzz_preempt_bitwise_dq_packed(seed):
+    """Dynamic-bitwidth pools ("dq": q8_0 sensitive layers + nibble-packed
+    q4_0 middle) under preemption, served through the FUSED path: swap
+    moves each layer's pages verbatim at their packed size and the fused
+    write-then-attend prefill is bitwise chunk-invariant, so the
+    oversubscribed preempting serve must still equal ``serve_sequential``
+    bit for bit — across restarts, swaps and re-chunked admission."""
+    cfg, params, model = _setup("qwen2-1.5b")
+    rng = np.random.default_rng(seed)
+    reqs = _random_requests(rng, cfg, int(rng.integers(3, 6)), 2, 8)
+    slots = int(rng.integers(2, 4))
+
+    big = _mk_engine(model, params, num_pages=0, kv_quant="dq",
+                     kernel="fused")
+    seq_done = big.serve_sequential([Request(**d) for d in reqs], seed=0)
+    ref = {r.rid: list(r.out) for r in seq_done}
+    assert big.last_stats.preemptions == 0
+
+    worst_one = paged.pages_for(48, 4)
+    small = _mk_engine(model, params, kv_quant="dq", kernel="fused",
+                       num_pages=paged.RESERVED_PAGES + worst_one + 2)
+    got, stats = _serve(small, reqs, slots=slots)
+    assert got == ref, {k: (ref[k], got[k]) for k in ref if got[k] != ref[k]}
+    assert stats.pages_leaked == 0
+    assert stats.swap_out_bytes == stats.swap_in_bytes
     _check_conservation(stats)
     _check_no_inversion(stats, slots=slots)
 

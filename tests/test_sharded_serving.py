@@ -135,7 +135,9 @@ def test_engine_lays_out_weights_on_its_mesh():
     ("qwen2-1.5b", None),            # full GQA attention, f32 pools
     ("deepseek-v3-671b", None),      # MLA latents + MoE experts
     ("qwen2-1.5b", "q8_0"),          # quantized pools
-], ids=["attn-f32", "mla-f32", "attn-q8"])
+    ("qwen2-1.5b", "q4_0"),          # nibble-packed pools
+    ("deepseek-v3-671b", "dq"),      # per-layer bitwidth, latents q8
+], ids=["attn-f32", "mla-f32", "attn-q8", "attn-q4", "mla-dq"])
 def test_mesh_serve_bitwise_parity(arch, kv_quant, spec):
     cfg, params, model = _setup(arch)
     reqs = _requests(cfg)
